@@ -1,0 +1,31 @@
+//! HBML scenario: sweep cluster frequency × HBM2E DDR rate and print the
+//! Fig. 9 bandwidth/utilization surface, then show the effect of the
+//! paper's burst-alignment choices (ablation: backends per SubGroup and
+//! burst length are fixed by the hybrid map — here we vary the transfer
+//! size to expose startup/drain amortization).
+//!
+//! ```bash
+//! cargo run --release --example hbm_sweep
+//! ```
+
+use terapool::config::DdrRate;
+use terapool::coordinator::{fig9, hbml_sweep_point, Scale};
+
+fn main() {
+    // The Fig. 9 table itself.
+    fig9(Scale::Full).print();
+
+    // Transfer-size amortization: the DMA frontend config cycles and the
+    // channel drain tail only vanish for multi-MiB transfers.
+    println!("\n== Transfer-size amortization @ 900 MHz / 3.6 Gbit/s/pin ==");
+    println!("{:>12}  {:>14}  {:>11}", "KiB moved", "achieved GB/s", "utilization");
+    for words in [16 * 1024u32, 64 * 1024, 256 * 1024, 896 * 1024] {
+        let (gbps, util) = hbml_sweep_point(900.0, DdrRate::G3_6, words);
+        println!(
+            "{:>12}  {:>14.1}  {:>10.1}%",
+            words / 256,
+            gbps,
+            100.0 * util
+        );
+    }
+}

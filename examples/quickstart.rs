@@ -1,0 +1,64 @@
+//! Quickstart: build a TeraPool cluster, run an AXPY across all 1024 PEs,
+//! and check the result against the host reference.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use terapool::cluster::Cluster;
+use terapool::config::ClusterConfig;
+use terapool::isa::Program;
+use terapool::kernels::axpy::{build, reference, AxpyParams};
+
+fn main() {
+    // 1. Pick an operating point: TeraPool-1-3-5-9 runs at 850 MHz, the
+    //    paper's energy-optimal configuration.
+    let cfg = ClusterConfig::terapool(9);
+    println!(
+        "cluster: {} — {} PEs, {} banks, {:.1} MiB L1, {} MHz",
+        cfg.name,
+        cfg.num_pes(),
+        cfg.num_banks(),
+        cfg.l1_bytes() as f64 / (1024.0 * 1024.0),
+        cfg.freq_mhz
+    );
+
+    // 2. Build a kernel: AXPY over 256 Ki elements, local-access layout.
+    let params = AxpyParams { n: 256 * 1024, alpha: 2.0 };
+    let setup = build(&cfg, &params);
+    let want = reference(&params);
+
+    // 3. Stage the data into the simulated L1 and run to completion.
+    let (mut cluster, io) = setup.into_cluster(cfg);
+    let stats = cluster.run(100_000_000);
+
+    // 4. Inspect the result and the performance counters.
+    let got = io.read_output(&cluster);
+    assert_eq!(got, want, "cluster result must match the host reference");
+    println!(
+        "axpy OK: {} elements in {} cycles — IPC/PE {:.2}, {:.1} GFLOP/s, AMAT {:.2} cyc",
+        params.n,
+        stats.cycles,
+        stats.ipc(),
+        stats.gflops(),
+        stats.amat,
+    );
+
+    // 5. Programs are plain instruction traces — write your own:
+    let cfg = ClusterConfig::tiny();
+    let progs: Vec<Program> = (0..cfg.num_pes())
+        .map(|i| {
+            let mut p = Program::new();
+            p.ld_imm(1, i as f32);
+            p.fmac(2, 1, 1); // r2 += i*i
+            p.halt();
+            p
+        })
+        .collect();
+    let mut tiny = Cluster::new(cfg, progs);
+    tiny.run(1000);
+    println!(
+        "custom trace OK: PE 5 computed 5² = {}",
+        tiny.pes[5].reg(2)
+    );
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX entry functions -> artifacts/<name>.hlo.txt.
+
+HLO **text** (not ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs only here, at build time (``make artifacts``); the Rust binary
+is self-contained afterwards.  A manifest with input shapes is emitted next
+to the artifacts so the Rust runtime can allocate matching literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRIES
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn, example_args = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for <name>.hlo.txt artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of entry names to lower")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    names = args.only or list(ENTRIES)
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, example_args = ENTRIES[name]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in example_args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+
+    # Line-oriented twin for the Rust runtime (the offline build has no
+    # JSON parser crate; see rust/src/runtime.rs::parse_manifest).
+    txt_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(txt_path, "w") as f:
+        f.write("# artifact <name> <file> <sha256> / input <name> <dtype> <dims>\n")
+        for name, entry in manifest.items():
+            f.write(f"artifact {name} {entry['file']} {entry['sha256']}\n")
+            for inp in entry["inputs"]:
+                dims = ",".join(str(d) for d in inp["shape"]) or "scalar"
+                f.write(f"input {name} {inp['dtype']} {dims}\n")
+    print(f"wrote {txt_path}")
+
+
+if __name__ == "__main__":
+    main()

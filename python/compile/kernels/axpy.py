@@ -1,0 +1,75 @@
+"""L1 Pallas kernels for the BLAS-1 *local-access* benchmarks of the paper
+(Sec. 7): AXPY and DOTP.
+
+In TeraPool these kernels fetch operands from the local-Tile interleaved
+region (1-cycle access) and are bound by local interconnect bandwidth; on
+TPU the analog is a VPU-elementwise pass over VMEM blocks streamed from
+HBM. The grid dimension plays the role of the per-Tile data partitioning:
+block i of the Pallas grid corresponds to the slice PE-group i owns in the
+word-interleaved L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def axpy(alpha: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, *,
+         block: int = 1024) -> jnp.ndarray:
+    """z = alpha*x + y over 1-D arrays; block must divide len(x)."""
+    (n,) = x.shape
+    assert y.shape == (n,) and n % block == 0
+    alpha = jnp.asarray(alpha, x.dtype).reshape((1,))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # broadcast alpha
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(alpha, x, y)
+
+
+def _dotp_kernel(x_ref, y_ref, acc_ref):
+    """Accumulate partial dot products across the grid; the accumulator
+    block is revisited by every grid step (the reduction tree the paper
+    implements with atomic fetch&add at the join barrier)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(x * y, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dotp(x: jnp.ndarray, y: jnp.ndarray, *, block: int = 1024) -> jnp.ndarray:
+    """Scalar dot product with f32 accumulation; block must divide len(x)."""
+    (n,) = x.shape
+    assert y.shape == (n,) and n % block == 0
+    out = pl.pallas_call(
+        _dotp_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out[0]

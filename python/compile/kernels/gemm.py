@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: tiled GEMM — the TPU re-expression of TeraPool's
+blocked MatMul (Sec. 4.1 / Sec. 7 of the paper).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): TeraPool's Snitch
+cores hold a 4x4 output block in the 32-entry integer register file and
+hide shared-L1 latency behind 8 outstanding loads.  On TPU the analog is a
+VMEM-resident (bm, bn) output tile accumulated across a K-grid:
+
+  * register-file output block  -> VMEM accumulator tile (o_ref)
+  * 8-entry transaction table   -> Pallas's implicit double buffering of
+                                   the (bm, bk) / (bk, bn) input blocks
+                                   between grid steps
+  * word-interleaved shared L1  -> BlockSpec index_map expressing the
+                                   HBM<->VMEM schedule
+  * Snitch FMA / zhinx SIMD     -> MXU jnp.dot (f32 or bf16)
+
+The kernel is always lowered with interpret=True: the CPU PJRT client used
+by the Rust runtime cannot execute Mosaic custom-calls.  Correctness is
+pinned to ref.gemm by python/tests; the block-size/VMEM analysis for a real
+TPU lives in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j].
+
+    The K dimension is the innermost ("arbitrary") grid axis so the output
+    tile stays resident in VMEM across the whole K loop — the Pallas
+    counterpart of keeping the 4x4 block in Snitch's register file for the
+    entire inner loop.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 32, bn: int = 32,
+         bk: int = 32) -> jnp.ndarray:
+    """C = A @ B via a Pallas grid of (M/bm, N/bn, K/bk) tiles.
+
+    Block sizes must divide the problem; python/tests sweeps this with
+    hypothesis. On a real TPU bm=bn=128, bk=256 fills the MXU; defaults here
+    are sized for fast interpret-mode runs.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"block sizes ({bm},{bn},{bk}) must divide problem ({m},{n},{k})")
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (double-buffered inputs + acc).
+
+    Used by DESIGN.md §Perf to check the chosen real-TPU block sizes fit
+    the ~16 MiB/core VMEM budget: 2*(bm*bk + bk*bn) input buffers plus the
+    resident (bm, bn) accumulator.
+    """
+    return dtype_bytes * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU 128x128x128 macro-op occupancy for a tile step.
+
+    A (bm, bk) x (bk, bn) tile issues ceil(bm/128)*ceil(bn/128)*ceil(bk/128)
+    MXU passes; utilization is the useful fraction of those passes. This is
+    the structural estimate recorded in EXPERIMENTS.md §Perf (interpret-mode
+    wallclock is not a TPU proxy).
+    """
+    import math
+
+    passes = (math.ceil(bm / 128) * math.ceil(bn / 128) * math.ceil(bk / 128))
+    useful = (bm * bn * bk) / (128 * 128 * 128)
+    return useful / passes

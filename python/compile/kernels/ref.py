@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each function here is the *specification*: the Pallas kernels in this
+package (gemm.py, axpy.py, dotp.py, fft.py) must match these up to float
+tolerance. pytest + hypothesis sweep shapes/dtypes against these oracles at
+build time; the Rust integration tests additionally compare the cluster
+simulator's memory image against the AOT-compiled versions of the same
+functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B, accumulating in float32 regardless of input dtype."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """z = alpha * x + y (BLAS-1 AXPY)."""
+    return alpha * x + y
+
+
+def dotp(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Scalar dot product, f32 accumulation."""
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def fft(x_re: jnp.ndarray, x_im: jnp.ndarray):
+    """DFT over the last axis; returns (re, im) pair.
+
+    Oracle for the radix-4 Cooley-Tukey implementation: defer to jnp.fft,
+    which is an independent code path from our stage-by-stage kernels.
+    """
+    x = x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(x_re.dtype), jnp.imag(y).astype(x_re.dtype)
+
+
+def spmmadd_dense(a_dense: jnp.ndarray, b_dense: jnp.ndarray) -> jnp.ndarray:
+    """Semantic result of CSR SpMMadd, on densified operands.
+
+    The cluster simulator performs the addition in CSR form (the paper's
+    GraphBLAS workload); the densified sum must equal this elementwise add.
+    """
+    return a_dense + b_dense

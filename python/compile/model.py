@@ -1,0 +1,96 @@
+"""L2: JAX entry functions for every benchmark the Rust coordinator runs.
+
+Each function here composes the L1 Pallas kernels (python/compile/kernels)
+into the exact problem shapes the cluster simulator executes, and is
+AOT-lowered by aot.py to artifacts/<name>.hlo.txt.  The Rust runtime
+(rust/src/runtime) loads these artifacts via PJRT and uses them as *golden
+references*: the simulated 1024-PE cluster's memory image after a kernel
+run must match the artifact's output.
+
+Shapes mirror Sec. 7 of the paper:
+  * gemm    — 256x256x256 f32 tiled MatMul (global-access kernel)
+  * axpy    — 256 Ki-element f32 AXPY (local-access kernel)
+  * dotp    — 256 Ki-element f32 dot product (local-access, join reduction)
+  * fft     — 64 independent 4096-point radix-4 FFTs (non-sequential)
+  * spmmadd — densified oracle for the CSR SpMMadd GraphBLAS kernel
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import axpy as axpy_k
+from .kernels import fft as fft_k
+from .kernels import gemm as gemm_k
+from .kernels import ref
+
+F32 = jnp.float32
+
+
+def gemm_entry(a, b):
+    return (gemm_k.gemm(a, b, bm=32, bn=32, bk=32),)
+
+
+def axpy_entry(alpha, x, y):
+    return (axpy_k.axpy(alpha, x, y, block=1024),)
+
+
+def dotp_entry(x, y):
+    return (axpy_k.dotp(x, y, block=1024),)
+
+
+def fft_entry(x_re, x_im):
+    return fft_k.fft(x_re, x_im)
+
+
+def spmmadd_entry(a_dense, b_dense):
+    return (ref.spmmadd_dense(a_dense, b_dense),)
+
+
+GEMM_N = 256
+AXPY_N = 256 * 1024
+FFT_BATCH, FFT_N = 64, 4096
+SPM_N = 512  # densified SpMMadd matrix edge
+
+# name -> (entry fn, example args); single source of truth for aot.py and
+# python/tests/test_model.py. Every entry returns a tuple (lowered with
+# return_tuple=True; the Rust side unwraps with to_tuple1/to_vec).
+ENTRIES = {
+    "gemm": (
+        gemm_entry,
+        (
+            jax.ShapeDtypeStruct((GEMM_N, GEMM_N), F32),
+            jax.ShapeDtypeStruct((GEMM_N, GEMM_N), F32),
+        ),
+    ),
+    "axpy": (
+        axpy_entry,
+        (
+            jax.ShapeDtypeStruct((), F32),
+            jax.ShapeDtypeStruct((AXPY_N,), F32),
+            jax.ShapeDtypeStruct((AXPY_N,), F32),
+        ),
+    ),
+    "dotp": (
+        dotp_entry,
+        (
+            jax.ShapeDtypeStruct((AXPY_N,), F32),
+            jax.ShapeDtypeStruct((AXPY_N,), F32),
+        ),
+    ),
+    "fft": (
+        fft_entry,
+        (
+            jax.ShapeDtypeStruct((FFT_BATCH, FFT_N), F32),
+            jax.ShapeDtypeStruct((FFT_BATCH, FFT_N), F32),
+        ),
+    ),
+    "spmmadd": (
+        spmmadd_entry,
+        (
+            jax.ShapeDtypeStruct((SPM_N, SPM_N), F32),
+            jax.ShapeDtypeStruct((SPM_N, SPM_N), F32),
+        ),
+    ),
+}

@@ -1,0 +1,150 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+hypothesis sweeps shapes/dtypes/block sizes of every Pallas kernel against
+the pure-jnp oracles in compile.kernels.ref.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import axpy as axpy_k
+from compile.kernels import fft as fft_k
+from compile.kernels import gemm as gemm_k
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- GEMM ---
+
+@settings(max_examples=24, deadline=None)
+@given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_gemm_matches_ref(mi, ni, ki, bm, bn, bk):
+    m, n, k = mi * bm, ni * bn, ki * bk
+    a, b = rand((m, k)), rand((k, n))
+    got = gemm_k.gemm(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    want = ref.gemm(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_bf16():
+    a = rand((64, 64)).astype(jnp.bfloat16)
+    b = rand((64, 64)).astype(jnp.bfloat16)
+    got = gemm_k.gemm(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32, bk=32)
+    want = ref.gemm(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2)
+
+
+def test_gemm_rejects_nondividing_blocks():
+    a, b = jnp.zeros((33, 32)), jnp.zeros((32, 32))
+    with pytest.raises(AssertionError):
+        gemm_k.gemm(a, b, bm=32, bn=32, bk=32)
+
+
+def test_gemm_identity():
+    n = 32
+    a = rand((n, n))
+    eye = np.eye(n, dtype=np.float32)
+    got = gemm_k.gemm(jnp.asarray(a), jnp.asarray(eye), bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(got), a, rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_vmem_model_monotone():
+    assert gemm_k.vmem_bytes(128, 128, 256) > gemm_k.vmem_bytes(64, 64, 128)
+    # Real-TPU default tile fits the 16 MiB VMEM budget.
+    assert gemm_k.vmem_bytes(128, 128, 256) < 16 * 2**20
+    assert 0.0 < gemm_k.mxu_utilization_estimate(128, 128, 256) <= 1.0
+    assert gemm_k.mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+# ------------------------------------------------------------ AXPY/DOTP ---
+
+@settings(max_examples=16, deadline=None)
+@given(blocks=st.integers(1, 8), block=st.sampled_from([64, 256, 1024]),
+       alpha=st.floats(-4, 4, allow_nan=False, width=32))
+def test_axpy_matches_ref(blocks, block, alpha):
+    n = blocks * block
+    x, y = rand(n), rand(n)
+    got = axpy_k.axpy(jnp.float32(alpha), jnp.asarray(x), jnp.asarray(y),
+                      block=block)
+    want = ref.axpy(jnp.float32(alpha), jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=16, deadline=None)
+@given(blocks=st.integers(1, 8), block=st.sampled_from([64, 256, 1024]))
+def test_dotp_matches_ref(blocks, block):
+    n = blocks * block
+    x, y = rand(n), rand(n)
+    got = axpy_k.dotp(jnp.asarray(x), jnp.asarray(y), block=block)
+    want = ref.dotp(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-4)
+
+
+def test_dotp_zero():
+    x = jnp.zeros((1024,), jnp.float32)
+    assert float(axpy_k.dotp(x, x, block=256)) == 0.0
+
+
+# ------------------------------------------------------------------ FFT ---
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 4), m=st.integers(1, 5))
+def test_fft_matches_ref(batch, m):
+    n = 4 ** m
+    xr, xi = rand((batch, n)), rand((batch, n))
+    gr, gi = fft_k.fft(jnp.asarray(xr), jnp.asarray(xi))
+    wr, wi = ref.fft(jnp.asarray(xr), jnp.asarray(xi))
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               rtol=1e-3, atol=1e-3 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi),
+                               rtol=1e-3, atol=1e-3 * np.sqrt(n))
+
+
+def test_fft_paper_shape():
+    """The paper's workload: 4096-point FFTs (shrunk batch for test time)."""
+    xr, xi = rand((2, 4096)), rand((2, 4096))
+    gr, gi = fft_k.fft(jnp.asarray(xr), jnp.asarray(xi))
+    wr, wi = ref.fft(jnp.asarray(xr), jnp.asarray(xi))
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               rtol=1e-3, atol=0.2)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi),
+                               rtol=1e-3, atol=0.2)
+
+
+def test_fft_impulse():
+    """FFT of a unit impulse is all-ones (exact)."""
+    n = 64
+    xr = np.zeros((1, n), np.float32)
+    xr[0, 0] = 1.0
+    xi = np.zeros((1, n), np.float32)
+    gr, gi = fft_k.fft(jnp.asarray(xr), jnp.asarray(xi))
+    np.testing.assert_allclose(np.asarray(gr), np.ones((1, n)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gi), np.zeros((1, n)), atol=1e-5)
+
+
+def test_fft_rejects_non_power_of_4():
+    with pytest.raises(AssertionError):
+        fft_k.digit_reverse_indices(8)
+
+
+def test_digit_reverse_is_involution():
+    for n in (4, 16, 64, 256, 4096):
+        rev = fft_k.digit_reverse_indices(n)
+        assert (rev[rev] == np.arange(n)).all()

@@ -1,0 +1,30 @@
+//! Bench: Table 4 / Fig. 8b regeneration — the closed-form AMAT model
+//! (Eqs. 4-6) and the burst simulation over all 13 hierarchy candidates.
+//!
+//! `cargo bench --bench amat`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::amat::{amat, HierSpec};
+use terapool::coordinator::{fig8, table4, Scale};
+
+fn main() {
+    // The regenerated artifacts themselves:
+    table4(Scale::Fast).print();
+    fig8(Scale::Fast).print();
+
+    // Timing: closed form vs burst simulation.
+    util::bench("table4 closed-form (13 rows)", 10, || {
+        HierSpec::table4_rows()
+            .iter()
+            .map(|s| s.analytic_amat())
+            .sum::<f64>()
+    });
+    util::bench("burst sim terapool (1024 reqs)", 20, || {
+        amat(&HierSpec::terapool(), 1).amat
+    });
+    util::bench("burst sim flat 1024C", 20, || {
+        amat(&HierSpec::new(1024, 1, 1, 1), 1).amat
+    });
+}

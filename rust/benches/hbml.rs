@@ -1,0 +1,34 @@
+//! Bench: Fig. 9 regeneration — HBML bandwidth across frequency × DDR
+//! rate, plus raw HBM2E channel-model throughput.
+//!
+//! `cargo bench --bench hbml`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::config::DdrRate;
+use terapool::coordinator::{fig9, hbml_sweep_point, Scale};
+use terapool::hbm::{Hbm, HbmConfig};
+
+fn main() {
+    fig9(Scale::Fast).print();
+
+    let r = util::bench("fig9 point 900MHz/3.6 (256 KiW in+out)", 5, || {
+        hbml_sweep_point(900.0, DdrRate::G3_6, 256 * 1024)
+    });
+    util::report_rate("simulated transfer", 2.0 * 256.0 * 1024.0 * 4.0 / 1e6, "MB", r.median_ms);
+
+    util::bench("raw hbm model: 16k bursts", 10, || {
+        let mut h = Hbm::new(HbmConfig::new(DdrRate::G3_6, 900.0));
+        for i in 0..16_384u64 {
+            h.submit(i, i * 1024, 1024, i);
+        }
+        let mut done = 0u64;
+        let mut now = 0;
+        while done < 16_384 {
+            h.take_completed(now, |_| done += 1);
+            now += 64;
+        }
+        now
+    });
+}

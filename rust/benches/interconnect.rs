@@ -1,0 +1,57 @@
+//! Bench (ablation): spill-register configurations (1-3-5-7/9/11),
+//! transaction-table depth, and sequential-region sizing — the design
+//! choices DESIGN.md calls out, measured on GEMM/AXPY.
+//!
+//! `cargo bench --bench interconnect`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{run_kernel, Scale};
+use terapool::report::{f1, f2, int, pct, Table};
+
+fn main() {
+    // Ablation 1: spill registers — latency vs frequency (Sec. 6.2).
+    let mut t = Table::new(
+        "Ablation — spill-register configs (GEMM, fast scale)",
+        &["Config", "MHz", "IPC", "Cycles", "Runtime µs", "GFLOP/s"],
+    );
+    for rg in [7u32, 9, 11] {
+        let cfg = ClusterConfig::terapool(rg);
+        let (s, _) = run_kernel(&cfg, "gemm", Scale::Fast);
+        t.row(vec![
+            cfg.name.clone(),
+            f1(cfg.freq_mhz),
+            f2(s.ipc()),
+            int(s.cycles),
+            f1(s.cycles as f64 / cfg.freq_mhz),
+            f1(s.gflops()),
+        ]);
+    }
+    t.print();
+
+    // Ablation 2: transaction-table depth (Sec. 4.1 break-even at 8).
+    let mut t = Table::new(
+        "Ablation — LSU transaction-table depth (GEMM, fast scale)",
+        &["Entries", "IPC", "LSU stall %", "Cycles"],
+    );
+    for entries in [1usize, 2, 4, 8, 16] {
+        let mut cfg = ClusterConfig::terapool(9);
+        cfg.tx_table_entries = entries;
+        let (s, _) = run_kernel(&cfg, "gemm", Scale::Fast);
+        t.row(vec![
+            int(entries as u64),
+            f2(s.ipc()),
+            pct(s.fraction(s.stall_lsu)),
+            int(s.cycles),
+        ]);
+    }
+    t.print();
+
+    // Timing of the arbitration engine itself.
+    let cfg = ClusterConfig::terapool(9);
+    util::bench("gemm fast on terapool-9", 3, || {
+        run_kernel(&cfg, "gemm", Scale::Fast).0.cycles
+    });
+}

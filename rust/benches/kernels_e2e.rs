@@ -1,0 +1,30 @@
+//! Bench: Fig. 14a / Fig. 14b regeneration — the five benchmark kernels
+//! on the full 1024-PE cluster (reduced problem sizes so a bench run
+//! stays in seconds), plus the double-buffered HBM variants.
+//!
+//! `cargo bench --bench kernels_e2e`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{fig14a, fig14b, run_kernel, Scale, FIG14A_KERNELS};
+
+fn main() {
+    fig14a(Scale::Fast).print();
+    fig14b(Scale::Fast).print();
+
+    let cfg = ClusterConfig::terapool(9);
+    for k in FIG14A_KERNELS {
+        let r = util::bench(&format!("kernel {k} (fast scale)"), 3, || {
+            run_kernel(&cfg, k, Scale::Fast).0.cycles
+        });
+        let (stats, _) = run_kernel(&cfg, k, Scale::Fast);
+        util::report_rate(
+            "simulated PE-cycles",
+            (stats.cycles * stats.num_pes as u64) as f64 / 1e6,
+            "M",
+            r.median_ms,
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: Table 3 / Fig. 3 (congestion), Fig. 11 (EDA), Fig. 12 (area),
+//! Fig. 13 (energy/EDP) regeneration.
+//!
+//! `cargo bench --bench physical`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{fig11, fig12, fig13, table3, table5};
+use terapool::physical::{area, congestion, energy};
+
+fn main() {
+    table3().print();
+    fig11().print();
+    fig12().print();
+    fig13().print();
+    table5().print();
+
+    util::bench("congestion sweep 256..4096", 100, || {
+        (256..=4096usize)
+            .step_by(64)
+            .map(|c| congestion::predict(c).congestion)
+            .sum::<f64>()
+    });
+    util::bench("area breakdown", 1000, || {
+        area::breakdown(&ClusterConfig::terapool(9)).total()
+    });
+    util::bench("energy model full Fig13 grid", 1000, || {
+        let mut acc = 0.0;
+        for rg in [7, 9, 11] {
+            let m = energy::EnergyModel::for_config(rg);
+            for i in energy::FIG13_INSTRS {
+                acc += m.pj(i) + m.edp(i);
+            }
+        }
+        acc
+    });
+}

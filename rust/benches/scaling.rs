@@ -1,0 +1,38 @@
+//! Bench: Table 6 regeneration — Byte/FLOP vs IPC across the TeraPool /
+//! MemPool / Occamy cluster scales, plus the Sec. 2 balance analysis.
+//!
+//! `cargo bench --bench scaling`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{scaling_analysis, table6, Scale};
+use terapool::kernels::gemm::{build, GemmParams};
+
+fn main() {
+    table6(Scale::Fast).print();
+    scaling_analysis().print();
+
+    for cfg in [
+        ClusterConfig::terapool(9),
+        ClusterConfig::mempool(),
+        ClusterConfig::occamy(),
+    ] {
+        // Size the problem to the cluster's L1 (Occamy holds 128 KiB).
+        let edge = match cfg.num_pes() {
+            n if n >= 1024 => 128,
+            n if n >= 256 => 96,
+            _ => 32,
+        };
+        let p = GemmParams { m: edge, n: edge, k: edge };
+        util::bench(
+            &format!("gemm {edge}^3 on {} ({} PEs)", cfg.name, cfg.num_pes()),
+            3,
+            || {
+                let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
+                cl.run(2_000_000_000).cycles
+            },
+        );
+    }
+}

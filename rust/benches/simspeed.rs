@@ -1,0 +1,46 @@
+//! Bench (§Perf): raw simulator speed — simulated PE-cycles per host
+//! second on the 1024-PE cluster. The EXPERIMENTS.md §Perf target is
+//! ≥ 20 M PE-cycles/s so Fig. 14a regenerates in seconds.
+//!
+//! `cargo bench --bench simspeed`
+
+#[path = "util.rs"]
+mod util;
+
+use terapool::cluster::Cluster;
+use terapool::config::ClusterConfig;
+use terapool::isa::Program;
+use terapool::kernels::axpy::{build, AxpyParams};
+
+fn main() {
+    // Pure-compute traces: issue-loop ceiling (no memory traffic).
+    let cfg = ClusterConfig::terapool(9);
+    let r = util::bench("1024 PEs × 2k compute instrs", 5, || {
+        let progs: Vec<Program> = (0..cfg.num_pes())
+            .map(|_| {
+                let mut p = Program::new();
+                p.ld_imm(1, 1.0);
+                p.ld_imm(2, 1.5);
+                for _ in 0..2000 {
+                    p.fmac(3, 1, 2);
+                }
+                p.halt();
+                p
+            })
+            .collect();
+        let mut cl = Cluster::new(cfg.clone(), progs);
+        cl.run(1_000_000).cycles
+    });
+    util::report_rate("PE-cycles", 1024.0 * 2002.0 / 1e6, "M", r.median_ms);
+
+    // Local-access memory traffic: AXPY (1 request per ~2 instrs).
+    let r = util::bench("axpy 256Ki on 1024 PEs", 3, || {
+        let p = AxpyParams { n: 256 * 1024, alpha: 2.0 };
+        let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
+        cl.run(100_000_000).cycles
+    });
+    let (mut cl, _) = build(&cfg, &AxpyParams { n: 256 * 1024, alpha: 2.0 })
+        .into_cluster(cfg.clone());
+    let cycles = cl.run(100_000_000).cycles;
+    util::report_rate("PE-cycles", (cycles * 1024) as f64 / 1e6, "M", r.median_ms);
+}

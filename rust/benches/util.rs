@@ -1,0 +1,49 @@
+//! Minimal bench harness (criterion is unavailable in the offline
+//! build): warm-up + timed iterations, median/mean/min reporting.
+//! Included by every bench target via `#[path] mod util;`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:40} {:4} iters  mean {:>10.3} ms  median {:>10.3} ms  min {:>10.3} ms",
+            self.name, self.iters, self.mean_ms, self.median_ms, self.min_ms
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations (after one warm-up) and report.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    std::hint::black_box(f()); // warm-up
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+        median_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+    };
+    r.print();
+    r
+}
+
+/// Report a throughput metric alongside a timed run.
+#[allow(dead_code)]
+pub fn report_rate(what: &str, amount: f64, unit: &str, ms: f64) {
+    println!("  ↳ {what}: {:.2} {unit}/s", amount / (ms / 1e3));
+}

@@ -1,0 +1,145 @@
+//! Tree-like hierarchical AXI4 interconnect model (Sec. 5.1, Fig. 7).
+//!
+//! The HBML's system-level fabric: each Tile shares one 512-bit AXI4
+//! master among its cores; within a SubGroup the 8 Tile masters arbitrate
+//! in a tree to a single 512-bit SubGroup master; the 16 SubGroup masters
+//! reach the DMA backends / L2 / CSRs through address demultiplexers.
+//!
+//! For the HBML experiments the traffic sources are the 16 DMA backends
+//! (one per SubGroup, Sec. 5.4), so the model exposes per-port rate
+//! limiting (one beat per cycle per 512-bit port → 64 B/cycle) plus the
+//! tree traversal latency. Its unit is the *transaction slot*: `try_issue`
+//! answers whether a port can accept another burst this cycle.
+
+/// One 512-bit AXI4 master port with bounded outstanding transactions.
+#[derive(Debug, Clone)]
+pub struct AxiPort {
+    /// Port width in bytes per cycle (512 bit = 64 B).
+    pub bytes_per_cycle: u64,
+    /// Max outstanding bursts (AXI ID space / write-response depth).
+    pub max_outstanding: u32,
+    outstanding: u32,
+    /// Cycle until which the address/data channel is busy issuing the
+    /// current burst's beats.
+    busy_until: u64,
+    /// Stats.
+    pub bursts: u64,
+    pub bytes: u64,
+    pub stall_cycles: u64,
+}
+
+impl AxiPort {
+    pub fn new(bytes_per_cycle: u64, max_outstanding: u32) -> Self {
+        AxiPort {
+            bytes_per_cycle,
+            max_outstanding,
+            outstanding: 0,
+            busy_until: 0,
+            bursts: 0,
+            bytes: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Beats needed to move `bytes` through this port.
+    pub fn beats(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.bytes_per_cycle)
+    }
+
+    /// Can a new burst be issued at `now`?
+    pub fn can_issue(&self, now: u64) -> bool {
+        self.outstanding < self.max_outstanding && now >= self.busy_until
+    }
+
+    /// Issue a burst of `bytes`; returns the cycle its beats finish
+    /// crossing the port (data-channel occupancy).
+    pub fn issue(&mut self, now: u64, bytes: u64) -> u64 {
+        debug_assert!(self.can_issue(now));
+        self.outstanding += 1;
+        self.busy_until = now + self.beats(bytes);
+        self.bursts += 1;
+        self.bytes += bytes;
+        self.busy_until
+    }
+
+    pub fn note_stall(&mut self) {
+        self.stall_cycles += 1;
+    }
+
+    /// A burst's response (B/R channel) returned.
+    pub fn retire(&mut self) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+    }
+
+    pub fn outstanding(&self) -> u32 {
+        self.outstanding
+    }
+}
+
+/// Fixed traversal latencies through the AXI tree (cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct AxiTreeLatency {
+    /// Tile master → SubGroup master (tree arbitration stage).
+    pub tile_to_subgroup: u32,
+    /// SubGroup master → system demux → memory controller.
+    pub subgroup_to_mc: u32,
+}
+
+impl Default for AxiTreeLatency {
+    fn default() -> Self {
+        AxiTreeLatency { tile_to_subgroup: 2, subgroup_to_mc: 4 }
+    }
+}
+
+impl AxiTreeLatency {
+    /// End-to-end request latency from a SubGroup DMA backend to the
+    /// memory controller.
+    pub fn backend_to_mc(&self) -> u32 {
+        self.subgroup_to_mc
+    }
+    /// From a core's Tile port (I$ refills, CSR accesses).
+    pub fn tile_to_mc(&self) -> u32 {
+        self.tile_to_subgroup + self.subgroup_to_mc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_moves_64_bytes_per_cycle() {
+        let mut p = AxiPort::new(64, 8);
+        assert_eq!(p.beats(1024), 16);
+        let done = p.issue(0, 1024);
+        assert_eq!(done, 16);
+        assert!(!p.can_issue(5), "data channel busy");
+        assert!(p.can_issue(16));
+    }
+
+    #[test]
+    fn outstanding_limit_blocks() {
+        let mut p = AxiPort::new(64, 2);
+        let t1 = p.issue(0, 64);
+        let t2 = p.issue(t1, 64);
+        assert!(!p.can_issue(t2), "2 outstanding, limit 2");
+        p.retire();
+        assert!(p.can_issue(t2));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut p = AxiPort::new(64, 8);
+        let t = p.issue(0, 1024);
+        p.issue(t, 1024);
+        assert_eq!(p.bursts, 2);
+        assert_eq!(p.bytes, 2048);
+    }
+
+    #[test]
+    fn tree_latency_compose() {
+        let l = AxiTreeLatency::default();
+        assert!(l.tile_to_mc() > l.backend_to_mc());
+    }
+}

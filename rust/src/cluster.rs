@@ -1,0 +1,505 @@
+//! Cluster composition: PEs + hierarchical interconnect + banked L1 +
+//! fork-join barriers + the HBML DMA subsystem, advanced in lock-step one
+//! cycle at a time (Sec. 4.2, Sec. 7).
+//!
+//! The fork-join SPMD model of the paper: after "boot" every PE runs its
+//! trace concurrently; `Op::Barrier` arrivals are **real atomic
+//! fetch&adds** on a Tile-local counter word (so the 8 PEs of a Tile
+//! serialize at their bank, as in hardware), and the cross-Tile
+//! aggregation + WFI wake-up broadcast is charged as the configurable
+//! `barrier_wakeup` latency.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::dma::DmaSubsystem;
+use crate::interconnect::{Interconnect, NumaClass, ReqKind, Response};
+use crate::isa::Program;
+use crate::memory::L1Memory;
+use crate::pe::{Action, Pe, PeStats};
+
+/// Word offset inside each Tile's sequential region reserved for the
+/// barrier arrival counter (kernel traces must not touch it).
+pub const BARRIER_SLOT: u32 = 0;
+
+#[derive(Debug, Default)]
+struct BarrierSlot {
+    arrived: u32,
+    waiting: Vec<u32>,
+    release_at: Option<u64>,
+}
+
+/// Aggregated run results (feeds Fig. 14a, Table 6, the headline numbers).
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub flops: u64,
+    pub num_pes: usize,
+    pub freq_mhz: f64,
+    pub stall_raw: u64,
+    pub stall_lsu: u64,
+    pub stall_ctrl: u64,
+    pub stall_synch: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub atomics: u64,
+    /// Measured AMAT over all L1 requests (cycles).
+    pub amat: f64,
+    /// Measured AMAT per NUMA class.
+    pub amat_per_class: [f64; 4],
+    pub reqs_per_class: [u64; 4],
+}
+
+impl RunStats {
+    /// Instructions per cycle per PE (Fig. 14a's headline metric).
+    pub fn ipc(&self) -> f64 {
+        self.instructions as f64 / (self.cycles as f64 * self.num_pes as f64)
+    }
+    /// Fraction of PE-cycles in each category; sums to ≤ 1 (the remainder
+    /// is post-halt idle of early-finishing PEs).
+    pub fn fraction(&self, count: u64) -> f64 {
+        count as f64 / (self.cycles as f64 * self.num_pes as f64)
+    }
+    /// Achieved GFLOP/s at the configured frequency.
+    pub fn gflops(&self) -> f64 {
+        self.flops as f64 / self.cycles as f64 * self.freq_mhz / 1000.0
+    }
+}
+
+/// The simulated cluster.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub l1: L1Memory,
+    pub icn: Interconnect,
+    pub pes: Vec<Pe>,
+    pub dma: Option<DmaSubsystem>,
+    barriers: HashMap<u16, BarrierSlot>,
+    dma_waiters: Vec<(u32, u16)>,
+    pub cycle: u64,
+}
+
+impl Cluster {
+    /// Build a cluster with one program per PE (`programs.len()` must be
+    /// `cfg.num_pes()`).
+    pub fn new(cfg: ClusterConfig, programs: Vec<Program>) -> Self {
+        assert_eq!(programs.len(), cfg.num_pes(), "one program per PE");
+        let l1 = L1Memory::new(&cfg);
+        let icn = Interconnect::new(&cfg);
+        let ppt = cfg.hierarchy.pes_per_tile;
+        let pes = programs
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| Pe::new(i as u32, (i / ppt) as u32, cfg.tx_table_entries as u32, p))
+            .collect();
+        Cluster {
+            cfg,
+            l1,
+            icn,
+            pes,
+            dma: None,
+            barriers: HashMap::new(),
+            dma_waiters: Vec::new(),
+            cycle: 0,
+        }
+    }
+
+    /// Attach the HBML (DMA + HBM2E) subsystem.
+    pub fn with_dma(mut self) -> Self {
+        self.dma = Some(DmaSubsystem::new(&self.cfg));
+        self
+    }
+
+    /// Barrier-counter word address for a Tile (sequential region slot 0).
+    fn barrier_addr(&self, tile: u32) -> u32 {
+        self.l1.map.seq_base_of_tile(tile as usize) + BARRIER_SLOT
+    }
+
+    fn apply_response(
+        pes: &mut [Pe],
+        barriers: &mut HashMap<u16, BarrierSlot>,
+        r: Response,
+    ) {
+        let pe = &mut pes[r.core as usize];
+        match r.kind {
+            ReqKind::Read { rd } => pe.complete_load(rd, r.value),
+            ReqKind::Write => pe.complete_ack(),
+            ReqKind::Amo => {
+                pe.complete_ack();
+                if r.tag != 0 {
+                    // Barrier arrival atomic acked → count it.
+                    let slot = barriers.entry((r.tag - 1) as u16).or_default();
+                    slot.arrived += 1;
+                    slot.waiting.push(r.core);
+                }
+            }
+        }
+    }
+
+    /// Advance a single cycle.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+
+        // 1. Deliver L1 responses due this cycle.
+        let pes = &mut self.pes;
+        let barriers = &mut self.barriers;
+        self.icn
+            .drain_responses(now, |r| Self::apply_response(pes, barriers, r));
+
+        // 2. Barrier release: all arrived → broadcast wake after the
+        //    aggregation/WFI latency.
+        let expected = self.pes.len() as u32;
+        for slot in self.barriers.values_mut() {
+            if slot.arrived == expected && slot.release_at.is_none() {
+                slot.release_at = Some(now + self.cfg.barrier_wakeup as u64);
+            }
+            if slot.release_at == Some(now) {
+                for &pe in &slot.waiting {
+                    self.pes[pe as usize].wake();
+                }
+                slot.waiting.clear();
+                slot.arrived = 0;
+                slot.release_at = None;
+            }
+        }
+
+        // 3. DMA / HBM progress; wake DmaWait-parked PEs.
+        if let Some(dma) = &mut self.dma {
+            dma.step(now, &mut self.l1);
+            let pes = &mut self.pes;
+            self.dma_waiters.retain(|&(pe, id)| {
+                if dma.is_done(id) {
+                    pes[pe as usize].wake();
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        // 4. PE issue phase.
+        for i in 0..self.pes.len() {
+            let action = self.pes[i].try_issue();
+            match action {
+                Action::None => {}
+                Action::Load { rd, addr } => {
+                    let bank = self.l1.map.map(addr);
+                    let tile = self.pes[i].tile as usize;
+                    self.icn
+                        .push_request(now, i as u32, tile, ReqKind::Read { rd }, 0.0, bank, 0);
+                }
+                Action::Store { value, addr } => {
+                    let bank = self.l1.map.map(addr);
+                    let tile = self.pes[i].tile as usize;
+                    self.icn
+                        .push_request(now, i as u32, tile, ReqKind::Write, value, bank, 0);
+                }
+                Action::AmoAdd { value, addr } => {
+                    let bank = self.l1.map.map(addr);
+                    let tile = self.pes[i].tile as usize;
+                    self.icn
+                        .push_request(now, i as u32, tile, ReqKind::Amo, value, bank, 0);
+                }
+                Action::BarrierArrive { id } => {
+                    let tile = self.pes[i].tile;
+                    let bank = self.l1.map.map(self.barrier_addr(tile));
+                    self.icn.push_request(
+                        now,
+                        i as u32,
+                        tile as usize,
+                        ReqKind::Amo,
+                        1.0,
+                        bank,
+                        id as u32 + 1,
+                    );
+                }
+                Action::DmaStart { id } => {
+                    let dma = self
+                        .dma
+                        .as_mut()
+                        .expect("trace uses DMA but cluster built without with_dma()");
+                    dma.start(id, now);
+                }
+                Action::DmaWait { id } => {
+                    let done = self.dma.as_ref().map(|d| d.is_done(id)).unwrap_or(true);
+                    if done {
+                        self.pes[i].wake();
+                    } else {
+                        self.dma_waiters.push((i as u32, id));
+                    }
+                }
+            }
+        }
+
+        // 5. Interconnect arbitration + bank accesses.
+        self.icn.step(now, &mut self.l1);
+
+        self.cycle += 1;
+    }
+
+    /// All PEs halted, no requests in flight, DMA drained.
+    pub fn done(&self) -> bool {
+        self.pes.iter().all(|p| p.done())
+            && self.icn.inflight() == 0
+            && self.dma.as_ref().map(|d| d.idle()).unwrap_or(true)
+    }
+
+    /// Run to completion (or `max_cycles`); returns aggregated stats.
+    pub fn run(&mut self, max_cycles: u64) -> RunStats {
+        while !self.done() && self.cycle < max_cycles {
+            self.step();
+        }
+        assert!(
+            self.done(),
+            "cluster did not finish within {max_cycles} cycles (possible deadlock)"
+        );
+        self.stats()
+    }
+
+    /// Aggregate statistics at the current cycle.
+    pub fn stats(&self) -> RunStats {
+        let mut agg = PeStats::default();
+        for pe in &self.pes {
+            let s = &pe.stats;
+            agg.issued += s.issued;
+            agg.flops += s.flops;
+            agg.loads += s.loads;
+            agg.stores += s.stores;
+            agg.atomics += s.atomics;
+            agg.stall_raw += s.stall_raw;
+            agg.stall_lsu += s.stall_lsu;
+            agg.stall_ctrl += s.stall_ctrl;
+            agg.stall_synch += s.stall_synch;
+        }
+        let ic = &self.icn.stats;
+        RunStats {
+            cycles: self.cycle,
+            instructions: agg.issued,
+            flops: agg.flops,
+            num_pes: self.pes.len(),
+            freq_mhz: self.cfg.freq_mhz,
+            stall_raw: agg.stall_raw,
+            stall_lsu: agg.stall_lsu,
+            stall_ctrl: agg.stall_ctrl,
+            stall_synch: agg.stall_synch,
+            loads: agg.loads,
+            stores: agg.stores,
+            atomics: agg.atomics,
+            amat: ic.amat(),
+            amat_per_class: [
+                ic.per_class[0].amat(),
+                ic.per_class[1].amat(),
+                ic.per_class[2].amat(),
+                ic.per_class[3].amat(),
+            ],
+            reqs_per_class: [
+                ic.per_class[0].count,
+                ic.per_class[1].count,
+                ic.per_class[2].count,
+                ic.per_class[3].count,
+            ],
+        }
+    }
+
+    /// Convenience: the NUMA class histogram as fractions.
+    pub fn class_mix(&self) -> [f64; 4] {
+        let total: u64 = self.icn.stats.per_class.iter().map(|c| c.count).sum();
+        let mut out = [0.0; 4];
+        if total > 0 {
+            for (i, c) in self.icn.stats.per_class.iter().enumerate() {
+                out[i] = c.count as f64 / total as f64;
+            }
+        }
+        let _ = NumaClass::Local;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Op, Program};
+
+    fn programs_for(cfg: &ClusterConfig, f: impl Fn(usize) -> Program) -> Vec<Program> {
+        (0..cfg.num_pes()).map(f).collect()
+    }
+
+    #[test]
+    fn every_pe_executes_and_halts() {
+        let cfg = ClusterConfig::tiny();
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            p.ld_imm(1, i as f32);
+            p.ld_imm(2, 2.0);
+            p.mul(3, 1, 2);
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(1000);
+        assert_eq!(stats.instructions, 32 * 3);
+        for (i, pe) in cl.pes.iter().enumerate() {
+            assert_eq!(pe.reg(3), i as f32 * 2.0);
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrip_through_l1() {
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let out = base + 256; // separate output region (no write race)
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            p.ld_imm(1, 100.0 + i as f32);
+            p.st(1, base + i as u32);
+            p.barrier(0);
+            // read the neighbour's word (wraps) and store to the output
+            let n = base + ((i as u32 + 1) % 32);
+            p.ld(2, n);
+            p.st(2, out + i as u32);
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        cl.run(10_000);
+        for i in 0..32u32 {
+            let got = cl.l1.read(out + i);
+            assert_eq!(got, 100.0 + ((i + 1) % 32) as f32, "word {i}");
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_pes() {
+        let cfg = ClusterConfig::tiny();
+        // PE 0 does a long prologue; all others wait at the barrier. After
+        // the barrier each PE loads the word PE 0 wrote.
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let flag = base + 500;
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            if i == 0 {
+                for _ in 0..200 {
+                    p.alu();
+                }
+                p.ld_imm(1, 7.5);
+                p.st(1, flag);
+            }
+            p.barrier(0);
+            p.ld(2, flag);
+            p.add(3, 2, 2);
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(100_000);
+        for pe in &cl.pes {
+            assert_eq!(pe.reg(3), 15.0);
+        }
+        // The 31 early arrivals piled up synch stalls.
+        assert!(stats.stall_synch > 31 * 150, "synch={}", stats.stall_synch);
+    }
+
+    #[test]
+    fn ipc_near_one_for_pure_compute() {
+        let cfg = ClusterConfig::tiny();
+        let progs = programs_for(&cfg, |_| {
+            let mut p = Program::new();
+            p.ld_imm(1, 1.0);
+            p.ld_imm(2, 1.5);
+            for _ in 0..500 {
+                p.fmac(3, 1, 2);
+            }
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(10_000);
+        assert!(stats.ipc() > 0.95, "ipc={}", stats.ipc());
+        assert_eq!(stats.flops, 32 * 500 * 2);
+    }
+
+    #[test]
+    fn local_loads_hit_single_cycle_amat() {
+        let cfg = ClusterConfig::tiny();
+        let l1 = L1Memory::new(&cfg);
+        // Each PE streams loads from its own 4 banks (chunk-of-4
+        // interleaved assignment → all local).
+        let base = l1.map.interleaved_base();
+        let bf = cfg.banking_factor as u32;
+        let nb = cfg.num_banks() as u32;
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            for k in 0..64u32 {
+                let word = base + (k * nb) + bf * i as u32 + (k % bf);
+                p.ld(1 + (k % 8) as u8, word);
+            }
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(100_000);
+        assert_eq!(stats.reqs_per_class[0], 32 * 64, "all local");
+        assert!(stats.amat_per_class[0] < 1.5, "amat={}", stats.amat_per_class[0]);
+    }
+
+    #[test]
+    fn remote_group_loads_have_higher_amat() {
+        let cfg = ClusterConfig::tiny();
+        let nb = cfg.num_banks() as u32;
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        // All PEs of group 0 read words living in group 1's banks.
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            if i < 16 {
+                for k in 0..32u32 {
+                    // bank in the second half (group 1), unique per PE
+                    let bank = 64 + (i as u32 * 2 + k) % 64;
+                    let word = base + bank + (k / 8) * nb;
+                    p.ld(1 + (k % 8) as u8, word);
+                }
+            }
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(100_000);
+        assert!(stats.reqs_per_class[3] > 0);
+        assert!(
+            stats.amat_per_class[3] >= 9.0,
+            "remote amat {} < zero-load",
+            stats.amat_per_class[3]
+        );
+    }
+
+    #[test]
+    fn dma_start_wait_roundtrip_from_trace() {
+        use crate::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
+        hbm_image_clear();
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            if i == 0 {
+                p.push(Op::DmaStart { id: 0 });
+            }
+            p.push(Op::DmaWait { id: 0 });
+            // After the DMA, each PE loads one transferred word.
+            p.ld(1, base + i as u32);
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs).with_dma();
+        let data: Vec<f32> = (0..256).map(|i| i as f32 + 0.25).collect();
+        hbm_image_stage(0, &data);
+        cl.dma.as_mut().unwrap().register(DmaDescriptor {
+            l1_word: base,
+            mem_byte: 0,
+            words: 256,
+            to_l1: true,
+        });
+        cl.run(100_000);
+        for (i, pe) in cl.pes.iter().enumerate() {
+            assert_eq!(pe.reg(1), i as f32 + 0.25);
+        }
+    }
+}

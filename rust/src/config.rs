@@ -1,0 +1,358 @@
+//! Cluster configuration: the αC-βT-γSG-δG hierarchy of the paper
+//! (Sec. 3.2, Table 4), NUMA latency profiles (Sec. 4.2), the hybrid L1
+//! memory map (Sec. 5.4) and operating points (Sec. 6.2).
+//!
+//! All experiment presets live here: the three TeraPool operating points
+//! (`terapool_7/9/11`), the Table-6 baselines (`mempool`, `occamy`) and
+//! every Table-4 hierarchy candidate.
+
+/// Hierarchy shape αC-βT-γSG-δG: `pes_per_tile` cores per Tile, grouped
+/// into SubGroups, Groups, and the full cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hierarchy {
+    /// α — PEs per Tile.
+    pub pes_per_tile: usize,
+    /// β — Tiles per SubGroup.
+    pub tiles_per_subgroup: usize,
+    /// γ — SubGroups per Group (1 collapses the SubGroup level).
+    pub subgroups_per_group: usize,
+    /// δ — Groups per cluster (1 collapses the Group level).
+    pub groups: usize,
+}
+
+impl Hierarchy {
+    pub const fn num_pes(&self) -> usize {
+        self.pes_per_tile * self.tiles_per_subgroup * self.subgroups_per_group * self.groups
+    }
+    pub const fn num_tiles(&self) -> usize {
+        self.tiles_per_subgroup * self.subgroups_per_group * self.groups
+    }
+    pub const fn num_subgroups(&self) -> usize {
+        self.subgroups_per_group * self.groups
+    }
+    pub const fn tiles_per_group(&self) -> usize {
+        self.tiles_per_subgroup * self.subgroups_per_group
+    }
+}
+
+/// Round-trip zero-load L1 access latency (cycles) per NUMA distance, as
+/// seen by a load: issue cycle → data-ready cycle (Fig. 8b).
+///
+/// TeraPool ships three hardware-parameterizable remote-Group latencies
+/// (7/9/11 cycles) trading frequency for latency (Sec. 6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyCfg {
+    /// Same-Tile access (fully combinational local crossbar).
+    pub local: u32,
+    /// Different Tile, same SubGroup.
+    pub subgroup: u32,
+    /// Different SubGroup, same Group.
+    pub group: u32,
+    /// Remote Group (7, 9 or 11 in TeraPool).
+    pub remote_group: u32,
+}
+
+/// Main-memory DDR rate of the HBM2E parts (Sec. 5.3): Micron
+/// MT54A16G808A00AC-36 supports 2.8 / 3.2 / 3.6 Gbit/s/pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DdrRate {
+    G2_8,
+    G3_2,
+    G3_6,
+}
+
+impl DdrRate {
+    /// Gbit/s/pin.
+    pub fn gbps(&self) -> f64 {
+        match self {
+            DdrRate::G2_8 => 2.8,
+            DdrRate::G3_2 => 3.2,
+            DdrRate::G3_6 => 3.6,
+        }
+    }
+    /// Peak bandwidth of the 16-channel (2-stack × 8) HBM2E subsystem in
+    /// GB/s: 16 channels × 128 pins × rate / 8.
+    pub fn peak_gbps_total(&self) -> f64 {
+        16.0 * 128.0 * self.gbps() / 8.0
+    }
+}
+
+/// Full cluster configuration. `Default` is TeraPool(1-3-5-9) @ 850 MHz —
+/// the paper's energy-optimal operating point (Sec. 6.3).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub hierarchy: Hierarchy,
+    pub latency: LatencyCfg,
+    /// Banking factor: L1 banks per PE (4 in TeraPool → 4096 banks).
+    pub banking_factor: usize,
+    /// Words (32-bit) per SPM bank (256 → 1 KiB banks, 4 MiB total).
+    pub words_per_bank: usize,
+    /// Words of the per-Tile *sequential region* (Sec. 5.4; 512 KiB
+    /// cluster-wide by default → 1024 words/Tile in TeraPool).
+    pub seq_words_per_tile: usize,
+    /// LSU transaction-table entries (8 in TeraPool, Sec. 4.1).
+    pub tx_table_entries: usize,
+    /// Operating frequency (MHz), typical corner TT/0.80 V/25 °C.
+    pub freq_mhz: f64,
+    /// HBM2E DDR rate for the HBML experiments.
+    pub ddr: DdrRate,
+    /// Barrier wake-up broadcast latency (cycles) after the last arrival —
+    /// models the WFI wake propagation through the hierarchy.
+    pub barrier_wakeup: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self::terapool(9)
+    }
+}
+
+impl ClusterConfig {
+    /// TeraPool 8C-8T-4SG-4G with the given remote-Group round-trip
+    /// latency (7, 9 or 11) and the matching implementation frequency
+    /// (730 / 850 / 910 MHz, Sec. 6.2).
+    pub fn terapool(remote_group_latency: u32) -> Self {
+        let freq = match remote_group_latency {
+            7 => 730.0,
+            9 => 850.0,
+            11 => 910.0,
+            l => panic!("TeraPool ships 7/9/11-cycle remote-Group configs, got {l}"),
+        };
+        ClusterConfig {
+            name: format!("terapool-1-3-5-{remote_group_latency}"),
+            hierarchy: Hierarchy {
+                pes_per_tile: 8,
+                tiles_per_subgroup: 8,
+                subgroups_per_group: 4,
+                groups: 4,
+            },
+            latency: LatencyCfg {
+                local: 1,
+                subgroup: 3,
+                group: 5,
+                remote_group: remote_group_latency,
+            },
+            banking_factor: 4,
+            words_per_bank: 256,
+            seq_words_per_tile: 1024,
+            tx_table_entries: 8,
+            freq_mhz: freq,
+            ddr: DdrRate::G3_6,
+            barrier_wakeup: 10,
+        }
+    }
+
+    /// MemPool baseline (Table 6): 256 cores, 4C tiles, 16 tiles/group,
+    /// 4 groups, 1 MiB L1, latencies 1-3-5. The SubGroup level collapses.
+    pub fn mempool() -> Self {
+        ClusterConfig {
+            name: "mempool".into(),
+            hierarchy: Hierarchy {
+                pes_per_tile: 4,
+                tiles_per_subgroup: 16,
+                subgroups_per_group: 1,
+                groups: 4,
+            },
+            latency: LatencyCfg {
+                local: 1,
+                subgroup: 3, // same-group in MemPool terms
+                group: 3,    // unused (γ=1)
+                remote_group: 5,
+            },
+            banking_factor: 4,
+            words_per_bank: 256,
+            seq_words_per_tile: 1024,
+            tx_table_entries: 8,
+            freq_mhz: 500.0,
+            ddr: DdrRate::G3_6,
+            barrier_wakeup: 8,
+        }
+    }
+
+    /// Occamy-style single compute cluster (Table 6): 8 PEs sharing
+    /// 128 KiB through a 1-cycle crossbar.
+    pub fn occamy() -> Self {
+        ClusterConfig {
+            name: "occamy".into(),
+            hierarchy: Hierarchy {
+                pes_per_tile: 8,
+                tiles_per_subgroup: 1,
+                subgroups_per_group: 1,
+                groups: 1,
+            },
+            latency: LatencyCfg {
+                local: 1,
+                subgroup: 1,
+                group: 1,
+                remote_group: 1,
+            },
+            banking_factor: 4,
+            words_per_bank: 1024, // 32 banks × 4 KiB = 128 KiB
+            seq_words_per_tile: 1024,
+            tx_table_entries: 8,
+            freq_mhz: 1000.0,
+            ddr: DdrRate::G3_6,
+            barrier_wakeup: 4,
+        }
+    }
+
+    /// A scaled-down TeraPool for fast unit tests: 4C-2T-2SG-2G = 32 PEs,
+    /// 128 banks, same latency profile as the full machine.
+    pub fn tiny() -> Self {
+        ClusterConfig {
+            name: "tiny-4c-2t-2sg-2g".into(),
+            hierarchy: Hierarchy {
+                pes_per_tile: 4,
+                tiles_per_subgroup: 2,
+                subgroups_per_group: 2,
+                groups: 2,
+            },
+            latency: LatencyCfg {
+                local: 1,
+                subgroup: 3,
+                group: 5,
+                remote_group: 9,
+            },
+            banking_factor: 4,
+            words_per_bank: 256,
+            seq_words_per_tile: 64,
+            tx_table_entries: 8,
+            freq_mhz: 850.0,
+            ddr: DdrRate::G3_6,
+            barrier_wakeup: 10,
+        }
+    }
+
+    // ------------------------------------------------------ derived ----
+
+    pub fn num_pes(&self) -> usize {
+        self.hierarchy.num_pes()
+    }
+    pub fn num_tiles(&self) -> usize {
+        self.hierarchy.num_tiles()
+    }
+    pub fn num_banks(&self) -> usize {
+        self.num_pes() * self.banking_factor
+    }
+    pub fn banks_per_tile(&self) -> usize {
+        self.hierarchy.pes_per_tile * self.banking_factor
+    }
+    pub fn banks_per_subgroup(&self) -> usize {
+        self.banks_per_tile() * self.hierarchy.tiles_per_subgroup
+    }
+    /// Total L1 words (32-bit).
+    pub fn l1_words(&self) -> usize {
+        self.num_banks() * self.words_per_bank
+    }
+    pub fn l1_bytes(&self) -> usize {
+        self.l1_words() * 4
+    }
+    /// Words of the sequential region across all Tiles.
+    pub fn seq_words_total(&self) -> usize {
+        self.seq_words_per_tile * self.num_tiles()
+    }
+    /// Rows per bank reserved for the sequential region.
+    pub fn seq_rows_per_bank(&self) -> usize {
+        self.seq_words_per_tile.div_ceil(self.banks_per_tile())
+    }
+    /// Peak FP32 performance (GFLOP/s): 1 FMA = 2 FLOP per PE per cycle.
+    pub fn peak_gflops_f32(&self) -> f64 {
+        self.num_pes() as f64 * 2.0 * self.freq_mhz / 1000.0
+    }
+    /// Peak FP16 (zhinx SIMD ×2) performance (GFLOP/s).
+    pub fn peak_gflops_f16(&self) -> f64 {
+        2.0 * self.peak_gflops_f32()
+    }
+
+    /// Zero-load round-trip latency for a (source tile, dest tile) pair.
+    pub fn numa_latency(&self, src_tile: usize, dst_tile: usize) -> u32 {
+        let h = &self.hierarchy;
+        let tpg = h.tiles_per_group();
+        let (sg_g, dg_g) = (src_tile / tpg, dst_tile / tpg);
+        if sg_g != dg_g {
+            return self.latency.remote_group;
+        }
+        let (s_sg, d_sg) = (
+            (src_tile % tpg) / h.tiles_per_subgroup,
+            (dst_tile % tpg) / h.tiles_per_subgroup,
+        );
+        if s_sg != d_sg {
+            self.latency.group
+        } else if src_tile != dst_tile {
+            self.latency.subgroup
+        } else {
+            self.latency.local
+        }
+    }
+
+    /// Tile index of a PE.
+    pub fn tile_of_pe(&self, pe: usize) -> usize {
+        pe / self.hierarchy.pes_per_tile
+    }
+    /// Tile index of a bank.
+    pub fn tile_of_bank(&self, bank: usize) -> usize {
+        bank / self.banks_per_tile()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terapool_shape_matches_paper() {
+        let c = ClusterConfig::terapool(9);
+        assert_eq!(c.num_pes(), 1024);
+        assert_eq!(c.num_tiles(), 128);
+        assert_eq!(c.num_banks(), 4096);
+        assert_eq!(c.l1_bytes(), 4 * 1024 * 1024); // 4 MiB
+        assert_eq!(c.freq_mhz, 850.0);
+    }
+
+    #[test]
+    fn terapool_operating_points() {
+        assert_eq!(ClusterConfig::terapool(7).freq_mhz, 730.0);
+        assert_eq!(ClusterConfig::terapool(11).freq_mhz, 910.0);
+        // Peak at 910 MHz: 1024 PEs × 2 FLOP = 1.86 SP-TFLOP/s (paper: 1.89
+        // counting the redundant-precision paths; FP16 doubles it).
+        let c = ClusterConfig::terapool(11);
+        assert!((c.peak_gflops_f32() - 1863.68).abs() < 1.0);
+        assert!((c.peak_gflops_f16() - 2.0 * 1863.68).abs() < 2.0);
+    }
+
+    #[test]
+    fn mempool_occamy_shapes() {
+        assert_eq!(ClusterConfig::mempool().num_pes(), 256);
+        assert_eq!(ClusterConfig::mempool().l1_bytes(), 1024 * 1024);
+        assert_eq!(ClusterConfig::occamy().num_pes(), 8);
+        assert_eq!(ClusterConfig::occamy().l1_bytes(), 128 * 1024);
+    }
+
+    #[test]
+    fn numa_latency_classes() {
+        let c = ClusterConfig::terapool(9);
+        assert_eq!(c.numa_latency(0, 0), 1); // same tile
+        assert_eq!(c.numa_latency(0, 1), 3); // same subgroup
+        assert_eq!(c.numa_latency(0, 8), 5); // same group, other SG
+        assert_eq!(c.numa_latency(0, 32), 9); // remote group
+        assert_eq!(c.numa_latency(33, 32), 3); // same subgroup in group 1
+        assert_eq!(c.numa_latency(33, 33), 1);
+        assert_eq!(c.numa_latency(127, 0), 9);
+    }
+
+    #[test]
+    fn hbm_peak_rates() {
+        assert!((DdrRate::G2_8.peak_gbps_total() - 716.8).abs() < 0.1);
+        assert!((DdrRate::G3_2.peak_gbps_total() - 819.2).abs() < 0.1);
+        assert!((DdrRate::G3_6.peak_gbps_total() - 921.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn tiny_is_consistent() {
+        let c = ClusterConfig::tiny();
+        assert_eq!(c.num_pes(), 32);
+        assert_eq!(c.num_banks(), 128);
+        assert!(c.seq_words_total() < c.l1_words());
+    }
+}

@@ -1,0 +1,531 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md's
+//! experiment index).
+
+use crate::amat::{self, HierSpec};
+use crate::cluster::RunStats;
+use crate::config::{ClusterConfig, DdrRate};
+use crate::dma::{hbm_image_clear, DmaDescriptor, DmaSubsystem};
+use crate::kernels::{self, double_buffer};
+use crate::memory::L1Memory;
+use crate::physical::{area, congestion, eda, energy, scaling, soa};
+use crate::report::{f1, f2, f3, int, pct, Table};
+
+use super::Scale;
+
+// ------------------------------------------------------------------
+// Table 3 / Fig. 3 — routing quality vs crossbar complexity
+// ------------------------------------------------------------------
+
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table 3 — Routing quality of logarithmic-staged crossbars (GF12, 13M)",
+        &["Complexity", "H%", "V%", "Overall%", "Area kGE", "CritPath ns", "Routable"],
+    );
+    for c in [256, 512, 1024, 1280, 1536, 2048, 3072, 4096] {
+        let q = congestion::predict(c);
+        t.row(vec![
+            int(c as u64),
+            f2(q.congestion_h),
+            f2(q.congestion_v),
+            f2(q.congestion),
+            f1(q.area_kge),
+            f2(q.critical_path_ns),
+            if congestion::is_routable(c) { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Table 4 — hierarchical interconnect design analysis
+// ------------------------------------------------------------------
+
+pub fn table4(scale: Scale) -> Table {
+    let seeds = scale.pick(8, 2);
+    let mut t = Table::new(
+        "Table 4 — Hierarchical interconnect analysis (1024 PEs, 4096 banks)",
+        &[
+            "Hierarchy", "ZeroLd", "AMAT", "AMAT(sim)", "Thrpt", "TotalCplx",
+            "CritCplx", "CombDelay", "Routable",
+        ],
+    );
+    for spec in HierSpec::table4_rows() {
+        let zl = spec.zero_load_latency();
+        let a = spec.analytic_amat(); // closed-form Eqs. (4)-(6)
+        let sim = amat::amat(&spec, seeds).amat; // event-level cross-check
+        t.row(vec![
+            spec.name(),
+            f3(zl),
+            f3(a),
+            f3(sim),
+            f3(spec.analytic_throughput()),
+            int(spec.total_complexity() as u64),
+            int(spec.critical_complexity() as u64),
+            f1(spec.critical_comb_delay()),
+            if congestion::is_routable(spec.critical_complexity()) { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 8b — access latency per hierarchy level
+// ------------------------------------------------------------------
+
+pub fn fig8(scale: Scale) -> Table {
+    let seeds = scale.pick(8, 2);
+    let spec = HierSpec::terapool();
+    let r = amat::amat(&spec, seeds);
+    let mut t = Table::new(
+        "Fig. 8b — TeraPool L1 access latency by hierarchy level (1-3-5-7)",
+        &["Level", "Zero-load (cyc)", "Random-traffic avg (cyc)"],
+    );
+    for (i, name) in ["local Tile", "SubGroup", "Group", "remote Group"].iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            int(spec.level_latency(i) as u64),
+            f2(r.amat_per_level[i]),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 9 — HBML bandwidth vs cluster frequency × DDR rate
+// ------------------------------------------------------------------
+
+/// Transfer the full interleaved L1 in and out through the HBML; report
+/// achieved GB/s and utilization.
+pub fn hbml_sweep_point(freq_mhz: f64, ddr: DdrRate, words: u32) -> (f64, f64) {
+    hbm_image_clear();
+    let mut cfg = ClusterConfig::terapool(9);
+    cfg.freq_mhz = freq_mhz;
+    cfg.ddr = ddr;
+    let mut l1 = L1Memory::new(&cfg);
+    let mut dma = DmaSubsystem::new(&cfg);
+    let base = l1.map.interleaved_base();
+    let inbound = dma.register(DmaDescriptor { l1_word: base, mem_byte: 0, words, to_l1: true });
+    let outbound = dma.register(DmaDescriptor {
+        l1_word: base,
+        mem_byte: words as u64 * 4,
+        words,
+        to_l1: false,
+    });
+    dma.start(inbound, 0);
+    let mut now = 0u64;
+    while !dma.is_done(inbound) {
+        dma.step(now, &mut l1);
+        now += 1;
+        assert!(now < 100_000_000, "HBML inbound runaway");
+    }
+    dma.start(outbound, now);
+    while !dma.is_done(outbound) {
+        dma.step(now, &mut l1);
+        now += 1;
+        assert!(now < 100_000_000, "HBML outbound runaway");
+    }
+    let gbps = dma.hbm.achieved_gbps(now);
+    (gbps, gbps / ddr.peak_gbps_total())
+}
+
+pub fn fig9(scale: Scale) -> Table {
+    // Full 3.5 MiB interleaved region in+out (paper: 4 MiB L1).
+    let words = scale.pick(896 * 1024, 64 * 1024) as u32;
+    let mut t = Table::new(
+        "Fig. 9 — HBML transfer bandwidth (L1 read+write via 16×HBM2E)",
+        &["Cluster MHz", "DDR Gbit/s/pin", "Peak GB/s", "Achieved GB/s", "Utilization"],
+    );
+    for freq in [500.0, 700.0, 800.0, 900.0] {
+        for ddr in [DdrRate::G2_8, DdrRate::G3_2, DdrRate::G3_6] {
+            let (gbps, util) = hbml_sweep_point(freq, ddr, words);
+            t.row(vec![
+                f1(freq),
+                f1(ddr.gbps()),
+                f1(ddr.peak_gbps_total()),
+                f1(gbps),
+                pct(util),
+            ]);
+        }
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 11 — EDA implementation-time breakdown
+// ------------------------------------------------------------------
+
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Fig. 11 — Relative EDA implementation time for a TeraPool Group",
+        &["Config", "Synth", "Place", "CTS", "Route", "TimingOpt", "Total", "Timing %"],
+    );
+    for cfg in eda::FIG11_CONFIGS {
+        let b = eda::breakdown(cfg);
+        t.row(vec![
+            cfg.name(),
+            f2(b.synthesis),
+            f2(b.placement),
+            f2(b.cts),
+            f2(b.routing),
+            f2(b.timing_opt),
+            f2(b.total()),
+            pct(b.timing_fraction()),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 12 — area breakdown
+// ------------------------------------------------------------------
+
+pub fn fig12() -> Table {
+    let b = area::breakdown(&ClusterConfig::terapool(9));
+    let total = b.total();
+    let mut t = Table::new(
+        "Fig. 12 — TeraPool hierarchical area breakdown",
+        &["Component", "MGE", "% of cluster"],
+    );
+    let row = |t: &mut Table, name: &str, ge: f64| {
+        t.row(vec![name.into(), f2(ge / 1e6), pct(ge / total)]);
+    };
+    row(&mut t, "SPM banks", b.spm);
+    row(&mut t, "Snitch cores", b.cores);
+    row(&mut t, "IPUs (Xpulpimg)", b.ipus);
+    row(&mut t, "FP subsystems", b.fpss);
+    row(&mut t, "DIVSQRT units", b.divsqrt);
+    row(&mut t, "Instruction caches", b.icache);
+    row(&mut t, "Hierarchical interconnect", b.interconnect);
+    row(&mut t, "HBML (AXI + iDMA)", b.hbml);
+    row(&mut t, "TOTAL", total);
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 13 — instruction energy breakdown + EDP
+// ------------------------------------------------------------------
+
+pub fn fig13() -> Table {
+    let mut t = Table::new(
+        "Fig. 13 — Instruction energy (pJ/instr/core) and EDP (pJ·ns)",
+        &[
+            "Instruction", "7cyc/730MHz pJ", "9cyc/850MHz pJ", "11cyc/910MHz pJ",
+            "EDP@730", "EDP@850", "EDP@910", "EDP optimum",
+        ],
+    );
+    let models = [
+        energy::EnergyModel::for_config(7),
+        energy::EnergyModel::for_config(9),
+        energy::EnergyModel::for_config(11),
+    ];
+    for i in energy::FIG13_INSTRS {
+        let pj: Vec<f64> = models.iter().map(|m| m.pj(i)).collect();
+        let edp: Vec<f64> = models.iter().map(|m| m.edp(i)).collect();
+        let best = (0..3).min_by(|&a, &b| edp[a].total_cmp(&edp[b])).unwrap();
+        t.row(vec![
+            i.name().into(),
+            f2(pj[0]),
+            f2(pj[1]),
+            f2(pj[2]),
+            f2(edp[0]),
+            f2(edp[1]),
+            f2(edp[2]),
+            ["730 MHz", "850 MHz", "910 MHz"][best].into(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 14a — kernel IPC and stall fractions
+// ------------------------------------------------------------------
+
+/// Run one kernel on the given cluster config; returns (stats, name).
+pub fn run_kernel(cfg: &ClusterConfig, which: &str, scale: Scale) -> (RunStats, String) {
+    let setup = match which {
+        "axpy" => kernels::axpy::build(
+            cfg,
+            &kernels::axpy::AxpyParams {
+                n: scale.pick(256 * 1024, cfg.num_banks() * 16),
+                alpha: 2.0,
+            },
+        ),
+        "dotp" => kernels::dotp::build(
+            cfg,
+            &kernels::dotp::DotpParams { n: scale.pick(256 * 1024, cfg.num_banks() * 16) },
+        ),
+        // Fast-scale problems stay big enough to keep all 1024 PEs busy
+        // (≥1 GEMM block / FFT butterfly group / CSR row per PE).
+        "gemm" => kernels::gemm::build(
+            cfg,
+            &kernels::gemm::GemmParams {
+                m: scale.pick(256, 128),
+                n: scale.pick(256, 128),
+                k: scale.pick(256, 128),
+            },
+        ),
+        "fft" => kernels::fft::build(
+            cfg,
+            &kernels::fft::FftParams {
+                batch: scale.pick(64, 16),
+                n: scale.pick(4096, 1024),
+            },
+        ),
+        "spmmadd" => kernels::spmmadd::build(
+            cfg,
+            &kernels::spmmadd::SpmmaddParams {
+                rows: scale.pick(4096, 2048),
+                cols: scale.pick(4096, 2048),
+                nnz_per_row: 16,
+                seed: 0x5EED,
+            },
+        ),
+        other => panic!("unknown kernel {other}"),
+    };
+    let name = setup.name.clone();
+    let (mut cl, _io) = setup.into_cluster(cfg.clone());
+    let stats = cl.run(2_000_000_000);
+    (stats, name)
+}
+
+pub const FIG14A_KERNELS: [&str; 5] = ["axpy", "dotp", "gemm", "fft", "spmmadd"];
+
+pub fn fig14a(scale: Scale) -> Table {
+    let cfg = ClusterConfig::terapool(9); // the energy-optimal 850 MHz point
+    let em = energy::EnergyModel::for_cluster(&cfg);
+    let mut t = Table::new(
+        "Fig. 14a — Kernel IPC / stall fractions on TeraPool-1-3-5-9 @ 850 MHz",
+        &[
+            "Kernel", "IPC", "Instr%", "LSU%", "RAW%", "Ctrl%", "WFI%",
+            "AMAT", "GFLOP/s", "GFLOP/s/W",
+        ],
+    );
+    for k in FIG14A_KERNELS {
+        let (s, name) = run_kernel(&cfg, k, scale);
+        t.row(vec![
+            name,
+            f2(s.ipc()),
+            pct(s.fraction(s.instructions)),
+            pct(s.fraction(s.stall_lsu)),
+            pct(s.fraction(s.stall_raw)),
+            pct(s.fraction(s.stall_ctrl)),
+            pct(s.fraction(s.stall_synch)),
+            f2(s.amat),
+            f1(s.gflops()),
+            f1(em.gflops_per_watt(&s)),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Fig. 14b — double-buffered kernels with HBM2E
+// ------------------------------------------------------------------
+
+pub fn fig14b(scale: Scale) -> Table {
+    let cfg = ClusterConfig::terapool(9);
+    let chunk = scale.pick(32 * 4096, 16 * 4096); // 6 buffers must fit 896 KiW
+    let rounds = scale.pick(8, 4);
+    let mut t = Table::new(
+        "Fig. 14b — Double-buffered kernels with HBM2E transfers",
+        &["Kernel", "Cycles", "Compute %", "Transfer-hidden %", "MB moved", "IPC"],
+    );
+    for k in [
+        double_buffer::DbKernel::Gemm,
+        double_buffer::DbKernel::Dotp,
+        double_buffer::DbKernel::Axpy,
+    ] {
+        hbm_image_clear();
+        let r = double_buffer::run(
+            &cfg,
+            &double_buffer::DbParams { kernel: k, chunk, rounds },
+        );
+        t.row(vec![
+            k.name().into(),
+            int(r.cycles),
+            pct(r.compute_fraction),
+            pct(r.compute_fraction), // hidden fraction == compute share
+            f1(r.bytes_transferred as f64 / 1e6),
+            f2(r.ipc),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Table 5 — SoA comparison
+// ------------------------------------------------------------------
+
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table 5 — State-of-the-art cluster-based many-core designs",
+        &[
+            "Design", "Scaling", "PE", "Exec", "PEs/cluster", "Total PEs",
+            "L1 MiB", "L1 B/cyc", "L2 B/cyc", "L1 latency", "Peak op/cyc", "OSS",
+        ],
+    );
+    let mut rows = vec![soa::terapool_row(&ClusterConfig::terapool(9))];
+    rows.extend(soa::literature_rows());
+    for r in rows {
+        t.row(vec![
+            r.name.into(),
+            r.scaling.into(),
+            r.pe.into(),
+            r.execution.into(),
+            int(r.pes_per_cluster as u64),
+            int(r.total_pes as u64),
+            f2(r.shared_l1_mib),
+            f1(r.l1_bw),
+            r.l2_bw.map(f1).unwrap_or_else(|| "N.A.".into()),
+            r.l1_latency.into(),
+            f1(r.peak_ops),
+            if r.open_source { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Table 6 — data-transfer cost vs compute IPC across cluster scales
+// ------------------------------------------------------------------
+
+pub fn table6(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Table 6 — Main-memory Byte/FLOP vs IPC (AXPY f32 / MatMul f32)",
+        &[
+            "Cluster", "Max tiling MiB", "AXPY B/F", "AXPY IPC", "GEMM B/F", "GEMM IPC",
+        ],
+    );
+    for cfg in [
+        ClusterConfig::terapool(9),
+        ClusterConfig::mempool(),
+        ClusterConfig::occamy(),
+    ] {
+        let l1 = cfg.l1_bytes();
+        let tile = scaling::max_tile_edge(l1);
+        // Measure IPC on the actual cluster simulator. Scale workloads to
+        // cluster size so every PE has comparable work.
+        let axpy_n = cfg.num_banks() * scale.pick(64, 16);
+        let (mut ca, _) = kernels::axpy::build(
+            &cfg,
+            &kernels::axpy::AxpyParams { n: axpy_n, alpha: 2.0 },
+        )
+        .into_cluster(cfg.clone());
+        let sa = ca.run(2_000_000_000);
+        let gemm_edge = scale
+            .pick(8, 4)
+            .max((cfg.num_pes() as f64).sqrt() as usize / 4 * 4)
+            .max(8)
+            * 4;
+        let (mut cg, _) = kernels::gemm::build(
+            &cfg,
+            &kernels::gemm::GemmParams { m: gemm_edge, n: gemm_edge, k: gemm_edge },
+        )
+        .into_cluster(cfg.clone());
+        let sg = cg.run(2_000_000_000);
+        t.row(vec![
+            cfg.name.clone(),
+            f2(l1 as f64 / (1024.0 * 1024.0)),
+            f2(scaling::axpy_bytes_per_flop()),
+            f2(sa.ipc()),
+            f3(scaling::gemm_bytes_per_flop(tile)),
+            f2(sg.ipc()),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Sec. 2 — scale-up balance analysis
+// ------------------------------------------------------------------
+
+pub fn scaling_analysis() -> Table {
+    let mut t = Table::new(
+        "Sec. 2 — Kung balance under cluster scale-up (Eqs. 1-2)",
+        &["Scale S", "W (KiWords)", "AI (op/word)", "Transfer cyc", "Compute cyc", "Balanced"],
+    );
+    let base = scaling::BalanceInput {
+        l: 500.0,
+        w: 3.0 * 256.0 * 256.0,
+        bw: 64.0,
+        ai: scaling::matmul_ai(3.0 * 256.0 * 256.0),
+        n_pes: 64.0,
+        u: 0.8,
+    };
+    for s in [1.0, 2.0, 4.0, 8.0, 16.0] {
+        let b = scaling::scale(&base, s);
+        t.row(vec![
+            f1(s),
+            f1(b.w / 1024.0),
+            f1(b.ai),
+            f1(scaling::transfer_cycles(&b)),
+            f1(scaling::compute_cycles(&b)),
+            if scaling::is_balanced(&b) { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------------
+// Headline numbers
+// ------------------------------------------------------------------
+
+pub fn headline(scale: Scale) -> Table {
+    let mut t = Table::new("Headline — TeraPool reproduction vs paper", &["Metric", "Paper", "Measured"]);
+    let c11 = ClusterConfig::terapool(11);
+    t.row(vec![
+        "Peak SP TFLOP/s @ 910 MHz".into(),
+        "1.89".into(),
+        f2(c11.peak_gflops_f32() / 1000.0 * 2048.0 / 2048.0),
+    ]);
+    t.row(vec![
+        "Peak HP TFLOP/s".into(),
+        "~3.7".into(),
+        f2(c11.peak_gflops_f16() / 1000.0),
+    ]);
+    // GEMM sustained.
+    let cfg = ClusterConfig::terapool(9);
+    let em = energy::EnergyModel::for_cluster(&cfg);
+    let (s, _) = run_kernel(&cfg, "gemm", scale);
+    t.row(vec!["GEMM IPC".into(), "0.70".into(), f2(s.ipc())]);
+    t.row(vec![
+        "GEMM sustained GFLOP/s".into(),
+        "~740 (0.74 TFLOP/s)".into(),
+        f1(s.gflops()),
+    ]);
+    t.row(vec![
+        "GEMM GFLOP/s/W (f32)".into(),
+        "100-200 (up to 200 w/ f16)".into(),
+        f1(em.gflops_per_watt(&s)),
+    ]);
+    let (sa, _) = run_kernel(&cfg, "axpy", scale);
+    t.row(vec!["AXPY IPC".into(), "0.85".into(), f2(sa.ipc())]);
+    // HBML.
+    let (gbps, util) = hbml_sweep_point(900.0, DdrRate::G3_6, scale.pick(896 * 1024, 64 * 1024));
+    t.row(vec!["HBML @900 MHz GB/s".into(), "896 (97%)".into(), format!("{} ({})", f1(gbps), pct(util))]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_and_fig11_and_fig12_and_fig13_render() {
+        for t in [table3(), fig11(), fig12(), fig13(), table5(), scaling_analysis()] {
+            let s = t.render();
+            assert!(s.len() > 100, "{s}");
+        }
+    }
+
+    #[test]
+    fn fig9_fast_shows_frequency_bound_vs_hbm_bound() {
+        let words = 128 * 1024u32;
+        let (slow, _) = hbml_sweep_point(500.0, DdrRate::G3_6, words);
+        let (fast, util_fast) = hbml_sweep_point(900.0, DdrRate::G3_6, words);
+        assert!(fast > slow, "900 MHz must beat 500 MHz: {fast} vs {slow}");
+        assert!(util_fast > 0.85, "near-peak at 900 MHz: {util_fast}");
+        // At 500 MHz the cluster side (16×64 B/cyc) caps well below peak.
+        assert!(slow < 0.75 * DdrRate::G3_6.peak_gbps_total());
+    }
+}

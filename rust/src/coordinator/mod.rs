@@ -1,0 +1,26 @@
+//! The benchmark coordinator: one driver per paper table/figure, shared
+//! by the CLI (`terapool <experiment>`) and the criterion benches.
+//!
+//! Every function returns a [`crate::report::Table`] with the same rows
+//! the paper reports; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod experiments;
+
+pub use experiments::*;
+
+/// Experiment scale: `Full` regenerates paper-sized workloads (minutes),
+/// `Fast` shrinks problem sizes for smoke runs and CI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Full,
+    Fast,
+}
+
+impl Scale {
+    pub fn pick<T>(&self, full: T, fast: T) -> T {
+        match self {
+            Scale::Full => full,
+            Scale::Fast => fast,
+        }
+    }
+}

@@ -1,0 +1,415 @@
+//! Modular iDMA engine (Sec. 5.2): frontend / midend / backend.
+//!
+//! * **frontend** — accepts transfer descriptors (src, dst, size) from the
+//!   cores (a CSR write takes `CONFIG_CYCLES`) and forwards them;
+//! * **midend** — splits a transfer into sub-tasks along the SubGroup
+//!   boundaries of the interleaved L1 map: the maximum contiguous run in
+//!   one SubGroup is 256 words = one 1 KiB AXI4 burst (Sec. 5.4), so no
+//!   further splitting is ever needed;
+//! * **backends** — one per SubGroup (16 total), each owning a 512-bit
+//!   AXI4 master ([`AxiPort`]) toward the memory controller. Backends
+//!   bridge the system AXI and the L1 SPM: on an inbound burst completion
+//!   they deposit the words into the SubGroup's banks, on outbound they
+//!   source them.
+//!
+//! The L2 main-memory side interleaves 256 words per HBM2E channel, which
+//! together with one-backend-per-SubGroup gives the conflict-free
+//! backend↔channel pairing the paper engineers in Sec. 5.4.
+
+use std::collections::VecDeque;
+
+use crate::axi::{AxiPort, AxiTreeLatency};
+use crate::config::ClusterConfig;
+use crate::hbm::{Hbm, HbmConfig};
+use crate::memory::L1Memory;
+
+/// Cycles for a core to program the frontend (CSR writes: src, dst, len,
+/// trigger — Fig. 9's "DMA frontend configuration cycles").
+pub const CONFIG_CYCLES: u64 = 16;
+
+/// Words per AXI burst: one SubGroup-contiguous run (256 × 32 bit = 1 KiB).
+pub const BURST_WORDS: u32 = 256;
+
+/// A software-visible transfer descriptor.
+#[derive(Debug, Clone, Copy)]
+pub struct DmaDescriptor {
+    /// L1 start word (must lie in the interleaved region).
+    pub l1_word: u32,
+    /// Main-memory byte address.
+    pub mem_byte: u64,
+    /// Transfer length in words.
+    pub words: u32,
+    /// `true`: main memory → L1 (inbound); `false`: L1 → main memory.
+    pub to_l1: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Burst {
+    desc: u16,
+    l1_word: u32,
+    mem_byte: u64,
+    words: u32,
+    to_l1: bool,
+    backend: u16,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum DescState {
+    Registered,
+    /// Frontend accepted; bursts enqueued; counting completions.
+    Running { remaining: u32, ready_at: u64 },
+    Done { at: u64 },
+}
+
+struct Backend {
+    port: AxiPort,
+    queue: VecDeque<Burst>,
+}
+
+/// The DMA subsystem: descriptors + midend split + 16 backends + HBM.
+pub struct DmaSubsystem {
+    pub hbm: Hbm,
+    lat: AxiTreeLatency,
+    backends: Vec<Backend>,
+    descs: Vec<(DmaDescriptor, DescState)>,
+    inflight: Vec<Burst>,
+    free_inflight: Vec<u32>,
+    frontend_free: u64,
+    // geometry
+    interleaved_base: u32,
+    num_banks: usize,
+    banks_per_subgroup: usize,
+    pub started: u64,
+    pub completed_bursts: u64,
+}
+
+impl DmaSubsystem {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let subgroups = cfg.hierarchy.num_subgroups();
+        DmaSubsystem {
+            hbm: Hbm::new(HbmConfig::new(cfg.ddr, cfg.freq_mhz)),
+            lat: AxiTreeLatency::default(),
+            backends: (0..subgroups)
+                .map(|_| Backend { port: AxiPort::new(64, 8), queue: VecDeque::new() })
+                .collect(),
+            descs: Vec::new(),
+            inflight: Vec::new(),
+            free_inflight: Vec::new(),
+            frontend_free: 0,
+            interleaved_base: cfg.seq_words_total() as u32,
+            num_banks: cfg.num_banks(),
+            banks_per_subgroup: cfg.banks_per_subgroup(),
+            started: 0,
+            completed_bursts: 0,
+        }
+    }
+
+    /// Register a descriptor ahead of the run; returns its id, referenced
+    /// by `Op::DmaStart`/`Op::DmaWait` in kernel traces.
+    pub fn register(&mut self, d: DmaDescriptor) -> u16 {
+        assert!(
+            d.l1_word >= self.interleaved_base,
+            "DMA targets must lie in the interleaved region"
+        );
+        assert_eq!(
+            (d.l1_word - self.interleaved_base) % BURST_WORDS,
+            0,
+            "L1 start must be 256-word aligned (SubGroup run boundary)"
+        );
+        self.descs.push((d, DescState::Registered));
+        (self.descs.len() - 1) as u16
+    }
+
+    /// SubGroup owning an interleaved word (≡ its backend index).
+    fn subgroup_of(&self, word: u32) -> usize {
+        ((word - self.interleaved_base) as usize % self.num_banks) / self.banks_per_subgroup
+    }
+
+    /// Frontend trigger: split via the midend and enqueue on backends.
+    pub fn start(&mut self, id: u16, now: u64) {
+        let (d, state) = self.descs[id as usize];
+        assert!(
+            matches!(state, DescState::Registered),
+            "descriptor {id} started twice"
+        );
+        let ready_at = self.frontend_free.max(now) + CONFIG_CYCLES;
+        self.frontend_free = ready_at;
+
+        // Midend: split on 256-word SubGroup runs.
+        let mut remaining = 0u32;
+        let mut off = 0u32;
+        while off < d.words {
+            let words = BURST_WORDS.min(d.words - off);
+            let l1_word = d.l1_word + off;
+            let backend = self.subgroup_of(l1_word) as u16;
+            self.backends[backend as usize].queue.push_back(Burst {
+                desc: id,
+                l1_word,
+                mem_byte: d.mem_byte + off as u64 * 4,
+                words,
+                to_l1: d.to_l1,
+                backend,
+            });
+            remaining += 1;
+            off += words;
+        }
+        self.descs[id as usize].1 = DescState::Running { remaining, ready_at };
+        self.started += 1;
+    }
+
+    pub fn is_done(&self, id: u16) -> bool {
+        matches!(self.descs[id as usize].1, DescState::Done { .. })
+    }
+
+    pub fn done_at(&self, id: u16) -> Option<u64> {
+        match self.descs[id as usize].1 {
+            DescState::Done { at } => Some(at),
+            _ => None,
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.descs
+            .iter()
+            .all(|(_, s)| matches!(s, DescState::Registered | DescState::Done { .. }))
+    }
+
+    /// Advance one cycle: retire HBM completions into L1 and issue new
+    /// bursts from the backend queues.
+    pub fn step(&mut self, now: u64, l1: &mut L1Memory) {
+        // 1. Completions coming back from the memory controller.
+        let mut done_ids: Vec<u64> = Vec::new();
+        self.hbm.take_completed(now, |bid| done_ids.push(bid));
+        for bid in done_ids {
+            let b = self.inflight[bid as usize];
+            self.free_inflight.push(bid as u32);
+            self.backends[b.backend as usize].port.retire();
+            self.completed_bursts += 1;
+            if let DescState::Running { remaining, ready_at } =
+                &mut self.descs[b.desc as usize].1
+            {
+                *remaining -= 1;
+                if *remaining == 0 {
+                    let _ = ready_at;
+                    self.descs[b.desc as usize].1 = DescState::Done { at: now };
+                }
+            }
+        }
+
+        // 2. Issue from backend queues (≤1 burst per backend per cycle,
+        //    bounded by the 512-bit port's beat rate and outstanding cap).
+        for be_idx in 0..self.backends.len() {
+            let ready = match self.backends[be_idx].queue.front() {
+                Some(b) => match self.descs[b.desc as usize].1 {
+                    DescState::Running { ready_at, .. } => ready_at <= now,
+                    _ => false,
+                },
+                None => false,
+            };
+            if !ready {
+                continue;
+            }
+            if !self.backends[be_idx].port.can_issue(now) {
+                self.backends[be_idx].port.note_stall();
+                continue;
+            }
+            let b = self.backends[be_idx].queue.pop_front().unwrap();
+            let bytes = b.words as u64 * 4;
+            self.backends[be_idx].port.issue(now, bytes);
+            // Functional data movement happens at issue (outbound) /
+            // completion (inbound); we move it here in one shot — the
+            // timing of visibility is guarded by DmaWait in the traces.
+            if b.to_l1 {
+                for w in 0..b.words {
+                    let v = hbm_image_read(b.mem_byte + w as u64 * 4);
+                    l1.write(b.l1_word + w, v);
+                }
+            } else {
+                for w in 0..b.words {
+                    let v = l1.read(b.l1_word + w);
+                    hbm_image_write(b.mem_byte + w as u64 * 4, v);
+                }
+            }
+            let bid = match self.free_inflight.pop() {
+                Some(i) => {
+                    self.inflight[i as usize] = b;
+                    i as u64
+                }
+                None => {
+                    self.inflight.push(b);
+                    (self.inflight.len() - 1) as u64
+                }
+            };
+            self.hbm
+                .submit(now + self.lat.backend_to_mc() as u64, b.mem_byte, bytes, bid);
+        }
+    }
+
+    /// Bytes moved so far (both directions).
+    pub fn total_bytes(&self) -> u64 {
+        self.backends.iter().map(|b| b.port.bytes).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Main-memory functional image. The timing model (Hbm) and the contents
+// live separately: the image is a process-global sparse store so DMA
+// harnesses and the cluster can stage inputs / read back outputs.
+// ---------------------------------------------------------------------
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+thread_local! {
+    static HBM_IMAGE: RefCell<HashMap<u64, f32>> = RefCell::new(HashMap::new());
+}
+
+/// Write a word into the functional main-memory image.
+pub fn hbm_image_write(byte_addr: u64, v: f32) {
+    HBM_IMAGE.with(|m| {
+        m.borrow_mut().insert(byte_addr, v);
+    });
+}
+
+/// Read a word from the functional main-memory image (0.0 if untouched).
+pub fn hbm_image_read(byte_addr: u64) -> f32 {
+    HBM_IMAGE.with(|m| m.borrow().get(&byte_addr).copied().unwrap_or(0.0))
+}
+
+/// Clear the image (between experiments).
+pub fn hbm_image_clear() {
+    HBM_IMAGE.with(|m| m.borrow_mut().clear());
+}
+
+/// Stage a slice into the image at `byte_addr`.
+pub fn hbm_image_stage(byte_addr: u64, data: &[f32]) {
+    HBM_IMAGE.with(|m| {
+        let mut m = m.borrow_mut();
+        for (i, &v) in data.iter().enumerate() {
+            m.insert(byte_addr + i as u64 * 4, v);
+        }
+    });
+}
+
+/// Read a slice back from the image.
+pub fn hbm_image_fetch(byte_addr: u64, words: usize) -> Vec<f32> {
+    HBM_IMAGE.with(|m| {
+        let m = m.borrow();
+        (0..words)
+            .map(|i| m.get(&(byte_addr + i as u64 * 4)).copied().unwrap_or(0.0))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn run_until_idle(dma: &mut DmaSubsystem, l1: &mut L1Memory, max: u64) -> u64 {
+        for now in 0..max {
+            dma.step(now, l1);
+            if dma.idle() && dma.hbm.pending() == 0 {
+                return now;
+            }
+        }
+        panic!("DMA did not finish in {max} cycles");
+    }
+
+    #[test]
+    fn inbound_transfer_lands_in_l1() {
+        hbm_image_clear();
+        let cfg = ClusterConfig::terapool(9);
+        let mut l1 = L1Memory::new(&cfg);
+        let mut dma = DmaSubsystem::new(&cfg);
+        let base = l1.map.interleaved_base();
+        let data: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        hbm_image_stage(0x1000, &data);
+        let id = dma.register(DmaDescriptor {
+            l1_word: base,
+            mem_byte: 0x1000,
+            words: 1024,
+            to_l1: true,
+        });
+        dma.start(id, 0);
+        run_until_idle(&mut dma, &mut l1, 10_000);
+        assert!(dma.is_done(id));
+        assert_eq!(l1.read_slice(base, 1024), data);
+    }
+
+    #[test]
+    fn outbound_transfer_reaches_image() {
+        hbm_image_clear();
+        let cfg = ClusterConfig::terapool(9);
+        let mut l1 = L1Memory::new(&cfg);
+        let mut dma = DmaSubsystem::new(&cfg);
+        let base = l1.map.interleaved_base();
+        let data: Vec<f32> = (0..512).map(|i| (i * 3) as f32).collect();
+        l1.write_slice(base, &data);
+        let id = dma.register(DmaDescriptor {
+            l1_word: base,
+            mem_byte: 0x8000,
+            words: 512,
+            to_l1: false,
+        });
+        dma.start(id, 0);
+        run_until_idle(&mut dma, &mut l1, 10_000);
+        assert_eq!(hbm_image_fetch(0x8000, 512), data);
+    }
+
+    #[test]
+    fn midend_splits_on_subgroup_runs() {
+        hbm_image_clear();
+        let cfg = ClusterConfig::terapool(9);
+        let mut l1 = L1Memory::new(&cfg);
+        let mut dma = DmaSubsystem::new(&cfg);
+        let base = l1.map.interleaved_base();
+        // 4096 words = 16 bursts, one per SubGroup backend.
+        let id = dma.register(DmaDescriptor {
+            l1_word: base,
+            mem_byte: 0,
+            words: 4096,
+            to_l1: true,
+        });
+        dma.start(id, 0);
+        let queued: usize = dma.backends.iter().map(|b| b.queue.len()).sum();
+        assert_eq!(queued, 16);
+        for b in &dma.backends {
+            assert_eq!(b.queue.len(), 1, "one run per SubGroup");
+        }
+        run_until_idle(&mut dma, &mut l1, 10_000);
+        assert_eq!(dma.completed_bursts, 16);
+    }
+
+    #[test]
+    fn config_cycles_delay_start() {
+        hbm_image_clear();
+        let cfg = ClusterConfig::terapool(9);
+        let mut l1 = L1Memory::new(&cfg);
+        let mut dma = DmaSubsystem::new(&cfg);
+        let base = l1.map.interleaved_base();
+        let id = dma.register(DmaDescriptor { l1_word: base, mem_byte: 0, words: 256, to_l1: true });
+        dma.start(id, 0);
+        let end = run_until_idle(&mut dma, &mut l1, 10_000);
+        assert!(end >= CONFIG_CYCLES, "transfer can't beat frontend config");
+    }
+
+    #[test]
+    fn full_l1_transfer_bandwidth_near_peak_at_900mhz() {
+        hbm_image_clear();
+        let cfg = ClusterConfig::terapool(11); // 910 MHz — paper rounds to 900
+        let mut l1 = L1Memory::new(&cfg);
+        let mut dma = DmaSubsystem::new(&cfg);
+        let base = l1.map.interleaved_base();
+        let words = (cfg.l1_words() as u32 - base).min(3 * 1024 * 1024 / 4);
+        let id = dma.register(DmaDescriptor { l1_word: base, mem_byte: 0, words, to_l1: true });
+        dma.start(id, 0);
+        let end = run_until_idle(&mut dma, &mut l1, 1_000_000);
+        let gbps = dma.hbm.achieved_gbps(end);
+        let peak = cfg.ddr.peak_gbps_total();
+        assert!(
+            gbps > 0.85 * peak,
+            "achieved {gbps:.0} GB/s vs peak {peak:.0} GB/s"
+        );
+    }
+}

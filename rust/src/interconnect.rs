@@ -1,0 +1,581 @@
+//! Cycle-level model of TeraPool's hierarchical PE-to-L1 interconnect
+//! (Sec. 3–4).
+//!
+//! Topology (Fig. 5/6): each Tile's PEs reach their 32 local banks through
+//! a fully-combinational logarithmic crossbar (1-cycle round trip). Each
+//! Tile additionally exposes **7 master ports**: one to the 8×8 crossbar
+//! of its SubGroup, three to the 8×8 crossbars toward the other SubGroups
+//! of its Group, and three to the 32×32 crossbars toward the three remote
+//! Groups. Spill registers at hierarchy boundaries pipeline long paths,
+//! yielding the NUMA round-trip profile 1-3-5-{7,9,11}.
+//!
+//! Model: every arbitration point (Tile master port per category, target
+//! Tile slave port per category — which *is* the FC crossbar output — and
+//! the bank port) grants **one request per cycle**; losers retry the next
+//! cycle. Combinational stages traverse within a cycle; spill registers
+//! add the fixed hop/response delays derived from the configured NUMA
+//! latencies. The response path is modeled with complete arbitration
+//! collapsed into its fixed delay (the paper's AMAT model, Sec. 3.1, also
+//! attributes contention to the request path).
+
+use std::collections::VecDeque;
+
+use crate::config::ClusterConfig;
+use crate::memory::{BankAddr, L1Memory};
+
+/// NUMA distance class of an access (Fig. 8b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumaClass {
+    Local = 0,
+    SubGroup = 1,
+    Group = 2,
+    RemoteGroup = 3,
+}
+
+pub const NUMA_CLASSES: [NumaClass; 4] = [
+    NumaClass::Local,
+    NumaClass::SubGroup,
+    NumaClass::Group,
+    NumaClass::RemoteGroup,
+];
+
+/// What the request does at the bank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReqKind {
+    /// Load into register `rd` of the issuing core.
+    Read { rd: u8 },
+    /// Store `value`.
+    Write,
+    /// Atomic fetch-and-add of `value` (the join primitive).
+    Amo,
+}
+
+/// An in-flight L1 request.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub core: u32,
+    pub kind: ReqKind,
+    pub value: f32,
+    pub bank: BankAddr,
+    pub class: NumaClass,
+    pub issue_cycle: u64,
+    /// Cluster-defined tag (e.g. barrier id + 1); 0 = none.
+    pub tag: u32,
+    slave_node: u32,
+    hop_delay: u32,
+    resp_delay: u32,
+}
+
+/// A completed request delivered back to the cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct Response {
+    pub core: u32,
+    pub kind: ReqKind,
+    pub value: f32,
+    pub latency: u64,
+    pub class: NumaClass,
+    pub tag: u32,
+}
+
+/// Fixed-size time wheel for delayed events (all delays ≤ 16 cycles).
+struct Wheel<T> {
+    slots: Vec<Vec<T>>,
+}
+
+const WHEEL: usize = 32;
+
+impl<T> Wheel<T> {
+    fn new() -> Self {
+        Wheel { slots: (0..WHEEL).map(|_| Vec::new()).collect() }
+    }
+    fn push(&mut self, at: u64, item: T) {
+        self.slots[(at as usize) % WHEEL].push(item);
+    }
+    /// Swap the due slot into `scratch` (capacity is recycled both ways —
+    /// §Perf: `mem::take` here caused a realloc per cycle per wheel).
+    fn drain_into(&mut self, now: u64, scratch: &mut Vec<T>) {
+        scratch.clear();
+        std::mem::swap(&mut self.slots[(now as usize) % WHEEL], scratch);
+    }
+}
+
+/// Per-class latency/contention accounting (drives the measured-AMAT
+/// validation of the analytical model, Sec. 7).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassStats {
+    pub count: u64,
+    pub latency_sum: u64,
+    pub latency_max: u64,
+    pub contention_sum: u64,
+}
+
+impl ClassStats {
+    pub fn amat(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.latency_sum as f64 / self.count as f64 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct IcnStats {
+    pub per_class: [ClassStats; 4],
+    /// Requests that lost a bank arbitration at least once.
+    pub bank_conflicts: u64,
+    pub issued: u64,
+    pub completed: u64,
+}
+
+impl IcnStats {
+    /// Average memory access time over all completed requests.
+    pub fn amat(&self) -> f64 {
+        let (mut n, mut s) = (0u64, 0u64);
+        for c in &self.per_class {
+            n += c.count;
+            s += c.latency_sum;
+        }
+        if n == 0 { 0.0 } else { s as f64 / n as f64 }
+    }
+    /// Fraction of cycles lost to contention (beyond zero-load latency).
+    pub fn contention_fraction(&self) -> f64 {
+        let (mut s, mut c) = (0u64, 0u64);
+        for cl in &self.per_class {
+            s += cl.latency_sum;
+            c += cl.contention_sum;
+        }
+        if s == 0 { 0.0 } else { c as f64 / s as f64 }
+    }
+}
+
+const NO_NODE: u32 = u32::MAX;
+const PORTS_PER_TILE: usize = 7;
+
+/// The interconnect simulation engine.
+pub struct Interconnect {
+    // topology
+    tiles_per_subgroup: usize,
+    tiles_per_group: usize,
+    banks_per_tile: usize,
+    latency: crate::config::LatencyCfg,
+
+    // arbitration queues (FIFO; head granted each cycle)
+    master_q: Vec<VecDeque<u32>>,
+    slave_q: Vec<VecDeque<u32>>,
+    bank_q: Vec<VecDeque<u32>>,
+    active_masters: Vec<u32>,
+    active_slaves: Vec<u32>,
+    active_banks: Vec<u32>,
+
+    arrivals: Wheel<(u32, u32)>, // (slave node, req)
+    responses: Wheel<u32>,
+    scratch_arrivals: Vec<(u32, u32)>,
+    scratch_responses: Vec<u32>,
+    scratch_nodes: Vec<u32>,
+
+    reqs: Vec<Request>,
+    free: Vec<u32>,
+    pub stats: IcnStats,
+    inflight: u64,
+}
+
+impl Interconnect {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let tiles = cfg.num_tiles();
+        Interconnect {
+            tiles_per_subgroup: cfg.hierarchy.tiles_per_subgroup,
+            tiles_per_group: cfg.hierarchy.tiles_per_group(),
+            banks_per_tile: cfg.banks_per_tile(),
+            latency: cfg.latency,
+            master_q: vec![VecDeque::new(); tiles * PORTS_PER_TILE],
+            slave_q: vec![VecDeque::new(); tiles * PORTS_PER_TILE],
+            bank_q: vec![VecDeque::new(); cfg.num_banks()],
+            active_masters: Vec::new(),
+            active_slaves: Vec::new(),
+            active_banks: Vec::new(),
+            arrivals: Wheel::new(),
+            responses: Wheel::new(),
+            scratch_arrivals: Vec::new(),
+            scratch_responses: Vec::new(),
+            scratch_nodes: Vec::new(),
+            reqs: Vec::new(),
+            free: Vec::new(),
+            stats: IcnStats::default(),
+            inflight: 0,
+        }
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    /// NUMA class of (source tile → destination bank's tile).
+    pub fn classify(&self, src_tile: usize, dst_tile: usize) -> NumaClass {
+        if src_tile == dst_tile {
+            return NumaClass::Local;
+        }
+        if src_tile / self.tiles_per_group != dst_tile / self.tiles_per_group {
+            return NumaClass::RemoteGroup;
+        }
+        let s_sg = (src_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+        let d_sg = (dst_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+        if s_sg == d_sg { NumaClass::SubGroup } else { NumaClass::Group }
+    }
+
+    /// Master-port index (0..7) at the source tile for a destination.
+    fn master_port(&self, src_tile: usize, dst_tile: usize, class: NumaClass) -> usize {
+        match class {
+            NumaClass::Local => unreachable!("local requests bypass master ports"),
+            NumaClass::SubGroup => 0,
+            NumaClass::Group => {
+                let s_sg = (src_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+                let d_sg = (dst_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+                1 + if d_sg < s_sg { d_sg } else { d_sg - 1 }
+            }
+            NumaClass::RemoteGroup => {
+                let s_g = src_tile / self.tiles_per_group;
+                let d_g = dst_tile / self.tiles_per_group;
+                4 + if d_g < s_g { d_g } else { d_g - 1 }
+            }
+        }
+    }
+
+    /// Slave-port index at the destination tile (symmetric to master).
+    fn slave_port(&self, src_tile: usize, dst_tile: usize, class: NumaClass) -> usize {
+        self.master_port(dst_tile, src_tile, class)
+    }
+
+    fn delays(&self, class: NumaClass) -> (u32, u32) {
+        // (request hop delay master→slave, response delay bank→core) such
+        // that the zero-load round trip equals the configured latency.
+        let split = |l: u32| {
+            let hop = (l - 1) / 2;
+            (hop, l - hop) // bank at issue+hop, data ready at issue+l
+        };
+        match class {
+            NumaClass::Local => (0, self.latency.local),
+            NumaClass::SubGroup => split(self.latency.subgroup),
+            NumaClass::Group => split(self.latency.group),
+            NumaClass::RemoteGroup => split(self.latency.remote_group),
+        }
+    }
+
+    /// Issue a request from `core` (in `src_tile`) to `bank`. Returns the
+    /// request id. Called by the cluster during the PE issue phase.
+    pub fn push_request(
+        &mut self,
+        now: u64,
+        core: u32,
+        src_tile: usize,
+        kind: ReqKind,
+        value: f32,
+        bank: BankAddr,
+        tag: u32,
+    ) {
+        let dst_tile = bank.bank as usize / self.banks_per_tile;
+        let class = self.classify(src_tile, dst_tile);
+        let (hop_delay, resp_delay) = self.delays(class);
+        let slave_node = if class == NumaClass::Local {
+            NO_NODE
+        } else {
+            (dst_tile * PORTS_PER_TILE + self.slave_port(src_tile, dst_tile, class)) as u32
+        };
+        let req = Request {
+            core,
+            kind,
+            value,
+            bank,
+            class,
+            issue_cycle: now,
+            tag,
+            slave_node,
+            hop_delay,
+            resp_delay,
+        };
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.reqs[i as usize] = req;
+                i
+            }
+            None => {
+                self.reqs.push(req);
+                (self.reqs.len() - 1) as u32
+            }
+        };
+        self.stats.issued += 1;
+        self.inflight += 1;
+        if class == NumaClass::Local {
+            Self::enqueue(&mut self.bank_q, &mut self.active_banks, bank.bank, id);
+        } else {
+            let node = (src_tile * PORTS_PER_TILE
+                + self.master_port(src_tile, dst_tile, class)) as u32;
+            Self::enqueue(&mut self.master_q, &mut self.active_masters, node, id);
+        }
+    }
+
+    fn enqueue(qs: &mut [VecDeque<u32>], active: &mut Vec<u32>, node: u32, id: u32) {
+        let q = &mut qs[node as usize];
+        if q.is_empty() {
+            active.push(node);
+        }
+        q.push_back(id);
+    }
+
+    /// Advance one cycle: deliver spill-register arrivals, arbitrate the
+    /// master ports, slave ports/crossbar outputs, and banks (one grant
+    /// per node per cycle), perform the granted bank accesses on `l1`, and
+    /// schedule responses.
+    pub fn step(&mut self, now: u64, l1: &mut L1Memory) {
+        // 1. Requests emerging from spill registers join their slave port.
+        let mut arr = std::mem::take(&mut self.scratch_arrivals);
+        self.arrivals.drain_into(now, &mut arr);
+        for &(node, id) in &arr {
+            Self::enqueue(&mut self.slave_q, &mut self.active_slaves, node, id);
+        }
+        self.scratch_arrivals = arr;
+
+        // 2. Master-port arbitration: winner crosses the hierarchy
+        //    boundary (spill register → arrives at slave port later).
+        //    Active lists are swept through a recycled scratch vector
+        //    (§Perf: take() dropped their capacity every cycle).
+        let mut nodes = std::mem::take(&mut self.scratch_nodes);
+        nodes.clear();
+        nodes.extend_from_slice(&self.active_masters);
+        self.active_masters.clear();
+        for &node in &nodes {
+            let q = &mut self.master_q[node as usize];
+            if let Some(id) = q.pop_front() {
+                let r = &self.reqs[id as usize];
+                self.arrivals.push(now + r.hop_delay as u64, (r.slave_node, id));
+            }
+            if !q.is_empty() {
+                self.active_masters.push(node);
+            }
+        }
+
+        // 3. Slave-port arbitration (the FC crossbar output toward the
+        //    target tile): winner proceeds to its bank the same cycle
+        //    (combinational within the tile).
+        nodes.clear();
+        nodes.extend_from_slice(&self.active_slaves);
+        self.active_slaves.clear();
+        for &node in &nodes {
+            let q = &mut self.slave_q[node as usize];
+            if let Some(id) = q.pop_front() {
+                let bank = self.reqs[id as usize].bank.bank;
+                Self::enqueue(&mut self.bank_q, &mut self.active_banks, bank, id);
+            }
+            if !q.is_empty() {
+                self.active_slaves.push(node);
+            }
+        }
+
+        // 4. Bank ports: one access per bank per cycle.
+        nodes.clear();
+        nodes.extend_from_slice(&self.active_banks);
+        self.active_banks.clear();
+        let banks = &nodes;
+        for &bank in banks {
+            let q = &mut self.bank_q[bank as usize];
+            if let Some(id) = q.pop_front() {
+                let r = &mut self.reqs[id as usize];
+                match r.kind {
+                    ReqKind::Read { .. } => r.value = l1.read_bank(r.bank),
+                    ReqKind::Write => l1.write_bank(r.bank, r.value),
+                    ReqKind::Amo => {
+                        r.value = l1.amo_add_bank(r.bank, r.value);
+                    }
+                }
+                let resp_at = now + r.resp_delay as u64;
+                self.responses.push(resp_at.max(now + 1), id);
+            }
+            if !q.is_empty() {
+                self.stats.bank_conflicts += q.len() as u64;
+                self.active_banks.push(bank);
+            }
+        }
+        self.scratch_nodes = nodes;
+    }
+
+    /// Deliver all responses due at `now` (call at the top of each cycle).
+    pub fn drain_responses(&mut self, now: u64, mut sink: impl FnMut(Response)) {
+        let mut due = std::mem::take(&mut self.scratch_responses);
+        self.responses.drain_into(now, &mut due);
+        for &id in &due {
+            let r = self.reqs[id as usize];
+            let latency = now - r.issue_cycle;
+            let zero_load = match r.class {
+                NumaClass::Local => self.latency.local,
+                NumaClass::SubGroup => self.latency.subgroup,
+                NumaClass::Group => self.latency.group,
+                NumaClass::RemoteGroup => self.latency.remote_group,
+            } as u64;
+            let cs = &mut self.stats.per_class[r.class as usize];
+            cs.count += 1;
+            cs.latency_sum += latency;
+            cs.latency_max = cs.latency_max.max(latency);
+            cs.contention_sum += latency.saturating_sub(zero_load);
+            self.stats.completed += 1;
+            self.inflight -= 1;
+            self.free.push(id);
+            sink(Response {
+                core: r.core,
+                kind: r.kind,
+                value: r.value,
+                latency,
+                class: r.class,
+                tag: r.tag,
+            });
+        }
+        self.scratch_responses = due;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::memory::L1Memory;
+
+    fn setup() -> (ClusterConfig, L1Memory, Interconnect) {
+        let cfg = ClusterConfig::terapool(9);
+        let l1 = L1Memory::new(&cfg);
+        let icn = Interconnect::new(&cfg);
+        (cfg, l1, icn)
+    }
+
+    /// Run until a single response arrives; return (latency, value).
+    fn run_one(icn: &mut Interconnect, l1: &mut L1Memory) -> (u64, f32) {
+        let mut out = None;
+        for now in 0..64 {
+            icn.drain_responses(now, |r| out = Some((r.latency, r.value)));
+            if let Some(o) = out {
+                return o;
+            }
+            icn.step(now, l1);
+        }
+        panic!("no response after 64 cycles");
+    }
+
+    #[test]
+    fn zero_load_latencies_match_numa_profile() {
+        let (cfg, mut l1, _) = setup();
+        // (dst_tile, expected RT) per class from tile 0.
+        for (dst_tile, expect) in [(0usize, 1u64), (1, 3), (8, 5), (32, 9)] {
+            let mut icn = Interconnect::new(&cfg);
+            let bank = BankAddr { bank: (dst_tile * cfg.banks_per_tile()) as u32, row: 5 };
+            l1.write_bank(bank, 42.5);
+            icn.push_request(0, 0, 0, ReqKind::Read { rd: 1 }, 0.0, bank, 0);
+            let (lat, val) = run_one(&mut icn, &mut l1);
+            assert_eq!(lat, expect, "dst_tile={dst_tile}");
+            assert_eq!(val, 42.5);
+        }
+    }
+
+    #[test]
+    fn zero_load_latencies_7_and_11() {
+        for (rg, expect) in [(7u32, 7u64), (11, 11)] {
+            let cfg = ClusterConfig::terapool(rg);
+            let mut l1 = L1Memory::new(&cfg);
+            let mut icn = Interconnect::new(&cfg);
+            let bank = BankAddr { bank: (32 * cfg.banks_per_tile()) as u32, row: 0 };
+            icn.push_request(0, 0, 0, ReqKind::Read { rd: 1 }, 0.0, bank, 0);
+            let (lat, _) = run_one(&mut icn, &mut l1);
+            assert_eq!(lat, expect);
+        }
+    }
+
+    #[test]
+    fn bank_conflict_serializes() {
+        let (cfg, mut l1, mut icn) = setup();
+        let bank = BankAddr { bank: 0, row: 0 };
+        // 4 local cores of tile 0 hit the same bank.
+        for core in 0..4 {
+            icn.push_request(0, core, 0, ReqKind::Read { rd: 1 }, 0.0, bank, 0);
+        }
+        let mut lats = Vec::new();
+        for now in 0..32 {
+            icn.drain_responses(now, |r| lats.push(r.latency));
+            icn.step(now, &mut l1);
+        }
+        lats.sort();
+        assert_eq!(lats, vec![1, 2, 3, 4], "one grant per bank per cycle");
+        assert_eq!(cfg.latency.local, 1);
+    }
+
+    #[test]
+    fn master_port_contention_adds_cycles() {
+        let (cfg, mut l1, mut icn) = setup();
+        // 8 cores of tile 0 access 8 *different* banks of tile 1 (same
+        // SubGroup): they serialize at tile 0's SubGroup master port.
+        for core in 0..8u32 {
+            let bank = BankAddr {
+                bank: (cfg.banks_per_tile() + core as usize) as u32,
+                row: 0,
+            };
+            icn.push_request(0, core, 0, ReqKind::Read { rd: 1 }, 0.0, bank, 0);
+        }
+        let mut lats = Vec::new();
+        for now in 0..40 {
+            icn.drain_responses(now, |r| lats.push(r.latency));
+            icn.step(now, &mut l1);
+        }
+        lats.sort();
+        assert_eq!(lats, vec![3, 4, 5, 6, 7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn writes_and_amos_apply() {
+        let (cfg, mut l1, mut icn) = setup();
+        let bank = BankAddr { bank: cfg.banks_per_tile() as u32, row: 3 };
+        icn.push_request(0, 0, 0, ReqKind::Write, 7.0, bank, 0);
+        run_one(&mut icn, &mut l1);
+        assert_eq!(l1.read_bank(bank), 7.0);
+        icn.push_request(0, 0, 0, ReqKind::Amo, 2.0, bank, 9);
+        let (_, v) = run_one(&mut icn, &mut l1);
+        assert_eq!(v, 9.0, "amo returns the new value");
+        assert_eq!(l1.read_bank(bank), 9.0);
+    }
+
+    #[test]
+    fn stats_accumulate_contention() {
+        let (_, mut l1, mut icn) = setup();
+        let bank = BankAddr { bank: 0, row: 0 };
+        for core in 0..4 {
+            icn.push_request(0, core, 0, ReqKind::Read { rd: 0 }, 0.0, bank, 0);
+        }
+        for now in 0..16 {
+            icn.drain_responses(now, |_| ());
+            icn.step(now, &mut l1);
+        }
+        let s = &icn.stats.per_class[NumaClass::Local as usize];
+        assert_eq!(s.count, 4);
+        assert_eq!(s.latency_sum, 1 + 2 + 3 + 4);
+        assert_eq!(s.contention_sum, 0 + 1 + 2 + 3);
+        assert!((icn.stats.amat() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classify_covers_hierarchy() {
+        let (_, _, icn) = setup();
+        assert_eq!(icn.classify(0, 0), NumaClass::Local);
+        assert_eq!(icn.classify(0, 7), NumaClass::SubGroup);
+        assert_eq!(icn.classify(0, 31), NumaClass::Group);
+        assert_eq!(icn.classify(0, 127), NumaClass::RemoteGroup);
+        assert_eq!(icn.classify(127, 120), NumaClass::SubGroup);
+    }
+
+    #[test]
+    fn distinct_ports_for_distinct_destinations() {
+        let (_, _, icn) = setup();
+        // From tile 0: the three other SubGroups map to ports 1..=3 and
+        // the three remote groups to ports 4..=6.
+        let p_sg: Vec<usize> = [8, 16, 24]
+            .iter()
+            .map(|&t| icn.master_port(0, t, NumaClass::Group))
+            .collect();
+        assert_eq!(p_sg, vec![1, 2, 3]);
+        let p_rg: Vec<usize> = [32, 64, 96]
+            .iter()
+            .map(|&t| icn.master_port(0, t, NumaClass::RemoteGroup))
+            .collect();
+        assert_eq!(p_rg, vec![4, 5, 6]);
+    }
+}

@@ -1,0 +1,145 @@
+//! DOTP — the second *local-access* kernel (Sec. 7): `s = Σ x_i · y_i`.
+//!
+//! Same chunk-of-4 local data placement as AXPY; the **join** is the
+//! paper's atomic fetch&add reduction: each PE folds its partial sums into
+//! 4 accumulator registers, reduces them, atomically adds the partial into
+//! a per-Tile slot (Tile-local bank, 8 PEs serialize), and after a barrier
+//! the Tile leaders atomically add their Tile sums into the global slot.
+//! This two-level software tree is why DOTP shows more AMAT +
+//! synchronization overhead than AXPY in Fig. 14a (IPC 0.83 vs 0.85).
+
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+
+use super::{Alloc, KernelSetup};
+
+const R_X: u8 = 2; // r2..r5
+const R_Y: u8 = 6; // r6..r9
+const R_ACC: u8 = 10; // r10..r13
+const R_T: u8 = 14;
+
+pub struct DotpParams {
+    pub n: usize,
+}
+
+impl Default for DotpParams {
+    fn default() -> Self {
+        DotpParams { n: 256 * 1024 }
+    }
+}
+
+pub fn input_x(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 13) as f32) * 0.25 - 1.5).collect()
+}
+pub fn input_y(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 7) as f32) * 0.5 - 1.0).collect()
+}
+
+pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> KernelSetup {
+    let nb = cfg.num_banks();
+    let bf = cfg.banking_factor;
+    let npes = cfg.num_pes();
+    let ppt = cfg.hierarchy.pes_per_tile;
+    assert_eq!(p.n % nb, 0, "n must be a multiple of the bank count");
+
+    let mut alloc = Alloc::new(cfg);
+    let xb = alloc.alloc(p.n as u32);
+    let yb = alloc.alloc(p.n as u32);
+    // One partial-sum slot per Tile + the global slot; the global slot is
+    // the kernel output.
+    let tile_slots = alloc.alloc(cfg.num_tiles() as u32);
+    let out = alloc.alloc(1);
+
+    let sweeps = p.n / nb;
+    let mut programs = Vec::with_capacity(npes);
+    for pe in 0..npes {
+        let tile = pe / ppt;
+        let mut t = Program::new();
+        for j in 0..bf as u8 {
+            t.ld_imm(R_ACC + j, 0.0);
+        }
+        for k in 0..sweeps {
+            for j in 0..bf {
+                let i = (k * nb + bf * pe + j) as u32;
+                t.ld(R_X + j as u8, xb + i);
+            }
+            for j in 0..bf {
+                let i = (k * nb + bf * pe + j) as u32;
+                t.ld(R_Y + j as u8, yb + i);
+            }
+            for j in 0..bf as u8 {
+                t.fmac(R_ACC + j, R_X + j, R_Y + j);
+            }
+            t.alu();
+            t.branch();
+        }
+        // Fold the 4 accumulators.
+        t.add(R_T, R_ACC, R_ACC + 1);
+        t.add(R_T + 1, R_ACC + 2, R_ACC + 3);
+        t.add(R_T, R_T, R_T + 1);
+        // Level 1: per-Tile atomic reduction (local bank).
+        t.atom_add(R_T, tile_slots + tile as u32);
+        t.barrier(0);
+        // Level 2: Tile leaders fold Tile sums into the global slot.
+        if pe % ppt == 0 {
+            t.ld(R_T, tile_slots + tile as u32);
+            t.atom_add(R_T, out);
+        }
+        t.barrier(1);
+        t.halt();
+        programs.push(t);
+    }
+
+    KernelSetup {
+        name: format!("dotp-n{}", p.n),
+        programs,
+        inputs: vec![(xb, input_x(p.n)), (yb, input_y(p.n))],
+        output_base: out,
+        output_len: 1,
+        flops: 2 * p.n as u64,
+    }
+}
+
+pub fn reference(p: &DotpParams) -> f32 {
+    input_x(p.n)
+        .iter()
+        .zip(input_y(p.n))
+        .map(|(&x, y)| x * y)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dotp_reduces_correctly() {
+        let cfg = ClusterConfig::tiny();
+        let p = DotpParams { n: cfg.num_banks() * 8 };
+        let want = reference(&p);
+        let (mut cl, io) = build(&cfg, &p).into_cluster(cfg);
+        cl.run(1_000_000);
+        let got = io.read_output(&cl)[0];
+        assert!(
+            (got - want).abs() < 1e-2 * want.abs().max(1.0),
+            "got {got}, want {want}"
+        );
+    }
+
+    #[test]
+    fn dotp_has_more_synch_than_axpy() {
+        let cfg = ClusterConfig::tiny();
+        let n = cfg.num_banks() * 16;
+        let (mut ca, _) = super::super::axpy::build(
+            &cfg,
+            &super::super::axpy::AxpyParams { n, alpha: 2.0 },
+        )
+        .into_cluster(cfg.clone());
+        let sa = ca.run(1_000_000);
+        let (mut cd, _) = build(&cfg, &DotpParams { n }).into_cluster(cfg);
+        let sd = cd.run(1_000_000);
+        let fa = sa.fraction(sa.stall_synch);
+        let fd = sd.fraction(sd.stall_synch);
+        assert!(fd > fa, "dotp synch {fd} vs axpy {fa}");
+    }
+}

@@ -1,0 +1,53 @@
+//! # TeraPool reproduction library
+//!
+//! A from-scratch reproduction of *TeraPool: A Physical Design Aware, 1024
+//! RISC-V Cores Shared-L1-Memory Scaled-up Cluster Design with High
+//! Bandwidth Main Memory Link* (Zhang et al., IEEE TC,
+//! 10.1109/TC.2025.3603692) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * a **cycle-level functional + timing simulator** of the TeraPool
+//!   cluster: Snitch-like PEs ([`pe`]), the hierarchical Tile → SubGroup →
+//!   Group crossbar interconnect ([`interconnect`]), the banked shared-L1
+//!   SPM with the paper's hybrid address map ([`memory`]), and the cluster
+//!   composition with fork-join barriers ([`cluster`]);
+//! * the paper's **analytical AMAT model** of hierarchical crossbars,
+//!   Eqs. (3)–(6) ([`amat`]) — regenerates Table 4 and Fig. 8b;
+//! * the **High Bandwidth Memory Link**: a cycle-level HBM2E channel model
+//!   standing in for DRAMsys5.0 ([`hbm`]), the tree-like AXI4 interconnect
+//!   ([`axi`]) and the modular frontend/midend/backend iDMA ([`dma`]) —
+//!   regenerates Fig. 9 and Fig. 14b;
+//! * **benchmark kernels** as per-PE instruction trace builders: AXPY,
+//!   DOTP, tiled GEMM, radix-4 FFT, CSR SpMMadd ([`kernels`]) —
+//!   regenerates Fig. 14a and Table 6;
+//! * **physical-design models** calibrated on the paper's GF12 data:
+//!   routing congestion, GE area, per-instruction energy + EDP, EDA effort
+//!   ([`physical`]) — regenerates Table 3/Fig. 3 and Figs. 11–13;
+//! * the **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas AOT
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them as golden
+//!   references for the simulator's functional results.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! Rust binary is self-contained afterwards. See DESIGN.md for the module
+//! ↔ experiment map and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod amat;
+pub mod axi;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dma;
+pub mod hbm;
+pub mod interconnect;
+pub mod isa;
+pub mod kernels;
+pub mod memory;
+pub mod pe;
+pub mod physical;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+
+pub use config::ClusterConfig;

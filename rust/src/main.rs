@@ -1,0 +1,214 @@
+//! TeraPool reproduction CLI — regenerate any paper table/figure.
+//!
+//! ```text
+//! terapool table4            # hierarchical interconnect analysis
+//! terapool fig14a --fast     # kernel IPC/stalls at reduced scale
+//! terapool all --fast        # everything (reduced scale)
+//! terapool validate          # run kernels + compare vs AOT goldens
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the offline build).
+
+use anyhow::{bail, Result};
+
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{self, Scale};
+use terapool::kernels;
+use terapool::runtime::{assert_allclose, Runtime};
+
+const USAGE: &str = "usage: terapool <experiment> [--fast]
+experiments:
+  table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
+  table5 table6 scaling headline all validate
+  ablate-txtable ablate-addrmap ablate-spill";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let scale = if fast { Scale::Fast } else { Scale::Full };
+    let cmd = args.iter().find(|a| !a.starts_with("--")).cloned();
+    let Some(cmd) = cmd else { bail!("{USAGE}") };
+    match cmd.as_str() {
+        "table3" => coordinator::table3().print(),
+        "table4" => coordinator::table4(scale).print(),
+        "fig8" => coordinator::fig8(scale).print(),
+        "fig9" => coordinator::fig9(scale).print(),
+        "fig11" => coordinator::fig11().print(),
+        "fig12" => coordinator::fig12().print(),
+        "fig13" => coordinator::fig13().print(),
+        "fig14a" => coordinator::fig14a(scale).print(),
+        "fig14b" => coordinator::fig14b(scale).print(),
+        "table5" => coordinator::table5().print(),
+        "table6" => coordinator::table6(scale).print(),
+        "scaling" => coordinator::scaling_analysis().print(),
+        "headline" => coordinator::headline(scale).print(),
+        "all" => {
+            coordinator::table3().print();
+            coordinator::table4(scale).print();
+            coordinator::fig8(scale).print();
+            coordinator::fig9(scale).print();
+            coordinator::fig11().print();
+            coordinator::fig12().print();
+            coordinator::fig13().print();
+            coordinator::fig14a(scale).print();
+            coordinator::fig14b(scale).print();
+            coordinator::table5().print();
+            coordinator::table6(scale).print();
+            coordinator::scaling_analysis().print();
+            coordinator::headline(scale).print();
+        }
+        "validate" => validate(scale)?,
+        "ablate-txtable" => ablate_txtable(scale),
+        "ablate-addrmap" => ablate_addrmap(scale),
+        "ablate-spill" => ablate_spill(scale),
+        other => bail!("unknown experiment {other}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Functional validation: run AXPY/DOTP/GEMM on the simulated cluster and
+/// compare the final L1 image against the PJRT-executed JAX artifacts.
+fn validate(scale: Scale) -> Result<()> {
+    let mut rt = Runtime::with_default_dir()?;
+    let cfg = ClusterConfig::terapool(9);
+
+    // AXPY at artifact size.
+    let n = rt.entry("axpy")?.inputs[1].shape[0];
+    let p = kernels::axpy::AxpyParams { n, alpha: 2.0 };
+    let setup = kernels::axpy::build(&cfg, &p);
+    let x = kernels::axpy::input_x(n);
+    let y = kernels::axpy::input_y(n);
+    let (mut cl, io) = setup.into_cluster(cfg.clone());
+    let stats = cl.run(2_000_000_000);
+    let golden = rt.execute_f32("axpy", &[vec![p.alpha], x, y])?;
+    assert_allclose(&io.read_output(&cl), &golden[0], 1e-5, "axpy vs artifact");
+    println!(
+        "axpy     OK: {} elements match XLA golden (IPC {:.2}, {} cycles)",
+        n, stats.ipc(), stats.cycles
+    );
+
+    // DOTP.
+    let n = rt.entry("dotp")?.inputs[0].shape[0];
+    let p = kernels::dotp::DotpParams { n };
+    let setup = kernels::dotp::build(&cfg, &p);
+    let x = kernels::dotp::input_x(n);
+    let y = kernels::dotp::input_y(n);
+    let (mut cl, io) = setup.into_cluster(cfg.clone());
+    cl.run(2_000_000_000);
+    let golden = rt.execute_f32("dotp", &[x, y])?;
+    let got = io.read_output(&cl)[0];
+    let want = golden[0][0];
+    let tol = want.abs().max(1.0) * 1e-4;
+    anyhow::ensure!(
+        (got - want).abs() < tol,
+        "dotp mismatch: {got} vs {want}"
+    );
+    println!("dotp     OK: {got:.3} matches XLA golden {want:.3}");
+
+    // GEMM (full 256^3 when not --fast).
+    if scale == Scale::Full {
+        let shape = rt.entry("gemm")?.inputs[0].shape.clone();
+        let p = kernels::gemm::GemmParams { m: shape[0], n: shape[1], k: shape[0] };
+        let setup = kernels::gemm::build(&cfg, &p);
+        let a = kernels::gemm::input_a(&p);
+        let b = kernels::gemm::input_b(&p);
+        let (mut cl, io) = setup.into_cluster(cfg.clone());
+        let stats = cl.run(2_000_000_000);
+        let golden = rt.execute_f32("gemm", &[a, b])?;
+        assert_allclose(&io.read_output(&cl), &golden[0], 2e-2, "gemm vs artifact");
+        println!(
+            "gemm     OK: {}x{} result matches XLA golden (IPC {:.2})",
+            p.m, p.n, stats.ipc()
+        );
+    }
+
+    // SpMMadd: densified CSR result vs the dense-add artifact.
+    let shape = rt.entry("spmmadd")?.inputs[0].shape.clone();
+    let sp = kernels::spmmadd::SpmmaddParams {
+        rows: shape[0],
+        cols: shape[1],
+        nnz_per_row: 8,
+        seed: 0x5EED,
+    };
+    let (setup, layout) = kernels::spmmadd::build_with_layout(&cfg, &sp);
+    let (mut cl, _io) = setup.into_cluster(cfg.clone());
+    cl.run(2_000_000_000);
+    // Densify the simulated CSR output.
+    let vals = cl.l1.read_slice(layout.c_val_base, layout.c_ref.nnz());
+    let cols = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
+    let mut dense = vec![0.0f32; sp.rows * sp.cols];
+    for r in 0..sp.rows {
+        for i in layout.c_ref.row_ptr[r] as usize..layout.c_ref.row_ptr[r + 1] as usize {
+            dense[r * sp.cols + cols[i] as usize] += vals[i];
+        }
+    }
+    let golden = rt.execute_f32("spmmadd", &[layout.a.to_dense(), layout.b.to_dense()])?;
+    assert_allclose(&dense, &golden[0], 1e-5, "spmmadd vs artifact");
+    println!("spmmadd  OK: densified CSR sum matches XLA golden");
+
+    println!("\nvalidate: all cluster-simulator results match the AOT XLA goldens");
+    Ok(())
+}
+
+fn ablate_txtable(scale: Scale) {
+    use terapool::report::{f2, int, Table};
+    let mut t = Table::new(
+        "Ablation — LSU transaction-table depth (GEMM)",
+        &["Entries", "IPC", "LSU stall %", "Cycles"],
+    );
+    for entries in [1usize, 2, 4, 8, 16] {
+        let mut cfg = ClusterConfig::terapool(9);
+        cfg.tx_table_entries = entries;
+        let (s, _) = coordinator::run_kernel(&cfg, "gemm", scale);
+        t.row(vec![
+            int(entries as u64),
+            f2(s.ipc()),
+            terapool::report::pct(s.fraction(s.stall_lsu)),
+            int(s.cycles),
+        ]);
+    }
+    t.print();
+}
+
+fn ablate_addrmap(scale: Scale) {
+    use terapool::report::{f2, Table};
+    let mut t = Table::new(
+        "Ablation — sequential-region size (AXPY AMAT, barrier traffic local vs remote)",
+        &["Seq words/Tile", "IPC", "AMAT", "Local req %"],
+    );
+    for seq in [256usize, 1024, 4096] {
+        let mut cfg = ClusterConfig::terapool(9);
+        cfg.seq_words_per_tile = seq;
+        let (s, _) = coordinator::run_kernel(&cfg, "axpy", scale);
+        let total: u64 = s.reqs_per_class.iter().sum();
+        t.row(vec![
+            terapool::report::int(seq as u64),
+            f2(s.ipc()),
+            f2(s.amat),
+            terapool::report::pct(s.reqs_per_class[0] as f64 / total as f64),
+        ]);
+    }
+    t.print();
+}
+
+fn ablate_spill(scale: Scale) {
+    use terapool::report::{f1, f2, Table};
+    let mut t = Table::new(
+        "Ablation — spill-register configs: latency vs frequency (GEMM)",
+        &["Config", "MHz", "IPC", "Cycles", "Runtime µs", "GFLOP/s"],
+    );
+    for rg in [7u32, 9, 11] {
+        let cfg = ClusterConfig::terapool(rg);
+        let (s, _) = coordinator::run_kernel(&cfg, "gemm", scale);
+        let us = s.cycles as f64 / cfg.freq_mhz;
+        t.row(vec![
+            cfg.name.clone(),
+            f1(cfg.freq_mhz),
+            f2(s.ipc()),
+            terapool::report::int(s.cycles),
+            f1(us),
+            f1(s.gflops()),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,276 @@
+//! Shared-L1 SPM: banked storage plus the paper's **hybrid address
+//! mapping scheme** (Sec. 5.4, Fig. 8a).
+//!
+//! The word-addressed L1 space is split into:
+//!
+//! * a **sequential region** (first `seq_words_per_tile × num_tiles`
+//!   words): Tile-private ranges for stacks/private data; requests stay in
+//!   the issuing PE's Tile. Within a Tile the words interleave over the
+//!   Tile's banks.
+//! * an **interleaved region** (the rest): word-level interleaving across
+//!   *all* banks, distributing data evenly and minimizing conflicts.
+//!
+//! The map is pure address scrambling (the paper: "wire crossings and a
+//! multiplexer"), so it is a bijection — property-tested below.
+
+use crate::config::ClusterConfig;
+
+/// Physical location of a word: bank index and row within the bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankAddr {
+    pub bank: u32,
+    pub row: u32,
+}
+
+/// Address map resolved from a [`ClusterConfig`].
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    num_banks: usize,
+    banks_per_tile: usize,
+    seq_words_per_tile: usize,
+    seq_rows_per_bank: usize,
+    seq_words_total: usize,
+    words_per_bank: usize,
+    /// log2(num_banks) when it is a power of two (§Perf: the interleaved
+    /// mapping is on the per-request hot path; all paper configurations
+    /// have power-of-two bank counts, so the div/mod reduce to shifts).
+    nb_shift: Option<u32>,
+}
+
+impl AddressMap {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let nb = cfg.num_banks();
+        let m = AddressMap {
+            num_banks: nb,
+            banks_per_tile: cfg.banks_per_tile(),
+            seq_words_per_tile: cfg.seq_words_per_tile,
+            seq_rows_per_bank: cfg.seq_rows_per_bank(),
+            seq_words_total: cfg.seq_words_total(),
+            words_per_bank: cfg.words_per_bank,
+            nb_shift: if nb.is_power_of_two() { Some(nb.trailing_zeros()) } else { None },
+        };
+        assert!(
+            m.seq_rows_per_bank < m.words_per_bank,
+            "sequential region must leave interleaved rows"
+        );
+        assert_eq!(
+            m.seq_words_per_tile % m.banks_per_tile,
+            0,
+            "seq region must fill whole bank rows per tile"
+        );
+        m
+    }
+
+    /// Total words in L1.
+    pub fn l1_words(&self) -> usize {
+        self.num_banks * self.words_per_bank
+    }
+
+    /// First word of the interleaved region.
+    pub fn interleaved_base(&self) -> u32 {
+        self.seq_words_total as u32
+    }
+
+    /// First sequential-region word of a Tile (its private range).
+    pub fn seq_base_of_tile(&self, tile: usize) -> u32 {
+        (tile * self.seq_words_per_tile) as u32
+    }
+
+    /// Map a word address to its bank and row.
+    pub fn map(&self, word: u32) -> BankAddr {
+        let w = word as usize;
+        if w < self.seq_words_total {
+            // Sequential region: per-Tile private, interleaved over the
+            // Tile's own banks only.
+            let tile = w / self.seq_words_per_tile;
+            let off = w % self.seq_words_per_tile;
+            let bank = tile * self.banks_per_tile + off % self.banks_per_tile;
+            let row = off / self.banks_per_tile;
+            BankAddr { bank: bank as u32, row: row as u32 }
+        } else {
+            // Interleaved region: word-level across all banks, rows above
+            // the reserved sequential rows.
+            let off = w - self.seq_words_total;
+            let (bank, quot) = match self.nb_shift {
+                Some(sh) => (off & (self.num_banks - 1), off >> sh),
+                None => (off % self.num_banks, off / self.num_banks),
+            };
+            let row = self.seq_rows_per_bank + quot;
+            assert!(
+                row < self.words_per_bank,
+                "word address {word} beyond L1 capacity"
+            );
+            BankAddr { bank: bank as u32, row: row as u32 }
+        }
+    }
+
+    /// SubGroup that owns an interleaved-region word (for the iDMA midend
+    /// split, Sec. 5.4: 256 banks per SubGroup, one word per bank-row →
+    /// contiguous 256-word runs alternate SubGroups).
+    pub fn subgroup_of_interleaved(&self, word: u32, banks_per_subgroup: usize) -> usize {
+        let off = word as usize - self.seq_words_total;
+        (off % self.num_banks) / banks_per_subgroup
+    }
+}
+
+/// The banked L1 storage: `num_banks` arrays of f32 words. Functional
+/// state only — timing (ports, conflicts) is owned by the interconnect.
+#[derive(Debug, Clone)]
+pub struct L1Memory {
+    pub map: AddressMap,
+    banks: Vec<Vec<f32>>,
+}
+
+impl L1Memory {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let map = AddressMap::new(cfg);
+        L1Memory {
+            banks: vec![vec![0.0; cfg.words_per_bank]; cfg.num_banks()],
+            map,
+        }
+    }
+
+    pub fn read_bank(&self, at: BankAddr) -> f32 {
+        self.banks[at.bank as usize][at.row as usize]
+    }
+    pub fn write_bank(&mut self, at: BankAddr, v: f32) {
+        self.banks[at.bank as usize][at.row as usize] = v;
+    }
+    /// Atomic fetch-and-add at the bank (returns the *new* value).
+    pub fn amo_add_bank(&mut self, at: BankAddr, v: f32) -> f32 {
+        let slot = &mut self.banks[at.bank as usize][at.row as usize];
+        *slot += v;
+        *slot
+    }
+
+    /// Word-addressed accessors (host/DMA side).
+    pub fn read(&self, word: u32) -> f32 {
+        self.read_bank(self.map.map(word))
+    }
+    pub fn write(&mut self, word: u32, v: f32) {
+        self.write_bank(self.map.map(word), v)
+    }
+
+    /// Bulk host-side copy-in/out, used by test harnesses and the DMA
+    /// backends' functional data movement.
+    pub fn write_slice(&mut self, base: u32, data: &[f32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.write(base + i as u32, v);
+        }
+    }
+    pub fn read_slice(&self, base: u32, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read(base + i as u32)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn map() -> AddressMap {
+        AddressMap::new(&ClusterConfig::terapool(9))
+    }
+
+    #[test]
+    fn sequential_region_stays_in_tile() {
+        let cfg = ClusterConfig::terapool(9);
+        let m = map();
+        for tile in [0usize, 1, 63, 127] {
+            let base = m.seq_base_of_tile(tile);
+            for off in 0..cfg.seq_words_per_tile as u32 {
+                let at = m.map(base + off);
+                assert_eq!(cfg.tile_of_bank(at.bank as usize), tile);
+                assert!((at.row as usize) < cfg.seq_rows_per_bank());
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_region_spreads_across_all_banks() {
+        let m = map();
+        let base = m.interleaved_base();
+        // 4096 consecutive words hit 4096 distinct banks.
+        let mut seen = vec![false; 4096];
+        for i in 0..4096 {
+            let at = m.map(base + i);
+            assert!(!seen[at.bank as usize]);
+            seen[at.bank as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn subgroup_split_matches_paper() {
+        // 256 banks per SubGroup → contiguous 256-word runs per SubGroup,
+        // cycling through all 16 SubGroups every 4096 words (Sec. 5.4).
+        let cfg = ClusterConfig::terapool(9);
+        let m = map();
+        let base = m.interleaved_base();
+        let bps = cfg.banks_per_subgroup();
+        assert_eq!(bps, 256);
+        for run in 0..16u32 {
+            for w in 0..256u32 {
+                assert_eq!(
+                    m.subgroup_of_interleaved(base + run * 256 + w, bps),
+                    run as usize
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l1_read_write_roundtrip() {
+        let cfg = ClusterConfig::tiny();
+        let mut l1 = L1Memory::new(&cfg);
+        let base = l1.map.interleaved_base();
+        let data: Vec<f32> = (0..500).map(|i| i as f32 * 0.5).collect();
+        l1.write_slice(base, &data);
+        assert_eq!(l1.read_slice(base, 500), data);
+    }
+
+    #[test]
+    fn amo_add_accumulates() {
+        let cfg = ClusterConfig::tiny();
+        let mut l1 = L1Memory::new(&cfg);
+        let at = l1.map.map(l1.map.interleaved_base());
+        assert_eq!(l1.amo_add_bank(at, 2.5), 2.5);
+        assert_eq!(l1.amo_add_bank(at, 1.5), 4.0);
+        assert_eq!(l1.read_bank(at), 4.0);
+    }
+
+    /// Property: the hybrid map is a bijection over the full address
+    /// space (randomized pairs + in-range checks; offline stand-in for
+    /// proptest, see rust/src/rng.rs).
+    #[test]
+    fn map_is_injective_property() {
+        let cfg = ClusterConfig::terapool(9);
+        let m = map();
+        let mut rng = crate::rng::Rng::seed_from_u64(0xB17);
+        for _ in 0..20_000 {
+            let a = rng.gen_range(1 << 20) as u32;
+            let b = rng.gen_range(1 << 20) as u32;
+            let (ma, mb) = (m.map(a), m.map(b));
+            assert!((ma.bank as usize) < cfg.num_banks());
+            assert!((ma.row as usize) < cfg.words_per_bank);
+            if a != b {
+                assert_ne!(ma, mb, "collision: {a} and {b} -> {ma:?}");
+            }
+        }
+    }
+
+    /// Exhaustive bijection over a tiny config's whole space.
+    #[test]
+    fn map_is_bijective_exhaustive_tiny() {
+        let cfg = ClusterConfig::tiny();
+        let m = AddressMap::new(&cfg);
+        let mut seen = vec![false; cfg.l1_words()];
+        for w in 0..cfg.l1_words() as u32 {
+            let at = m.map(w);
+            let flat = at.bank as usize * cfg.words_per_bank + at.row as usize;
+            assert!(!seen[flat], "word {w} collides");
+            seen[flat] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "map must be onto");
+    }
+}

@@ -1,0 +1,442 @@
+//! The processing element: a Snitch-like single-issue, single-stage
+//! RV32IMA(+Xpulpimg, zfinx) core with a scoreboard and an LSU transaction
+//! table (Sec. 4.1, Fig. 4).
+//!
+//! Modeled behaviour that determines the paper's results:
+//!
+//! * **single issue**: at most one instruction leaves the front end per
+//!   cycle;
+//! * **non-blocking loads**: loads/stores allocate a transaction-table
+//!   entry and retire out of order; the scoreboard stalls any consumer of
+//!   a register whose load is still in flight (RAW) and any reuse of a
+//!   pending destination (WAW);
+//! * **LSU stalls** when the transaction table (8 entries in TeraPool) is
+//!   full;
+//! * a taken **branch** costs one refetch bubble (single-stage core);
+//! * **barrier/WFI**: arrival is an atomic fetch&add on the Tile-local
+//!   counter, then the core sleeps until the cluster's wake-up broadcast.
+
+use crate::isa::{Op, OpClass, Program, CTRL_BUBBLE, NUM_REGS};
+
+/// Why the PE could not issue this cycle (Fig. 14a stall taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallCause {
+    /// Operand (or pending destination) still owned by an in-flight load.
+    Raw,
+    /// Transaction table full.
+    Lsu,
+    /// Refetch bubble after a taken branch.
+    Ctrl,
+    /// Barrier WFI / DMA wait.
+    Synch,
+}
+
+/// What the cluster must do on behalf of the PE this cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Nothing to route (issued a core-internal op, stalled, or halted).
+    None,
+    /// Route a load to L1.
+    Load { rd: u8, addr: u32 },
+    /// Route a store to L1.
+    Store { value: f32, addr: u32 },
+    /// Route an atomic fetch-and-add to L1.
+    AmoAdd { value: f32, addr: u32 },
+    /// Barrier arrival: the cluster issues the Tile-local atomic and
+    /// parks the PE until the release broadcast.
+    BarrierArrive { id: u16 },
+    /// Trigger DMA descriptor `id` (iDMA frontend).
+    DmaStart { id: u16 },
+    /// Park the PE until DMA descriptor `id` retires.
+    DmaWait { id: u16 },
+}
+
+/// Execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeState {
+    Running,
+    /// Arrival atomic in flight or waiting for the release broadcast.
+    AtBarrier,
+    WaitDma,
+    Halted,
+}
+
+/// Per-PE performance counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeStats {
+    pub issued: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub atomics: u64,
+    pub compute: u64,
+    pub control: u64,
+    pub sync_ops: u64,
+    pub flops: u64,
+    pub stall_raw: u64,
+    pub stall_lsu: u64,
+    pub stall_ctrl: u64,
+    pub stall_synch: u64,
+    /// Cycle at which this PE halted (set by the cluster).
+    pub halt_cycle: u64,
+}
+
+impl PeStats {
+    pub fn stalls_total(&self) -> u64 {
+        self.stall_raw + self.stall_lsu + self.stall_ctrl + self.stall_synch
+    }
+}
+
+/// A Snitch-like PE.
+pub struct Pe {
+    pub id: u32,
+    pub tile: u32,
+    program: Program,
+    pc: usize,
+    regs: [f32; NUM_REGS],
+    /// Bitmask of registers owned by in-flight loads.
+    pending: u32,
+    tx_inflight: u32,
+    tx_cap: u32,
+    bubble: u32,
+    pub state: PeState,
+    pub stats: PeStats,
+}
+
+impl Pe {
+    pub fn new(id: u32, tile: u32, tx_cap: u32, program: Program) -> Self {
+        Pe {
+            id,
+            tile,
+            program,
+            pc: 0,
+            regs: [0.0; NUM_REGS],
+            pending: 0,
+            tx_inflight: 0,
+            tx_cap,
+            bubble: 0,
+            state: PeState::Running,
+            stats: PeStats::default(),
+        }
+    }
+
+    #[inline]
+    fn is_pending(&self, r: u8) -> bool {
+        self.pending & (1 << r) != 0
+    }
+
+    pub fn reg(&self, r: u8) -> f32 {
+        self.regs[r as usize]
+    }
+
+    pub fn outstanding(&self) -> u32 {
+        self.tx_inflight
+    }
+
+    /// All instructions retired and nothing in flight.
+    pub fn done(&self) -> bool {
+        self.state == PeState::Halted && self.tx_inflight == 0
+    }
+
+    fn stall(&mut self, cause: StallCause) -> Action {
+        match cause {
+            StallCause::Raw => self.stats.stall_raw += 1,
+            StallCause::Lsu => self.stats.stall_lsu += 1,
+            StallCause::Ctrl => self.stats.stall_ctrl += 1,
+            StallCause::Synch => self.stats.stall_synch += 1,
+        }
+        Action::None
+    }
+
+    fn count_issue(&mut self, op: &Op) {
+        self.stats.issued += 1;
+        self.stats.flops += op.flops();
+        match op.class() {
+            OpClass::Load => self.stats.loads += 1,
+            OpClass::Store => self.stats.stores += 1,
+            OpClass::Atomic => self.stats.atomics += 1,
+            OpClass::Compute => self.stats.compute += 1,
+            OpClass::Control => self.stats.control += 1,
+            OpClass::Sync => self.stats.sync_ops += 1,
+        }
+    }
+
+    /// Try to issue one instruction. The cluster routes the returned
+    /// memory/synchronization actions.
+    pub fn try_issue(&mut self) -> Action {
+        match self.state {
+            PeState::Halted => return Action::None,
+            PeState::AtBarrier | PeState::WaitDma => {
+                return self.stall(StallCause::Synch);
+            }
+            PeState::Running => {}
+        }
+        if self.bubble > 0 {
+            self.bubble -= 1;
+            return self.stall(StallCause::Ctrl);
+        }
+        let Some(&op) = self.program.ops.get(self.pc) else {
+            // Fell off the end: treat as halt.
+            self.state = PeState::Halted;
+            return Action::None;
+        };
+        match op {
+            Op::Ld { rd, addr } => {
+                if self.is_pending(rd) {
+                    return self.stall(StallCause::Raw); // WAW on in-flight load
+                }
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.pending |= 1 << rd;
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::Load { rd, addr }
+            }
+            Op::St { rs, addr } => {
+                if self.is_pending(rs) {
+                    return self.stall(StallCause::Raw);
+                }
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::Store { value: self.regs[rs as usize], addr }
+            }
+            Op::AtomAdd { rs, addr } => {
+                if self.is_pending(rs) {
+                    return self.stall(StallCause::Raw);
+                }
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::AmoAdd { value: self.regs[rs as usize], addr }
+            }
+            Op::LdImm { rd, imm } => {
+                if self.is_pending(rd) {
+                    return self.stall(StallCause::Raw);
+                }
+                self.regs[rd as usize] = imm;
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::None
+            }
+            Op::Fmac { rd, ra, rb } | Op::Fnmac { rd, ra, rb } => {
+                if self.is_pending(ra) || self.is_pending(rb) || self.is_pending(rd) {
+                    return self.stall(StallCause::Raw);
+                }
+                let prod = self.regs[ra as usize] * self.regs[rb as usize];
+                if matches!(op, Op::Fmac { .. }) {
+                    self.regs[rd as usize] += prod;
+                } else {
+                    self.regs[rd as usize] -= prod;
+                }
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::None
+            }
+            Op::Mul { rd, ra, rb } | Op::Add { rd, ra, rb } | Op::Sub { rd, ra, rb } => {
+                if self.is_pending(ra) || self.is_pending(rb) || self.is_pending(rd) {
+                    return self.stall(StallCause::Raw);
+                }
+                let (a, b) = (self.regs[ra as usize], self.regs[rb as usize]);
+                self.regs[rd as usize] = match op {
+                    Op::Mul { .. } => a * b,
+                    Op::Add { .. } => a + b,
+                    _ => a - b,
+                };
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::None
+            }
+            Op::Mov { rd, ra } => {
+                if self.is_pending(ra) || self.is_pending(rd) {
+                    return self.stall(StallCause::Raw);
+                }
+                self.regs[rd as usize] = self.regs[ra as usize];
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::None
+            }
+            Op::Alu => {
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::None
+            }
+            Op::Branch => {
+                self.count_issue(&op);
+                self.pc += 1;
+                self.bubble = CTRL_BUBBLE;
+                Action::None
+            }
+            Op::Barrier { id } => {
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                self.state = PeState::AtBarrier;
+                Action::BarrierArrive { id }
+            }
+            Op::DmaStart { id } => {
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::DmaStart { id }
+            }
+            Op::DmaWait { id } => {
+                self.count_issue(&op);
+                self.pc += 1;
+                self.state = PeState::WaitDma;
+                Action::DmaWait { id }
+            }
+            Op::Halt => {
+                self.state = PeState::Halted;
+                Action::None
+            }
+        }
+    }
+
+    /// Load response: write back and release the register + table entry.
+    pub fn complete_load(&mut self, rd: u8, value: f32) {
+        debug_assert!(self.is_pending(rd));
+        self.regs[rd as usize] = value;
+        self.pending &= !(1 << rd);
+        debug_assert!(self.tx_inflight > 0);
+        self.tx_inflight -= 1;
+    }
+
+    /// Store/atomic acknowledgement: release the table entry.
+    pub fn complete_ack(&mut self) {
+        debug_assert!(self.tx_inflight > 0);
+        self.tx_inflight -= 1;
+    }
+
+    /// Barrier release broadcast (or DMA completion) received.
+    pub fn wake(&mut self) {
+        debug_assert!(matches!(self.state, PeState::AtBarrier | PeState::WaitDma));
+        self.state = PeState::Running;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Program;
+
+    fn pe_with(ops: Vec<Op>) -> Pe {
+        Pe::new(0, 0, 8, Program { ops })
+    }
+
+    #[test]
+    fn compute_ops_execute_functionally() {
+        let mut pe = pe_with(vec![
+            Op::LdImm { rd: 1, imm: 3.0 },
+            Op::LdImm { rd: 2, imm: 4.0 },
+            Op::LdImm { rd: 3, imm: 10.0 },
+            Op::Fmac { rd: 3, ra: 1, rb: 2 }, // 10 + 12 = 22
+            Op::Sub { rd: 4, ra: 3, rb: 1 },  // 19
+            Op::Halt,
+        ]);
+        for _ in 0..6 {
+            pe.try_issue();
+        }
+        assert_eq!(pe.reg(3), 22.0);
+        assert_eq!(pe.reg(4), 19.0);
+        assert_eq!(pe.state, PeState::Halted);
+        assert_eq!(pe.stats.issued, 5);
+        assert_eq!(pe.stats.flops, 2 + 1);
+    }
+
+    #[test]
+    fn raw_stall_until_load_returns() {
+        let mut pe = pe_with(vec![
+            Op::Ld { rd: 1, addr: 100 },
+            Op::Add { rd: 2, ra: 1, rb: 1 },
+            Op::Halt,
+        ]);
+        assert_eq!(pe.try_issue(), Action::Load { rd: 1, addr: 100 });
+        // Consumer stalls while the load is outstanding.
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.stats.stall_raw, 2);
+        pe.complete_load(1, 21.0);
+        pe.try_issue();
+        assert_eq!(pe.reg(2), 42.0);
+    }
+
+    #[test]
+    fn lsu_stall_when_tx_table_full() {
+        let ops: Vec<Op> = (0..10).map(|i| Op::Ld { rd: i as u8 + 1, addr: i }).collect();
+        let mut pe = pe_with(ops);
+        for _ in 0..8 {
+            assert!(matches!(pe.try_issue(), Action::Load { .. }));
+        }
+        // 9th load: table full (8 entries, Sec. 4.1).
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.stats.stall_lsu, 1);
+        assert_eq!(pe.outstanding(), 8);
+        pe.complete_load(1, 0.0);
+        assert!(matches!(pe.try_issue(), Action::Load { .. }));
+    }
+
+    #[test]
+    fn loads_retire_out_of_order() {
+        let mut pe = pe_with(vec![
+            Op::Ld { rd: 1, addr: 0 },
+            Op::Ld { rd: 2, addr: 1 },
+            Op::Add { rd: 3, ra: 2, rb: 2 }, // depends only on the 2nd load
+            Op::Halt,
+        ]);
+        pe.try_issue();
+        pe.try_issue();
+        pe.complete_load(2, 5.0); // second load returns first
+        pe.try_issue();
+        assert_eq!(pe.reg(3), 10.0);
+        assert_eq!(pe.outstanding(), 1);
+    }
+
+    #[test]
+    fn branch_costs_a_bubble() {
+        let mut pe = pe_with(vec![Op::Branch, Op::Alu, Op::Halt]);
+        pe.try_issue(); // branch
+        assert_eq!(pe.try_issue(), Action::None); // bubble
+        assert_eq!(pe.stats.stall_ctrl, 1);
+        pe.try_issue(); // alu
+        assert_eq!(pe.stats.issued, 2);
+    }
+
+    #[test]
+    fn store_carries_value_and_waw_protection() {
+        let mut pe = pe_with(vec![
+            Op::LdImm { rd: 1, imm: 2.5 },
+            Op::St { rs: 1, addr: 7 },
+            Op::Ld { rd: 1, addr: 9 }, // reuse r1: fine, store already read it
+            Op::Ld { rd: 1, addr: 10 }, // WAW on pending r1 → raw stall
+            Op::Halt,
+        ]);
+        pe.try_issue();
+        assert_eq!(pe.try_issue(), Action::Store { value: 2.5, addr: 7 });
+        assert!(matches!(pe.try_issue(), Action::Load { rd: 1, .. }));
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.stats.stall_raw, 1);
+    }
+
+    #[test]
+    fn barrier_parks_until_wake() {
+        let mut pe = pe_with(vec![Op::Barrier { id: 3 }, Op::Alu, Op::Halt]);
+        assert_eq!(pe.try_issue(), Action::BarrierArrive { id: 3 });
+        assert_eq!(pe.state, PeState::AtBarrier);
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.stats.stall_synch, 1);
+        pe.complete_ack(); // arrival atomic acked
+        pe.wake();
+        assert!(matches!(pe.try_issue(), Action::None)); // Alu issues internally
+        assert_eq!(pe.stats.issued, 2);
+    }
+}

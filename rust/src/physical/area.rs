@@ -1,0 +1,155 @@
+//! Gate-equivalent area model — regenerates **Fig. 12** (hierarchical
+//! area breakdown) and the Sec. 6.1 floorplan figures of merit.
+//!
+//! Unit costs are calibrated so the full TeraPool cluster reproduces the
+//! paper's breakdown: SPM banks largest, Snitch core-complexes split
+//! 7.3 % cores / 9.1 % IPUs / 22 % FP-SSs of cluster area, shared
+//! instruction caches next, hierarchical interconnect only 8.5 % and
+//! HBML 9.2 %.
+
+use crate::amat::HierSpec;
+use crate::config::ClusterConfig;
+
+/// Calibrated unit areas (GE).
+pub mod units {
+    /// SRAM bit (high-density macro, incl. periphery amortized).
+    pub const SPM_GE_PER_BIT: f64 = 0.52;
+    /// Snitch integer pipeline (single-stage RV32IMA).
+    pub const CORE_GE: f64 = 3_560.0;
+    /// Integer processing unit with the Xpulpimg extension.
+    pub const IPU_GE: f64 = 4_440.0;
+    /// FP subsystem (zfinx/zhinx/smallfloat, SIMD f16).
+    pub const FPSS_GE: f64 = 10_730.0;
+    /// Shared FP divide/sqrt unit (2 per Tile).
+    pub const DIVSQRT_GE: f64 = 8_000.0;
+    /// Shared 4 KiB 2-way L1 I$ per Tile + per-core L0 (32 entries).
+    pub const ICACHE_TILE_GE: f64 = 26_000.0;
+    pub const L0_ICACHE_GE: f64 = 1_200.0;
+    /// Hierarchical interconnect, per crossbar leaf node (routing +
+    /// arbitration + spill registers amortized).
+    pub const XBAR_GE_PER_LEAF: f64 = 47.0;
+    /// HBML: per-Tile AXI plumbing + per-SubGroup DMA backend + frontend.
+    pub const AXI_TILE_GE: f64 = 24_000.0;
+    pub const DMA_BACKEND_GE: f64 = 65_000.0;
+    pub const DMA_FRONTEND_GE: f64 = 30_000.0;
+}
+
+/// Area breakdown in GE.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    pub spm: f64,
+    pub cores: f64,
+    pub ipus: f64,
+    pub fpss: f64,
+    pub divsqrt: f64,
+    pub icache: f64,
+    pub interconnect: f64,
+    pub hbml: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.spm
+            + self.cores
+            + self.ipus
+            + self.fpss
+            + self.divsqrt
+            + self.icache
+            + self.interconnect
+            + self.hbml
+    }
+    /// Core-complex total (cores + IPUs + FP-SSs), as Fig. 12 groups it.
+    pub fn cc(&self) -> f64 {
+        self.cores + self.ipus + self.fpss
+    }
+}
+
+/// Compute the breakdown for a cluster configuration.
+pub fn breakdown(cfg: &ClusterConfig) -> AreaBreakdown {
+    use units::*;
+    let pes = cfg.num_pes() as f64;
+    let tiles = cfg.num_tiles() as f64;
+    let sgs = cfg.hierarchy.num_subgroups() as f64;
+    let spec = HierSpec {
+        alpha: cfg.hierarchy.pes_per_tile,
+        beta: cfg.hierarchy.tiles_per_subgroup,
+        gamma: cfg.hierarchy.subgroups_per_group,
+        delta: cfg.hierarchy.groups,
+        banking: cfg.banking_factor,
+    };
+    AreaBreakdown {
+        spm: cfg.l1_bytes() as f64 * 8.0 * SPM_GE_PER_BIT,
+        cores: pes * CORE_GE,
+        ipus: pes * IPU_GE,
+        fpss: pes * FPSS_GE,
+        divsqrt: tiles * 2.0 * DIVSQRT_GE,
+        icache: tiles * ICACHE_TILE_GE + pes * L0_ICACHE_GE,
+        interconnect: spec.total_complexity() as f64 * XBAR_GE_PER_LEAF,
+        hbml: tiles * AXI_TILE_GE + sgs * DMA_BACKEND_GE + DMA_FRONTEND_GE,
+    }
+}
+
+/// Floorplan figures of merit (Sec. 6.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Floorplan {
+    /// Die area (mm²).
+    pub die_mm2: f64,
+    /// mm² per core including top-level routing channels.
+    pub mm2_per_core: f64,
+    /// mm² per core inside a SubGroup block.
+    pub mm2_per_core_block: f64,
+    /// Fraction of the die spent on routing channels.
+    pub channel_fraction: f64,
+}
+
+/// The paper's GF12 floorplan numbers for TeraPool.
+pub fn terapool_floorplan() -> Floorplan {
+    Floorplan {
+        die_mm2: 81.8,
+        mm2_per_core: 0.079,
+        mm2_per_core_block: 0.047,
+        channel_fraction: 1.0 - 0.047 / 0.079, // ≈ 40 % (Sec. 9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_fractions_reproduce() {
+        let b = breakdown(&ClusterConfig::terapool(9));
+        let t = b.total();
+        let frac = |x: f64| 100.0 * x / t;
+        // Paper Fig. 12 anchor percentages (± small tolerance).
+        assert!((frac(b.cores) - 7.3).abs() < 1.0, "cores {}", frac(b.cores));
+        assert!((frac(b.ipus) - 9.1).abs() < 1.0, "ipus {}", frac(b.ipus));
+        assert!((frac(b.fpss) - 22.0).abs() < 2.0, "fpss {}", frac(b.fpss));
+        assert!((frac(b.interconnect) - 8.5).abs() < 1.5, "icn {}", frac(b.interconnect));
+        assert!((frac(b.hbml) - 9.2).abs() < 2.0, "hbml {}", frac(b.hbml));
+        // SPM is the single largest component.
+        assert!(b.spm > b.fpss && b.spm > b.icache && b.spm > b.interconnect);
+    }
+
+    #[test]
+    fn interconnect_and_hbml_are_minor() {
+        // The headline claim: scale-up does NOT drown in interconnect.
+        let b = breakdown(&ClusterConfig::terapool(9));
+        assert!(b.interconnect / b.total() < 0.10);
+        assert!(b.hbml / b.total() < 0.11);
+    }
+
+    #[test]
+    fn smaller_cluster_has_smaller_area() {
+        let tp = breakdown(&ClusterConfig::terapool(9)).total();
+        let mp = breakdown(&ClusterConfig::mempool()).total();
+        assert!(mp < tp / 2.0);
+    }
+
+    #[test]
+    fn floorplan_channel_overhead_matches_sec9() {
+        let f = terapool_floorplan();
+        assert!((f.channel_fraction - 0.40).abs() < 0.02);
+        assert!((f.mm2_per_core * 1024.0 - f.die_mm2).abs() < 1.0);
+    }
+}

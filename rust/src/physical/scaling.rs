@@ -1,0 +1,151 @@
+//! Scale-up analysis of Sec. 2: arithmetic-intensity growth under cluster
+//! scaling (Eq. 1) and Kung's balance condition (Eq. 2), plus the
+//! tiling-driven main-memory traffic model behind **Table 6**.
+
+/// Arithmetic intensity of an m×m MatMul tile: AI = m³ / 3m² = m/3, with
+/// W = 3m² words resident (Eq. 1's example).
+pub fn matmul_ai(w_words: f64) -> f64 {
+    (w_words / 3.0).sqrt() / 3.0f64.sqrt()
+}
+
+/// Eq. (1): scaling the cluster by S scales W linearly and AI by √S.
+pub fn scaled_ai(w_words: f64, s: f64) -> f64 {
+    matmul_ai(s * w_words)
+}
+
+/// Eq. (2): Kung's balance — the cluster is *not* main-memory bound when
+/// `L + W/BW < (AI·W) / (N_pes·U)` (left: transfer time, right: compute
+/// time per tile).
+#[derive(Debug, Clone, Copy)]
+pub struct BalanceInput {
+    /// Main-memory latency (cycles).
+    pub l: f64,
+    /// Problem tile size in L1 (words).
+    pub w: f64,
+    /// Cluster↔main-memory bandwidth (words/cycle).
+    pub bw: f64,
+    /// Arithmetic intensity (ops/word).
+    pub ai: f64,
+    pub n_pes: f64,
+    /// Per-PE utilization.
+    pub u: f64,
+}
+
+pub fn transfer_cycles(b: &BalanceInput) -> f64 {
+    b.l + b.w / b.bw
+}
+
+pub fn compute_cycles(b: &BalanceInput) -> f64 {
+    b.ai * b.w / (b.n_pes * b.u)
+}
+
+pub fn is_balanced(b: &BalanceInput) -> bool {
+    transfer_cycles(b) < compute_cycles(b)
+}
+
+/// Scale a balance point by S: W and BW and N_pes scale linearly, AI by
+/// √S, L and U constant (the Sec. 2.1 argument).
+pub fn scale(b: &BalanceInput, s: f64) -> BalanceInput {
+    BalanceInput {
+        l: b.l,
+        w: b.w * s,
+        bw: b.bw * s,
+        ai: b.ai * s.sqrt(),
+        n_pes: b.n_pes * s,
+        u: b.u,
+    }
+}
+
+// -------------------------------------------------------------------
+// Table 6: main-memory Byte/FLOP of tiled GEMM vs cluster L1 capacity
+// -------------------------------------------------------------------
+
+/// Largest square double-buffered GEMM tile edge fitting an L1 of
+/// `l1_bytes`: 3 operands × 2 buffers × m² × 4 B ≤ capacity.
+pub fn max_tile_edge(l1_bytes: usize) -> usize {
+    ((l1_bytes as f64 / (3.0 * 2.0 * 4.0)).sqrt()) as usize
+}
+
+/// Main-memory Byte/FLOP of output-stationary tiled GEMM with tile edge
+/// m: each output tile loads an m×K panel of A and K×m of B →
+/// 2·4·m·K bytes for 2·m²·K FLOP = 4/m.
+pub fn gemm_bytes_per_flop(tile_edge: usize) -> f64 {
+    4.0 / tile_edge as f64
+}
+
+/// AXPY moves 3 words (2 in, 1 out) per 2 FLOP regardless of tiling.
+pub fn axpy_bytes_per_flop() -> f64 {
+    3.0 * 4.0 / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ai_grows_with_sqrt_s() {
+        let w = 3.0 * 512.0 * 512.0;
+        let base = matmul_ai(w);
+        for s in [2.0, 4.0, 16.0] {
+            let got = scaled_ai(w, s);
+            assert!((got / base - s.sqrt()).abs() < 1e-9, "s={s}");
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_transfer_and_grows_compute_margin() {
+        // The Sec. 2.1 claim: as S grows the inequality holds for larger L
+        // and smaller BW.
+        let b = BalanceInput {
+            l: 500.0,
+            w: 3.0 * 128.0 * 128.0,
+            bw: 256.0,
+            ai: matmul_ai(3.0 * 128.0 * 128.0),
+            n_pes: 64.0,
+            u: 0.8,
+        };
+        let b4 = scale(&b, 4.0);
+        let b16 = scale(&b, 16.0);
+        // W/BW ratio unchanged; compute side grows by √S.
+        assert!((b.w / b.bw - b16.w / b16.bw).abs() < 1e-9);
+        let margin = |x: &BalanceInput| compute_cycles(x) - transfer_cycles(x);
+        assert!(margin(&b4) > margin(&b));
+        assert!(margin(&b16) > margin(&b4));
+    }
+
+    #[test]
+    fn table6_byte_per_flop_ordering() {
+        // TeraPool (4 MiB) ≪ MemPool (1 MiB) ≪ Occamy (128 KiB).
+        let tp = gemm_bytes_per_flop(max_tile_edge(4 * 1024 * 1024));
+        let mp = gemm_bytes_per_flop(max_tile_edge(1024 * 1024));
+        let oc = gemm_bytes_per_flop(max_tile_edge(128 * 1024));
+        assert!(tp < mp && mp < oc);
+        // Paper Table 6: 0.009 / 0.016 / 0.062 — same decade & ordering,
+        // ratios ≈ 1 : 2 : ~6–7.
+        assert!((tp - 0.009).abs() < 0.003, "terapool {tp}");
+        assert!((mp - 0.016).abs() < 0.006, "mempool {mp}");
+        assert!((oc - 0.062).abs() < 0.02, "occamy {oc}");
+    }
+
+    #[test]
+    fn axpy_byte_per_flop_constant() {
+        assert_eq!(axpy_bytes_per_flop(), 6.0);
+    }
+
+    #[test]
+    fn bigger_cluster_tolerates_higher_latency() {
+        // Find the max L each scale tolerates; it must grow with S.
+        let base = BalanceInput {
+            l: 0.0,
+            w: 3.0 * 256.0 * 256.0,
+            bw: 512.0,
+            ai: matmul_ai(3.0 * 256.0 * 256.0),
+            n_pes: 256.0,
+            u: 0.8,
+        };
+        let max_l = |b: &BalanceInput| compute_cycles(b) - b.w / b.bw;
+        let l1 = max_l(&base);
+        let l4 = max_l(&scale(&base, 4.0));
+        assert!(l4 > 2.0 * l1, "L tolerance should grow ~√S·: {l1} {l4}");
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: loads the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt`)
+//! and executes them on the XLA CPU client as **golden references** for
+//! the cluster simulator's functional results.
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+//!
+//! Artifacts are compiled once per process and the executables reused;
+//! Python never runs here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Input descriptor from `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ManifestInput {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<ManifestInput>,
+}
+
+/// Parse the line-oriented `manifest.txt` emitted by python/compile/aot.py:
+///
+/// ```text
+/// artifact <name> <file> <sha256>
+/// input <name> <dtype> <d0,d1,...|scalar>
+/// ```
+pub fn parse_manifest(text: &str) -> Result<HashMap<String, ManifestEntry>> {
+    let mut out: HashMap<String, ManifestEntry> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("artifact") => {
+                let name = it.next().context("artifact: missing name")?;
+                let file = it.next().context("artifact: missing file")?;
+                let sha = it.next().context("artifact: missing sha256")?;
+                out.insert(
+                    name.to_string(),
+                    ManifestEntry {
+                        file: file.to_string(),
+                        sha256: sha.to_string(),
+                        inputs: Vec::new(),
+                    },
+                );
+            }
+            Some("input") => {
+                let name = it.next().context("input: missing name")?;
+                let dtype = it.next().context("input: missing dtype")?;
+                let dims = it.next().context("input: missing dims")?;
+                let shape: Vec<usize> = if dims == "scalar" {
+                    vec![]
+                } else {
+                    dims.split(',')
+                        .map(|d| d.parse().context("bad dim"))
+                        .collect::<Result<_>>()?
+                };
+                out.get_mut(name)
+                    .ok_or_else(|| anyhow!("input before artifact: {name}"))?
+                    .inputs
+                    .push(ManifestInput { shape, dtype: dtype.to_string() });
+            }
+            Some(tok) => {
+                return Err(anyhow!("manifest line {}: unknown record {tok}", lineno + 1))
+            }
+            None => {}
+        }
+    }
+    Ok(out)
+}
+
+/// The AOT artifact runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ManifestEntry>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Locate the artifacts directory: `$TERAPOOL_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (for tests run from rust/).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TERAPOOL_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the given artifacts directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, executables: HashMap::new() })
+    }
+
+    pub fn with_default_dir() -> Result<Self> {
+        Self::new(&artifacts_dir())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 input buffers (shapes validated against
+    /// the manifest). Returns the flattened f32 outputs of the result
+    /// tuple.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let entry = self.entry(name)?.clone();
+        if entry.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in entry.inputs.iter().zip(inputs) {
+            let expect: usize = spec.shape.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "{name}: input shape {:?} wants {expect} elements, got {}",
+                    spec.shape,
+                    data.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // Lowered with return_tuple=True: decompose the result tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Max |a-b| over two slices (golden-comparison helper).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Assert two f32 slices match within tolerance, reporting the worst
+/// element on failure.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = (0usize, 0.0f32);
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let d = (x - y).abs();
+        if d > worst.1 {
+            worst = (i, d);
+        }
+    }
+    assert!(
+        worst.1 <= atol,
+        "{what}: max |Δ| = {} at index {} ({} vs {}), atol {atol}",
+        worst.1,
+        worst.0,
+        a[worst.0],
+        b[worst.0]
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(
+            d.join("manifest.txt").exists(),
+            "artifacts missing — run `make artifacts` first ({d:?})"
+        );
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_all_kernels() {
+        let rt = Runtime::with_default_dir().unwrap();
+        for k in ["gemm", "axpy", "dotp", "fft", "spmmadd"] {
+            assert!(rt.manifest.contains_key(k), "missing {k}");
+        }
+        let gemm = rt.entry("gemm").unwrap();
+        assert_eq!(gemm.inputs.len(), 2);
+        assert_eq!(gemm.inputs[0].shape, vec![256, 256]);
+        assert!(!gemm.sha256.is_empty());
+    }
+
+    #[test]
+    fn axpy_artifact_executes_correctly() {
+        let mut rt = Runtime::with_default_dir().unwrap();
+        let n = rt.entry("axpy").unwrap().inputs[1].shape[0];
+        let alpha = vec![2.0f32];
+        let x: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+        let out = rt.execute_f32("axpy", &[alpha.clone(), x.clone(), y.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        for i in (0..n).step_by(1771) {
+            let want = 2.0 * x[i] + y[i];
+            assert!((out[0][i] - want).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn spmmadd_artifact_is_elementwise_add() {
+        let mut rt = Runtime::with_default_dir().unwrap();
+        let shape = rt.entry("spmmadd").unwrap().inputs[0].shape.clone();
+        let n: usize = shape.iter().product();
+        let a: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i % 11) as f32 * 0.5).collect();
+        let out = rt.execute_f32("spmmadd", &[a.clone(), b.clone()]).unwrap();
+        for i in (0..n).step_by(997) {
+            assert!((out[0][i] - (a[i] + b[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let mut rt = Runtime::with_default_dir().unwrap();
+        let err = rt.execute_f32("axpy", &[vec![1.0], vec![1.0; 3], vec![1.0; 3]]);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Small statistics helpers shared by the simulator and the models.
+
+/// Online mean/min/max accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+}
+
+/// Fixed-bin latency histogram (bin per cycle, saturating last bin).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(max: usize) -> Self {
+        Histogram { bins: vec![0; max + 1] }
+    }
+    pub fn add(&mut self, v: usize) {
+        let i = v.min(self.bins.len() - 1);
+        self.bins[i] += 1;
+    }
+    pub fn count(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let s: u64 = self.bins.iter().enumerate().map(|(i, &c)| i as u64 * c).sum();
+        s as f64 / n as f64
+    }
+    pub fn percentile(&self, p: f64) -> usize {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (p * n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return i;
+            }
+        }
+        self.bins.len() - 1
+    }
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+}
+
+/// Binomial(n, p) probability mass function P(X = k) — the arbitration
+/// contention primitive of the paper's AMAT model (Sec. 3.1).
+pub fn binomial_pmf(n: usize, p: f64, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    // Multiplicative evaluation, numerically stable for the n ≤ 4096
+    // range used here.
+    let mut c = 1.0f64;
+    for i in 0..k {
+        c *= (n - i) as f64 / (i + 1) as f64;
+    }
+    c * p.powi(k as i32) * (1.0 - p).powi((n - k) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_tracks_extremes() {
+        let mut s = Summary::default();
+        for x in [2.0, 8.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 8.0);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_mean_and_percentile() {
+        let mut h = Histogram::new(16);
+        for v in [1, 1, 3, 5] {
+            h.add(v);
+        }
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(h.percentile(0.5), 1);
+        assert_eq!(h.percentile(1.0), 5);
+    }
+
+    #[test]
+    fn binomial_sums_to_one() {
+        for &(n, p) in &[(8usize, 0.3), (32, 0.9), (1024, 0.01)] {
+            let s: f64 = (0..=n).map(|k| binomial_pmf(n, p, k)).sum();
+            assert!((s - 1.0).abs() < 1e-9, "n={n} p={p} sum={s}");
+        }
+    }
+
+    #[test]
+    fn binomial_matches_hand_values() {
+        // Binomial(2, 0.5): [0.25, 0.5, 0.25]
+        assert!((binomial_pmf(2, 0.5, 0) - 0.25).abs() < 1e-12);
+        assert!((binomial_pmf(2, 0.5, 1) - 0.5).abs() < 1e-12);
+        assert!((binomial_pmf(2, 0.5, 2) - 0.25).abs() < 1e-12);
+    }
+}

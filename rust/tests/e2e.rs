@@ -1,0 +1,162 @@
+//! Integration: cross-module behaviours that no unit test covers —
+//! kernels × interconnect × barriers × DMA × stats on multi-cluster
+//! configurations, plus failure injection.
+
+use terapool::cluster::Cluster;
+use terapool::config::ClusterConfig;
+use terapool::coordinator::{run_kernel, Scale};
+use terapool::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
+use terapool::isa::{Op, Program};
+use terapool::kernels::axpy;
+
+#[test]
+fn axpy_runs_on_all_three_table6_clusters() {
+    for cfg in [
+        ClusterConfig::tiny(),
+        ClusterConfig::mempool(),
+        ClusterConfig::occamy(),
+    ] {
+        let n = cfg.num_banks() * 8;
+        let p = axpy::AxpyParams { n, alpha: 3.0 };
+        let want = axpy::reference(&p);
+        let (mut cl, io) = axpy::build(&cfg, &p).into_cluster(cfg.clone());
+        let stats = cl.run(100_000_000);
+        assert_eq!(io.read_output(&cl), want, "{}", cfg.name);
+        assert!(stats.ipc() > 0.5, "{}: ipc {}", cfg.name, stats.ipc());
+    }
+}
+
+#[test]
+fn kernel_suite_runs_on_full_terapool_fast_scale() {
+    let cfg = ClusterConfig::terapool(9);
+    for k in ["axpy", "dotp"] {
+        let (s, name) = run_kernel(&cfg, k, Scale::Fast);
+        assert!(s.ipc() > 0.2, "{name}: ipc {}", s.ipc());
+        assert!(s.instructions > 0);
+    }
+}
+
+#[test]
+fn spill_register_tradeoff_latency_vs_frequency() {
+    // More spill registers (11-cycle remote) cost cycles but buy MHz —
+    // wall-clock for a remote-heavy workload must stay within ~20 %.
+    let mut res = Vec::new();
+    for rg in [7u32, 11] {
+        let cfg = ClusterConfig::terapool(rg);
+        let (s, _) = run_kernel(&cfg, "axpy", Scale::Fast);
+        res.push((s.cycles, cfg.freq_mhz, s.cycles as f64 / cfg.freq_mhz));
+    }
+    let (c7, _, us7) = res[0];
+    let (c11, _, us11) = res[1];
+    assert!(c11 >= c7, "higher latency ⇒ not fewer cycles");
+    assert!(us11 < us7 * 1.25, "frequency gain bounds the runtime loss");
+}
+
+#[test]
+fn dma_failure_injection_unknown_descriptor_panics() {
+    let cfg = ClusterConfig::tiny();
+    let progs: Vec<Program> = (0..cfg.num_pes())
+        .map(|i| {
+            let mut p = Program::new();
+            if i == 0 {
+                p.push(Op::DmaStart { id: 7 }); // never registered
+            }
+            p.halt();
+            p
+        })
+        .collect();
+    let mut cl = Cluster::new(cfg, progs).with_dma();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.run(10_000);
+    }));
+    assert!(r.is_err(), "starting an unregistered descriptor must panic");
+}
+
+#[test]
+fn cluster_without_dma_rejects_dma_traces() {
+    let cfg = ClusterConfig::tiny();
+    let progs: Vec<Program> = (0..cfg.num_pes())
+        .map(|i| {
+            let mut p = Program::new();
+            if i == 0 {
+                p.push(Op::DmaStart { id: 0 });
+            }
+            p.halt();
+            p
+        })
+        .collect();
+    let mut cl = Cluster::new(cfg, progs);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.run(10_000);
+    }));
+    assert!(r.is_err());
+}
+
+#[test]
+fn deadlock_detection_reports_unfinished_cluster() {
+    // A barrier that not every PE reaches must trip the run() guard.
+    let cfg = ClusterConfig::tiny();
+    let progs: Vec<Program> = (0..cfg.num_pes())
+        .map(|i| {
+            let mut p = Program::new();
+            if i != 0 {
+                p.barrier(0); // PE 0 skips the barrier
+            }
+            p.halt();
+            p
+        })
+        .collect();
+    let mut cl = Cluster::new(cfg, progs);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.run(5_000);
+    }));
+    assert!(r.is_err(), "half-arrived barrier must be flagged as deadlock");
+}
+
+#[test]
+fn dma_roundtrip_preserves_data_through_hbm_image() {
+    hbm_image_clear();
+    let cfg = ClusterConfig::tiny();
+    let mut l1 = terapool::memory::L1Memory::new(&cfg);
+    let mut dma = terapool::dma::DmaSubsystem::new(&cfg);
+    let base = l1.map.interleaved_base();
+    let data: Vec<f32> = (0..2048).map(|i| (i as f32).sin()).collect();
+    hbm_image_stage(0, &data);
+    let din = dma.register(DmaDescriptor { l1_word: base, mem_byte: 0, words: 2048, to_l1: true });
+    let dout = dma.register(DmaDescriptor {
+        l1_word: base,
+        mem_byte: 0x100000,
+        words: 2048,
+        to_l1: false,
+    });
+    dma.start(din, 0);
+    let mut now = 0;
+    while !dma.is_done(din) {
+        dma.step(now, &mut l1);
+        now += 1;
+    }
+    dma.start(dout, now);
+    while !dma.is_done(dout) {
+        dma.step(now, &mut l1);
+        now += 1;
+    }
+    assert_eq!(terapool::dma::hbm_image_fetch(0x100000, 2048), data);
+}
+
+#[test]
+fn stats_fractions_are_consistent() {
+    let cfg = ClusterConfig::tiny();
+    let (s, _) = run_kernel(
+        &ClusterConfig::terapool(9),
+        "axpy",
+        Scale::Fast,
+    );
+    let total = s.fraction(s.instructions)
+        + s.fraction(s.stall_lsu)
+        + s.fraction(s.stall_raw)
+        + s.fraction(s.stall_ctrl)
+        + s.fraction(s.stall_synch);
+    assert!(total <= 1.0 + 1e-9, "fractions sum {total}");
+    assert!(total > 0.5, "fractions sum {total} suspiciously low");
+    let _ = cfg;
+}

@@ -1,0 +1,124 @@
+//! Integration: the cluster simulator's functional results vs the
+//! AOT-compiled JAX/Pallas artifacts executed through PJRT — the
+//! cross-layer correctness contract of the whole stack.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent would hide
+//! regressions, so these tests *fail* without artifacts).
+
+use terapool::config::ClusterConfig;
+use terapool::kernels::{axpy, dotp, fft, gemm, spmmadd};
+use terapool::runtime::{assert_allclose, max_abs_diff, Runtime};
+
+/// Small cluster for fast functional runs; numerics are identical to the
+/// 1024-PE machine (same traces, same arithmetic).
+fn cfg() -> ClusterConfig {
+    ClusterConfig::tiny()
+}
+
+#[test]
+fn axpy_cluster_matches_xla_artifact() {
+    let mut rt = Runtime::with_default_dir().expect("run `make artifacts` first");
+    let n = rt.entry("axpy").unwrap().inputs[1].shape[0];
+    // The artifact-shaped problem (3 × 256 Ki words) needs the full
+    // 4 MiB machine.
+    let full = ClusterConfig::terapool(9);
+    let p = axpy::AxpyParams { n, alpha: 2.0 };
+    let setup = axpy::build(&full, &p);
+    let (mut cl, io) = setup.into_cluster(full);
+    cl.run(500_000_000);
+    let golden = rt
+        .execute_f32("axpy", &[vec![p.alpha], axpy::input_x(n), axpy::input_y(n)])
+        .unwrap();
+    assert_allclose(&io.read_output(&cl), &golden[0], 1e-5, "axpy");
+}
+
+#[test]
+fn dotp_cluster_matches_xla_artifact() {
+    let mut rt = Runtime::with_default_dir().expect("run `make artifacts` first");
+    let n = rt.entry("dotp").unwrap().inputs[0].shape[0];
+    let full = ClusterConfig::terapool(9);
+    let p = dotp::DotpParams { n };
+    let setup = dotp::build(&full, &p);
+    let (mut cl, io) = setup.into_cluster(full);
+    cl.run(500_000_000);
+    let golden = rt
+        .execute_f32("dotp", &[dotp::input_x(n), dotp::input_y(n)])
+        .unwrap();
+    let (got, want) = (io.read_output(&cl)[0], golden[0][0]);
+    let tol = want.abs().max(1.0) * 2e-4; // reduction-order differences
+    assert!((got - want).abs() < tol, "dotp {got} vs XLA {want}");
+}
+
+#[test]
+fn gemm_cluster_matches_xla_artifact_subsampled() {
+    // Full 256³ on the tiny cluster takes a while in debug; run a 64³
+    // sub-problem against a host reference AND spot-check the artifact
+    // semantics at its native shape via the runtime test-suite.
+    let p = gemm::GemmParams { m: 64, n: 64, k: 64 };
+    let setup = gemm::build(&cfg(), &p);
+    let want = gemm::reference(&p);
+    let (mut cl, io) = setup.into_cluster(cfg());
+    cl.run(500_000_000);
+    assert_allclose(&io.read_output(&cl), &want, 1e-2, "gemm 64^3 vs host ref");
+}
+
+#[test]
+fn fft_cluster_matches_xla_artifact_small() {
+    // The artifact is 64×4096; the same trace generator at 4×256 is
+    // checked against jnp.fft's independent path via the naive host DFT
+    // (fft::reference), which python/tests pins to the Pallas kernel.
+    let p = fft::FftParams { batch: 4, n: 256 };
+    let setup = fft::build(&cfg(), &p);
+    let im_off = fft::im_plane_offset(&cfg(), &p);
+    let (want_re, want_im) = fft::reference(&p);
+    let (mut cl, io) = setup.into_cluster(cfg());
+    cl.run(500_000_000);
+    let got_re = io.read_output(&cl);
+    let got_im = cl.l1.read_slice(io.output_base + im_off, p.batch * p.n);
+    assert!(max_abs_diff(&got_re, &want_re) < 5e-2);
+    assert!(max_abs_diff(&got_im, &want_im) < 5e-2);
+}
+
+#[test]
+fn spmmadd_cluster_matches_xla_artifact() {
+    let mut rt = Runtime::with_default_dir().expect("run `make artifacts` first");
+    let shape = rt.entry("spmmadd").unwrap().inputs[0].shape.clone();
+    let p = spmmadd::SpmmaddParams {
+        rows: shape[0],
+        cols: shape[1],
+        nnz_per_row: 6,
+        seed: 42,
+    };
+    let (setup, layout) = spmmadd::build_with_layout(&cfg(), &p);
+    let (mut cl, _) = setup.into_cluster(cfg());
+    cl.run(500_000_000);
+    // Densify the simulated CSR output and compare to the dense-add
+    // artifact.
+    let vals = cl.l1.read_slice(layout.c_val_base, layout.c_ref.nnz());
+    let cols = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
+    let mut dense = vec![0.0f32; p.rows * p.cols];
+    for r in 0..p.rows {
+        for i in layout.c_ref.row_ptr[r] as usize..layout.c_ref.row_ptr[r + 1] as usize {
+            dense[r * p.cols + cols[i] as usize] += vals[i];
+        }
+    }
+    let golden = rt
+        .execute_f32("spmmadd", &[layout.a.to_dense(), layout.b.to_dense()])
+        .unwrap();
+    assert_allclose(&dense, &golden[0], 1e-5, "spmmadd densified");
+}
+
+#[test]
+fn gemm_artifact_native_shape_matches_cluster_inputs() {
+    // Execute the native 256×256 artifact once and spot-check elements
+    // against the host reference — proves the artifact itself encodes the
+    // same semantics the cluster traces compute.
+    let mut rt = Runtime::with_default_dir().expect("run `make artifacts` first");
+    let shape = rt.entry("gemm").unwrap().inputs[0].shape.clone();
+    let p = gemm::GemmParams { m: shape[0], n: shape[1], k: shape[0] };
+    let golden = rt
+        .execute_f32("gemm", &[gemm::input_a(&p), gemm::input_b(&p)])
+        .unwrap();
+    let want = gemm::reference(&p);
+    assert_allclose(&golden[0], &want, 1e-2, "gemm artifact vs host ref");
+}
