@@ -1,0 +1,23 @@
+# Build-time entry points. The Rust crate is self-contained; Python (JAX)
+# runs only for `make artifacts`.
+
+.PHONY: artifacts build test bench pytest
+
+# AOT-lower the JAX entries and evaluate the golden outputs into
+# artifacts/ (needs jax + numpy; see python/compile/aot.py).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Tier-1 verify.
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+bench:
+	cargo bench --bench simspeed
+	cargo bench --bench scaling
+
+pytest:
+	python3 -m pytest python/tests -q

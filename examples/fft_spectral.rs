@@ -1,16 +1,19 @@
 //! Spectral-processing scenario (the paper's SDR motivation): run the
 //! 64×4096-point radix-4 FFT batch on the simulated cluster, validate
-//! against the AOT JAX/Pallas artifact, and report per-stage behaviour.
+//! against the build-time JAX-evaluated golden, and report per-stage
+//! behaviour.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example fft_spectral [--fast]
 //! ```
 
 use terapool::config::ClusterConfig;
-use terapool::kernels::fft::{build, im_plane_offset, input_im, input_re, FftParams};
+use terapool::ensure;
+use terapool::errors::Result;
+use terapool::kernels::fft::{build, im_plane_offset, FftParams};
 use terapool::runtime::{max_abs_diff, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let cfg = ClusterConfig::terapool(9);
     let p = if fast {
@@ -47,19 +50,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     if !fast {
-        // Golden comparison against the AOT artifact (64×4096 shape).
-        let mut rt = Runtime::with_default_dir()?;
-        println!("golden: executing fft.hlo.txt via PJRT…");
-        let golden = rt.execute_f32(
-            "fft",
-            &[input_re(&p), input_im(&p)],
-        )?;
-        let dre = max_abs_diff(&got_re, &golden[0]);
-        let dim = max_abs_diff(&got_im, &golden[1]);
+        // Golden comparison against the JAX-evaluated artifact (64×4096,
+        // stored re-plane then im-plane).
+        let rt = Runtime::with_default_dir()?;
+        println!("golden: loading fft.golden.bin…");
+        let golden = rt.golden_f32("fft")?;
+        let plane = p.batch * p.n;
+        let dre = max_abs_diff(&got_re, &golden[..plane]);
+        let dim = max_abs_diff(&got_im, &golden[plane..]);
         println!("numerics: max |Δre| = {dre:.2e}, max |Δim| = {dim:.2e}");
         // 4096-point f32 FFT: values reach O(10³); allow 4096·ε-ish.
-        anyhow::ensure!(dre < 0.25 && dim < 0.25, "spectral mismatch vs XLA");
-        println!("fft_spectral OK — cluster spectrum matches the XLA golden");
+        ensure!(dre < 0.25 && dim < 0.25, "spectral mismatch vs the JAX golden");
+        println!("fft_spectral OK — cluster spectrum matches the JAX golden");
     } else {
         println!("fft_spectral OK (fast mode: golden check skipped — artifact is 64×4096)");
     }

@@ -1,15 +1,15 @@
-//! End-to-end driver (DESIGN.md §End-to-end): the full three-layer stack
-//! on a real workload.
+//! End-to-end driver (DESIGN.md §Golden contract): the full three-layer
+//! stack on a real workload.
 //!
-//! 1. loads the **JAX/Pallas AOT artifact** `gemm.hlo.txt` (built once by
-//!    `make artifacts`; Python is not involved at run time) and executes
-//!    it via PJRT as the golden reference;
+//! 1. loads the **JAX-evaluated golden** `gemm.golden.bin` (built once by
+//!    `make artifacts`; Python is not involved at run time);
 //! 2. runs the same 256×256×256 f32 GEMM on the **simulated 1024-PE
 //!    TeraPool cluster** — 4×4 register-blocked traces, shared-L1
-//!    interconnect, fork-join barriers;
+//!    interconnect, fork-join barriers — on the deterministic
+//!    tile-parallel engine;
 //! 3. runs the **double-buffered HBM2E variant** (tiles streamed through
 //!    the iDMA) to show compute/transfer overlap;
-//! 4. compares the cluster's final memory image against the XLA output
+//! 4. compares the cluster's final memory image against the JAX output
 //!    (assert_allclose) and reports cycles, IPC, GFLOP/s and GFLOP/s/W.
 //!
 //! ```bash
@@ -18,31 +18,36 @@
 
 use terapool::config::ClusterConfig;
 use terapool::dma::hbm_image_clear;
+use terapool::errors::Result;
 use terapool::kernels::double_buffer::{self, DbKernel, DbParams};
-use terapool::kernels::gemm::{build, input_a, input_b, GemmParams};
+use terapool::kernels::gemm::{build, GemmParams};
 use terapool::physical::energy::EnergyModel;
 use terapool::runtime::{assert_allclose, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = ClusterConfig::terapool(9);
     let em = EnergyModel::for_cluster(&cfg);
+    let threads = terapool::parallel::default_threads();
 
-    // --- golden: AOT-compiled JAX/Pallas kernel through PJRT ----------
-    let mut rt = Runtime::with_default_dir()?;
+    // --- golden: JAX oracle evaluated at build time -------------------
+    let rt = Runtime::with_default_dir()?;
     let shape = rt.entry("gemm")?.inputs[0].shape.clone();
     let p = GemmParams { m: shape[0], n: shape[1], k: shape[0] };
-    println!("golden: executing gemm.hlo.txt ({}x{}x{}) on PJRT CPU…", p.m, p.n, p.k);
-    let golden = rt.execute_f32("gemm", &[input_a(&p), input_b(&p)])?;
+    println!("golden: loading gemm.golden.bin ({}x{}x{})…", p.m, p.n, p.k);
+    let golden = rt.golden_f32("gemm")?;
 
     // --- cluster: trace-driven 1024-PE simulation ---------------------
-    println!("cluster: running 4x4-blocked GEMM on {} PEs…", cfg.num_pes());
+    println!(
+        "cluster: running 4x4-blocked GEMM on {} PEs ({threads} host threads)…",
+        cfg.num_pes()
+    );
     let setup = build(&cfg, &p);
     let flops = setup.flops;
     let (mut cl, io) = setup.into_cluster(cfg.clone());
-    let stats = cl.run(2_000_000_000);
+    let stats = cl.run_parallel(2_000_000_000, threads);
 
-    assert_allclose(&io.read_output(&cl), &golden[0], 2e-2, "gemm vs XLA artifact");
-    println!("numerics: cluster L1 image matches the XLA golden ✓");
+    assert_allclose(&io.read_output(&cl), &golden, 2e-2, "gemm vs JAX golden");
+    println!("numerics: cluster L1 image matches the JAX golden ✓");
 
     let us = stats.cycles as f64 / cfg.freq_mhz;
     println!(

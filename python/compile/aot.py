@@ -1,14 +1,28 @@
-"""AOT lowering: JAX entry functions -> artifacts/<name>.hlo.txt.
+"""AOT lowering: JAX entry functions -> artifacts/<name>.hlo.txt, plus
+build-time golden evaluation -> artifacts/<name>.golden.bin.
 
 HLO **text** (not ``lowered.compile().serialize()`` / serialized
 HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
-64-bit instruction ids that the Rust side's xla_extension 0.5.1 rejects
-(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+64-bit instruction ids that downstream HLO tooling rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
 round-trips cleanly (see /opt/xla-example/README.md).
 
 Python runs only here, at build time (``make artifacts``); the Rust binary
-is self-contained afterwards.  A manifest with input shapes is emitted next
-to the artifacts so the Rust runtime can allocate matching literals.
+is self-contained afterwards.  Two manifest-described products per entry:
+
+* ``<name>.hlo.txt`` — the lowered computation, sha256-fingerprinted for
+  provenance;
+* ``<name>.golden.bin`` — the entry's *evaluated* output on the canonical
+  deterministic inputs (the same closed-form vectors the Rust trace
+  builders stage, ``kernels::axpy::input_x`` etc.), flattened f32
+  little-endian.  Golden evaluation runs the pure-jnp oracles in
+  ``kernels/ref.py`` (the specification the Pallas kernels are pinned to
+  by python/tests), so the Rust golden tests compare the cluster
+  simulator against an independent code path with no FFI at test time.
+
+spmmadd gets no golden: its canonical inputs are CSR matrices drawn from
+the Rust-side SplitMix64 generator, not a closed form; the Rust tests
+cover it with the dense-add oracle instead.
 """
 
 from __future__ import annotations
@@ -19,9 +33,12 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax._src.lib import xla_client as xc
 
-from .model import ENTRIES
+from .kernels import ref
+from .model import AXPY_N, ENTRIES, FFT_BATCH, FFT_N, GEMM_N
 
 
 def to_hlo_text(lowered) -> str:
@@ -39,12 +56,63 @@ def lower_entry(name: str) -> str:
     return to_hlo_text(lowered)
 
 
+def _ramp(n: int, mod: int, scale: float, shift: float) -> np.ndarray:
+    """The Rust trace builders' closed-form input: (i % mod)*scale - shift."""
+    i = np.arange(n, dtype=np.float64)
+    return ((i % mod) * scale - shift).astype(np.float32)
+
+
+def golden_inputs(name: str):
+    """Canonical inputs per entry, bit-identical to the Rust generators
+    (rust/src/kernels/{axpy,dotp,gemm,fft}.rs input_* functions)."""
+    if name == "axpy":
+        return (
+            np.float32(2.0),
+            _ramp(AXPY_N, 97, 0.125, 6.0),
+            _ramp(AXPY_N, 31, 0.5, 7.75),
+        )
+    if name == "dotp":
+        return (_ramp(AXPY_N, 13, 0.25, 1.5), _ramp(AXPY_N, 7, 0.5, 1.0))
+    if name == "gemm":
+        return (
+            _ramp(GEMM_N * GEMM_N, 11, 0.25, 1.25).reshape(GEMM_N, GEMM_N),
+            _ramp(GEMM_N * GEMM_N, 9, 0.125, 0.5).reshape(GEMM_N, GEMM_N),
+        )
+    if name == "fft":
+        return (
+            _ramp(FFT_BATCH * FFT_N, 17, 0.25, 2.0).reshape(FFT_BATCH, FFT_N),
+            _ramp(FFT_BATCH * FFT_N, 5, 0.5, 1.0).reshape(FFT_BATCH, FFT_N),
+        )
+    return None  # spmmadd: no closed-form canonical inputs
+
+
+# Pure-jnp oracle per entry (the specification layer of kernels/ref.py).
+GOLDEN_ORACLES = {
+    "axpy": lambda alpha, x, y: (ref.axpy(alpha, x, y),),
+    "dotp": lambda x, y: (ref.dotp(x, y).reshape(1),),
+    "gemm": lambda a, b: (ref.gemm(a, b),),
+    "fft": lambda re, im: ref.fft(re, im),
+}
+
+
+def evaluate_golden(name: str):
+    """Flattened f32 concatenation of the entry's outputs, or None."""
+    inputs = golden_inputs(name)
+    if inputs is None or name not in GOLDEN_ORACLES:
+        return None
+    outputs = GOLDEN_ORACLES[name](*(jnp.asarray(a) for a in inputs))
+    flat = [np.asarray(o, dtype=np.float32).reshape(-1) for o in outputs]
+    return np.concatenate(flat)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out-dir", default="../artifacts",
                     help="directory for <name>.hlo.txt artifacts")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of entry names to lower")
+    ap.add_argument("--skip-goldens", action="store_true",
+                    help="emit HLO + manifest only (no golden evaluation)")
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
@@ -66,6 +134,15 @@ def main() -> None:
         }
         print(f"wrote {path} ({len(text)} chars)")
 
+        if not args.skip_goldens:
+            golden = evaluate_golden(name)
+            if golden is not None:
+                gfile = f"{name}.golden.bin"
+                gpath = os.path.join(args.out_dir, gfile)
+                golden.astype("<f4").tofile(gpath)
+                manifest[name]["golden"] = {"file": gfile, "words": int(golden.size)}
+                print(f"wrote {gpath} ({golden.size} words)")
+
     man_path = os.path.join(args.out_dir, "manifest.json")
     with open(man_path, "w") as f:
         json.dump(manifest, f, indent=2)
@@ -75,12 +152,16 @@ def main() -> None:
     # JSON parser crate; see rust/src/runtime.rs::parse_manifest).
     txt_path = os.path.join(args.out_dir, "manifest.txt")
     with open(txt_path, "w") as f:
-        f.write("# artifact <name> <file> <sha256> / input <name> <dtype> <dims>\n")
+        f.write("# artifact <name> <file> <sha256> / input <name> <dtype> <dims>"
+                " / golden <name> <file> <words>\n")
         for name, entry in manifest.items():
             f.write(f"artifact {name} {entry['file']} {entry['sha256']}\n")
             for inp in entry["inputs"]:
                 dims = ",".join(str(d) for d in inp["shape"]) or "scalar"
                 f.write(f"input {name} {inp['dtype']} {dims}\n")
+            if "golden" in entry:
+                g = entry["golden"]
+                f.write(f"golden {name} {g['file']} {g['words']}\n")
     print(f"wrote {txt_path}")
 
 

@@ -8,18 +8,33 @@
 mod util;
 
 use terapool::config::ClusterConfig;
-use terapool::coordinator::{fig14a, fig14b, run_kernel, Scale, FIG14A_KERNELS};
+use terapool::coordinator::{
+    fig14a_threads, fig14b_threads, run_kernel, run_kernel_threads, Scale, FIG14A_KERNELS,
+};
 
 fn main() {
-    fig14a(Scale::Fast).print();
-    fig14b(Scale::Fast).print();
+    // Regenerate Fig. 14a on the tile-parallel engine (identical numbers,
+    // less wall clock), then time the kernels per engine.
+    let threads = terapool::parallel::default_threads();
+    fig14a_threads(Scale::Fast, threads).print();
+    fig14b_threads(Scale::Fast, threads).print();
 
     let cfg = ClusterConfig::terapool(9);
     for k in FIG14A_KERNELS {
-        let r = util::bench(&format!("kernel {k} (fast scale)"), 3, || {
-            run_kernel(&cfg, k, Scale::Fast).0.cycles
+        // Capture the stats from inside the timed runs instead of paying
+        // for an extra full simulation afterwards.
+        let mut last = None;
+        let r = util::bench(&format!("kernel {k} (fast scale, serial)"), 3, || {
+            let (stats, _) = run_kernel(&cfg, k, Scale::Fast);
+            let cycles = stats.cycles;
+            last = Some(stats);
+            cycles
         });
-        let (stats, _) = run_kernel(&cfg, k, Scale::Fast);
+        let rp = util::bench(&format!("kernel {k} (fast scale, {threads} threads)"), 3, || {
+            run_kernel_threads(&cfg, k, Scale::Fast, threads).0.cycles
+        });
+        println!("  ↳ parallel speedup: {:.2}x", r.median_ms / rp.median_ms);
+        let stats = last.expect("bench ran at least once");
         util::report_rate(
             "simulated PE-cycles",
             (stats.cycles * stats.num_pes as u64) as f64 / 1e6,

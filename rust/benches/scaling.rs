@@ -1,5 +1,7 @@
 //! Bench: Table 6 regeneration — Byte/FLOP vs IPC across the TeraPool /
-//! MemPool / Occamy cluster scales, plus the Sec. 2 balance analysis.
+//! MemPool / Occamy cluster scales, plus the Sec. 2 balance analysis and
+//! the tile-parallel engine's thread-scaling curve on the 1024-PE GEMM
+//! sweep (the workload Fig. 14a / Table 6 regeneration is bound by).
 //!
 //! `cargo bench --bench scaling`
 
@@ -7,11 +9,12 @@
 mod util;
 
 use terapool::config::ClusterConfig;
-use terapool::coordinator::{scaling_analysis, table6, Scale};
+use terapool::coordinator::{scaling_analysis, table6_threads, Scale};
 use terapool::kernels::gemm::{build, GemmParams};
 
 fn main() {
-    table6(Scale::Fast).print();
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    table6_threads(Scale::Fast, terapool::parallel::default_threads()).print();
     scaling_analysis().print();
 
     for cfg in [
@@ -27,12 +30,30 @@ fn main() {
         };
         let p = GemmParams { m: edge, n: edge, k: edge };
         util::bench(
-            &format!("gemm {edge}^3 on {} ({} PEs)", cfg.name, cfg.num_pes()),
+            &format!("gemm {edge}^3 on {} ({} PEs, serial)", cfg.name, cfg.num_pes()),
             3,
             || {
                 let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
                 cl.run(2_000_000_000).cycles
             },
+        );
+    }
+
+    // Thread-scaling curve of the parallel engine on the 1024-PE GEMM.
+    let cfg = ClusterConfig::terapool(9);
+    let p = GemmParams { m: 128, n: 128, k: 128 };
+    let serial = util::bench("gemm 128^3 terapool (serial)", 3, || {
+        let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
+        cl.run(2_000_000_000).cycles
+    });
+    for threads in [2usize, 4, 8] {
+        let r = util::bench(&format!("gemm 128^3 terapool ({threads} threads)"), 3, || {
+            let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
+            cl.run_parallel(2_000_000_000, threads).cycles
+        });
+        println!(
+            "  ↳ speedup vs serial: {:.2}x ({threads} threads, {host_cores} host cores)",
+            serial.median_ms / r.median_ms
         );
     }
 }

@@ -8,6 +8,20 @@
 //! serialize at their bank, as in hardware), and the cross-Tile
 //! aggregation + WFI wake-up broadcast is charged as the configurable
 //! `barrier_wakeup` latency.
+//!
+//! Two execution engines share the same per-cycle semantics:
+//!
+//! * [`Cluster::run`] — the serial reference engine: one host thread
+//!   steps every PE, the crossbar hierarchy and all banks in a fixed
+//!   order each cycle.
+//! * [`Cluster::run_parallel`] — the deterministic **two-phase
+//!   tile-parallel engine** (see DESIGN.md): phase 1 steps each Tile's
+//!   PEs on a pool of host worker threads sharded Tile → SubGroup →
+//!   Group (the paper's physical hierarchy), producing per-worker action
+//!   queues; phase 2 replays those queues in the serial engine's exact
+//!   PE order and resolves bank arbitration, barriers and DMA serially.
+//!   Results, cycle counts and statistics are bit-identical to the
+//!   serial engine for any thread count (`rust/tests/parallel_equiv.rs`).
 
 use std::collections::HashMap;
 
@@ -30,7 +44,9 @@ struct BarrierSlot {
 }
 
 /// Aggregated run results (feeds Fig. 14a, Table 6, the headline numbers).
-#[derive(Debug, Clone)]
+/// `PartialEq` backs the serial-vs-parallel differential tests: the two
+/// engines must agree on every field, bit for bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
     pub cycles: u64,
     pub instructions: u64,
@@ -110,29 +126,63 @@ impl Cluster {
         self
     }
 
-    /// Barrier-counter word address for a Tile (sequential region slot 0).
-    fn barrier_addr(&self, tile: u32) -> u32 {
-        self.l1.map.seq_base_of_tile(tile as usize) + BARRIER_SLOT
+    /// Barrier-arrival bookkeeping for an acked atomic (shared by both
+    /// engines; the per-PE part of a response lives in
+    /// [`Pe::apply_response`]).
+    fn bookkeep_barrier(barriers: &mut HashMap<u16, BarrierSlot>, r: &Response) {
+        if matches!(r.kind, ReqKind::Amo) && r.tag != 0 {
+            // Barrier arrival atomic acked → count it.
+            let slot = barriers.entry((r.tag - 1) as u16).or_default();
+            slot.arrived += 1;
+            slot.waiting.push(r.core);
+        }
     }
 
-    fn apply_response(
-        pes: &mut [Pe],
+    /// Barrier release check (step 2 of the cycle): all arrived →
+    /// broadcast wake after the aggregation/WFI latency. Shared by both
+    /// engines; `wake` is a direct PE wake in the serial engine and a
+    /// wake-buffer push in the parallel coordinator.
+    fn release_barriers(
         barriers: &mut HashMap<u16, BarrierSlot>,
-        r: Response,
+        now: u64,
+        expected: u32,
+        wakeup: u64,
+        mut wake: impl FnMut(u32),
     ) {
-        let pe = &mut pes[r.core as usize];
-        match r.kind {
-            ReqKind::Read { rd } => pe.complete_load(rd, r.value),
-            ReqKind::Write => pe.complete_ack(),
-            ReqKind::Amo => {
-                pe.complete_ack();
-                if r.tag != 0 {
-                    // Barrier arrival atomic acked → count it.
-                    let slot = barriers.entry((r.tag - 1) as u16).or_default();
-                    slot.arrived += 1;
-                    slot.waiting.push(r.core);
-                }
+        for slot in barriers.values_mut() {
+            if slot.arrived == expected && slot.release_at.is_none() {
+                slot.release_at = Some(now + wakeup);
             }
+            if slot.release_at == Some(now) {
+                for &pe in &slot.waiting {
+                    wake(pe);
+                }
+                slot.waiting.clear();
+                slot.arrived = 0;
+                slot.release_at = None;
+            }
+        }
+    }
+
+    /// DMA/HBM progress + DmaWait-parked wake-ups (step 3 of the cycle),
+    /// shared by both engines like [`Cluster::release_barriers`].
+    fn dma_progress(
+        dma: &mut Option<DmaSubsystem>,
+        dma_waiters: &mut Vec<(u32, u16)>,
+        now: u64,
+        l1: &mut L1Memory,
+        mut wake: impl FnMut(u32),
+    ) {
+        if let Some(d) = dma.as_mut() {
+            d.step(now, l1);
+            dma_waiters.retain(|&(pe, id)| {
+                if d.is_done(id) {
+                    wake(pe);
+                    false
+                } else {
+                    true
+                }
+            });
         }
     }
 
@@ -143,91 +193,49 @@ impl Cluster {
         // 1. Deliver L1 responses due this cycle.
         let pes = &mut self.pes;
         let barriers = &mut self.barriers;
-        self.icn
-            .drain_responses(now, |r| Self::apply_response(pes, barriers, r));
+        self.icn.drain_responses(now, |r| {
+            pes[r.core as usize].apply_response(&r);
+            Self::bookkeep_barrier(barriers, &r);
+        });
 
-        // 2. Barrier release: all arrived → broadcast wake after the
-        //    aggregation/WFI latency.
+        // 2. Barrier release.
         let expected = self.pes.len() as u32;
-        for slot in self.barriers.values_mut() {
-            if slot.arrived == expected && slot.release_at.is_none() {
-                slot.release_at = Some(now + self.cfg.barrier_wakeup as u64);
-            }
-            if slot.release_at == Some(now) {
-                for &pe in &slot.waiting {
-                    self.pes[pe as usize].wake();
-                }
-                slot.waiting.clear();
-                slot.arrived = 0;
-                slot.release_at = None;
-            }
-        }
+        let pes = &mut self.pes;
+        Self::release_barriers(
+            &mut self.barriers,
+            now,
+            expected,
+            self.cfg.barrier_wakeup as u64,
+            |pe| pes[pe as usize].wake(),
+        );
 
         // 3. DMA / HBM progress; wake DmaWait-parked PEs.
-        if let Some(dma) = &mut self.dma {
-            dma.step(now, &mut self.l1);
-            let pes = &mut self.pes;
-            self.dma_waiters.retain(|&(pe, id)| {
-                if dma.is_done(id) {
-                    pes[pe as usize].wake();
-                    false
-                } else {
-                    true
-                }
-            });
-        }
+        let pes = &mut self.pes;
+        Self::dma_progress(&mut self.dma, &mut self.dma_waiters, now, &mut self.l1, |pe| {
+            pes[pe as usize].wake()
+        });
 
         // 4. PE issue phase.
+        let ppt = self.cfg.hierarchy.pes_per_tile;
         for i in 0..self.pes.len() {
             let action = self.pes[i].try_issue();
-            match action {
-                Action::None => {}
-                Action::Load { rd, addr } => {
-                    let bank = self.l1.map.map(addr);
-                    let tile = self.pes[i].tile as usize;
-                    self.icn
-                        .push_request(now, i as u32, tile, ReqKind::Read { rd }, 0.0, bank, 0);
-                }
-                Action::Store { value, addr } => {
-                    let bank = self.l1.map.map(addr);
-                    let tile = self.pes[i].tile as usize;
-                    self.icn
-                        .push_request(now, i as u32, tile, ReqKind::Write, value, bank, 0);
-                }
-                Action::AmoAdd { value, addr } => {
-                    let bank = self.l1.map.map(addr);
-                    let tile = self.pes[i].tile as usize;
-                    self.icn
-                        .push_request(now, i as u32, tile, ReqKind::Amo, value, bank, 0);
-                }
-                Action::BarrierArrive { id } => {
-                    let tile = self.pes[i].tile;
-                    let bank = self.l1.map.map(self.barrier_addr(tile));
-                    self.icn.push_request(
-                        now,
-                        i as u32,
-                        tile as usize,
-                        ReqKind::Amo,
-                        1.0,
-                        bank,
-                        id as u32 + 1,
-                    );
-                }
-                Action::DmaStart { id } => {
-                    let dma = self
-                        .dma
-                        .as_mut()
-                        .expect("trace uses DMA but cluster built without with_dma()");
-                    dma.start(id, now);
-                }
-                Action::DmaWait { id } => {
-                    let done = self.dma.as_ref().map(|d| d.is_done(id)).unwrap_or(true);
-                    if done {
-                        self.pes[i].wake();
-                    } else {
-                        self.dma_waiters.push((i as u32, id));
-                    }
-                }
+            if action == Action::None {
+                continue;
+            }
+            let wake = route_action(
+                now,
+                i as u32,
+                i / ppt,
+                action,
+                &mut self.icn,
+                &self.l1,
+                &mut self.dma,
+                &mut self.dma_waiters,
+            );
+            if let Some(pe) = wake {
+                // DmaWait on an already-retired descriptor: resume next
+                // cycle (the issue slot is spent either way).
+                self.pes[pe as usize].wake();
             }
         }
 
@@ -249,6 +257,165 @@ impl Cluster {
         while !self.done() && self.cycle < max_cycles {
             self.step();
         }
+        assert!(
+            self.done(),
+            "cluster did not finish within {max_cycles} cycles (possible deadlock)"
+        );
+        self.stats()
+    }
+
+    /// Engine dispatch: `threads <= 1` runs the serial reference engine,
+    /// anything larger the tile-parallel engine. The single place the
+    /// CLI/coordinator/benches branch between the two.
+    pub fn run_threads(&mut self, max_cycles: u64, threads: usize) -> RunStats {
+        if threads > 1 {
+            self.run_parallel(max_cycles, threads)
+        } else {
+            self.run(max_cycles)
+        }
+    }
+
+    /// Run to completion on the deterministic two-phase tile-parallel
+    /// engine with `threads` host worker threads (clamped to `[1,
+    /// num_tiles]`). Cycle counts, memory image and statistics are
+    /// bit-identical to [`Cluster::run`] for every thread count; see the
+    /// module docs and DESIGN.md for the determinism argument.
+    pub fn run_parallel(&mut self, max_cycles: u64, threads: usize) -> RunStats {
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        use crate::parallel::{worker_loop, PoolShutdown, SpinBarrier, WorkerChannel};
+
+        let num_tiles = self.cfg.num_tiles();
+        let ppt = self.cfg.hierarchy.pes_per_tile;
+        let workers = threads.clamp(1, num_tiles);
+        // Contiguous Tile ranges per worker: concatenating per-worker
+        // action queues in worker order reproduces the serial engine's
+        // PE-ascending order exactly.
+        let tiles_per_worker = num_tiles.div_ceil(workers);
+        let pes_per_worker = tiles_per_worker * ppt;
+        let expected = self.pes.len() as u32;
+        let wakeup = self.cfg.barrier_wakeup as u64;
+
+        let channels: Vec<WorkerChannel> = (0..workers)
+            .map(|w| WorkerChannel::new((w * pes_per_worker) as u32))
+            .collect();
+        for (w, ch) in channels.iter().enumerate() {
+            let lo = (w * pes_per_worker).min(self.pes.len());
+            let hi = ((w + 1) * pes_per_worker).min(self.pes.len());
+            let busy = self.pes[lo..hi].iter().any(|p| !p.done());
+            ch.busy.store(busy, Ordering::SeqCst);
+        }
+        let barrier = SpinBarrier::new(workers + 1);
+        let stop = AtomicBool::new(false);
+        let failed = AtomicBool::new(false);
+
+        // Split the cluster into disjoint field borrows: the PE array is
+        // handed to the workers for the whole run, everything else stays
+        // with the coordinator (this thread).
+        let Cluster {
+            cfg: _,
+            l1,
+            icn,
+            pes,
+            dma,
+            barriers,
+            dma_waiters,
+            cycle,
+        } = self;
+
+        std::thread::scope(|s| {
+            let mut rest: &mut [Pe] = pes;
+            for ch in &channels {
+                let take = pes_per_worker.min(rest.len());
+                // mem::take detaches the slice from `rest` so the chunk
+                // borrows 'scope-long, not loop-iteration-long.
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                let barrier = &barrier;
+                let stop = &stop;
+                let failed = &failed;
+                s.spawn(move || worker_loop(chunk, ch, barrier, stop, failed));
+            }
+            // Releases the pool exactly once when the coordinator leaves
+            // this closure — by `break` or by unwinding from a panic.
+            let _shutdown = PoolShutdown::new(&stop, &barrier);
+
+            let mut resp_buf: Vec<Vec<Response>> = (0..workers).map(|_| Vec::new()).collect();
+            let mut wake_buf: Vec<Vec<u32>> = (0..workers).map(|_| Vec::new()).collect();
+            let mut drained: Vec<Response> = Vec::new();
+            let mut actions: Vec<(u32, Action)> = Vec::new();
+
+            loop {
+                let all_idle = channels.iter().all(|c| !c.busy.load(Ordering::SeqCst));
+                let done = all_idle
+                    && icn.inflight() == 0
+                    && dma.as_ref().map(|d| d.idle()).unwrap_or(true);
+                if done || *cycle >= max_cycles {
+                    break; // _shutdown releases the workers
+                }
+                let now = *cycle;
+
+                // --- serial pre-phase: responses, barriers, DMA -------
+                drained.clear();
+                icn.drain_responses_into(now, &mut drained);
+                for r in &drained {
+                    Self::bookkeep_barrier(barriers, r);
+                    resp_buf[r.core as usize / pes_per_worker].push(*r);
+                }
+                Self::release_barriers(barriers, now, expected, wakeup, |pe| {
+                    wake_buf[pe as usize / pes_per_worker].push(pe)
+                });
+                Self::dma_progress(dma, dma_waiters, now, l1, |pe| {
+                    wake_buf[pe as usize / pes_per_worker].push(pe)
+                });
+                for (w, ch) in channels.iter().enumerate() {
+                    if !resp_buf[w].is_empty() || !wake_buf[w].is_empty() {
+                        let mut inbox = ch.inbox.lock().unwrap();
+                        inbox.responses.append(&mut resp_buf[w]);
+                        inbox.wakes.append(&mut wake_buf[w]);
+                    }
+                }
+
+                // --- phase 1: tile-parallel PE stepping ---------------
+                barrier.wait();
+                barrier.wait();
+                if failed.load(Ordering::SeqCst) {
+                    // _shutdown drains the pool during the unwind.
+                    panic!("parallel engine: a worker thread panicked during phase 1");
+                }
+
+                // --- phase 2: fixed-total-order arbitration -----------
+                for ch in &channels {
+                    {
+                        let mut outbox = ch.outbox.lock().unwrap();
+                        std::mem::swap(&mut *outbox, &mut actions);
+                    }
+                    for &(pe, action) in &actions {
+                        let wake = route_action(
+                            now,
+                            pe,
+                            pe as usize / ppt,
+                            action,
+                            icn,
+                            l1,
+                            dma,
+                            dma_waiters,
+                        );
+                        if let Some(target) = wake {
+                            // DmaWait on a retired descriptor: wake at the
+                            // top of the next cycle — the serial engine's
+                            // in-cycle wake is observationally identical
+                            // (the issue slot is already spent).
+                            wake_buf[target as usize / pes_per_worker].push(target);
+                        }
+                    }
+                    actions.clear();
+                }
+                icn.step(now, l1);
+                *cycle += 1;
+            }
+        });
+
         assert!(
             self.done(),
             "cluster did not finish within {max_cycles} cycles (possible deadlock)"
@@ -312,6 +479,64 @@ impl Cluster {
         }
         let _ = NumaClass::Local;
         out
+    }
+}
+
+/// Route one PE action into the shared machinery (interconnect request,
+/// barrier atomic, DMA control). Shared verbatim by the serial issue loop
+/// and the parallel engine's phase-2 replay, so both engines mutate the
+/// interconnect and DMA in the identical order. Returns `Some(pe)` when
+/// the PE must be woken (DmaWait on an already-retired descriptor).
+#[allow(clippy::too_many_arguments)]
+fn route_action(
+    now: u64,
+    pe: u32,
+    tile: usize,
+    action: Action,
+    icn: &mut Interconnect,
+    l1: &L1Memory,
+    dma: &mut Option<DmaSubsystem>,
+    dma_waiters: &mut Vec<(u32, u16)>,
+) -> Option<u32> {
+    match action {
+        Action::None => None,
+        Action::Load { rd, addr } => {
+            let bank = l1.map.map(addr);
+            icn.push_request(now, pe, tile, ReqKind::Read { rd }, 0.0, bank, 0);
+            None
+        }
+        Action::Store { value, addr } => {
+            let bank = l1.map.map(addr);
+            icn.push_request(now, pe, tile, ReqKind::Write, value, bank, 0);
+            None
+        }
+        Action::AmoAdd { value, addr } => {
+            let bank = l1.map.map(addr);
+            icn.push_request(now, pe, tile, ReqKind::Amo, value, bank, 0);
+            None
+        }
+        Action::BarrierArrive { id } => {
+            // Barrier-counter word: sequential-region slot 0 of the Tile.
+            let addr = l1.map.seq_base_of_tile(tile) + BARRIER_SLOT;
+            let bank = l1.map.map(addr);
+            icn.push_request(now, pe, tile, ReqKind::Amo, 1.0, bank, id as u32 + 1);
+            None
+        }
+        Action::DmaStart { id } => {
+            dma.as_mut()
+                .expect("trace uses DMA but cluster built without with_dma()")
+                .start(id, now);
+            None
+        }
+        Action::DmaWait { id } => {
+            let done = dma.as_ref().map(|d| d.is_done(id)).unwrap_or(true);
+            if done {
+                Some(pe)
+            } else {
+                dma_waiters.push((pe, id));
+                None
+            }
+        }
     }
 }
 
@@ -469,6 +694,40 @@ mod tests {
             "remote amat {} < zero-load",
             stats.amat_per_class[3]
         );
+    }
+
+    /// Quick in-module smoke of the two-phase engine; the exhaustive
+    /// serial-vs-parallel matrix lives in rust/tests/parallel_equiv.rs.
+    #[test]
+    fn parallel_engine_matches_serial_on_tiny_store_load() {
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let out = base + 256;
+        let build = |cfg: &ClusterConfig| {
+            programs_for(cfg, |i| {
+                let mut p = Program::new();
+                p.ld_imm(1, 100.0 + i as f32);
+                p.st(1, base + i as u32);
+                p.barrier(0);
+                let n = base + ((i as u32 + 1) % 32);
+                p.ld(2, n);
+                p.st(2, out + i as u32);
+                p.halt();
+                p
+            })
+        };
+        let mut serial = Cluster::new(cfg.clone(), build(&cfg));
+        let s_stats = serial.run(10_000);
+        for threads in [1usize, 2, 4] {
+            let mut par = Cluster::new(cfg.clone(), build(&cfg));
+            let p_stats = par.run_parallel(10_000, threads);
+            assert_eq!(s_stats, p_stats, "stats diverge at {threads} threads");
+            assert_eq!(
+                serial.l1.read_slice(out, 32),
+                par.l1.read_slice(out, 32),
+                "memory image diverges at {threads} threads"
+            );
+        }
     }
 
     #[test]

@@ -240,8 +240,25 @@ pub fn fig13() -> Table {
 // Fig. 14a — kernel IPC and stall fractions
 // ------------------------------------------------------------------
 
-/// Run one kernel on the given cluster config; returns (stats, name).
+/// Run one kernel on the given cluster config with the serial reference
+/// engine; returns (stats, name). Shorthand for [`run_kernel_threads`]
+/// with one thread.
 pub fn run_kernel(cfg: &ClusterConfig, which: &str, scale: Scale) -> (RunStats, String) {
+    run_kernel_threads(cfg, which, scale, 1)
+}
+
+/// Run one kernel on the given cluster config; returns (stats, name).
+///
+/// `threads == 1` uses the serial reference engine; `threads > 1` uses
+/// the deterministic tile-parallel engine (`Cluster::run_parallel`),
+/// which produces identical stats — the knob only changes host wall
+/// clock, never simulated results.
+pub fn run_kernel_threads(
+    cfg: &ClusterConfig,
+    which: &str,
+    scale: Scale,
+    threads: usize,
+) -> (RunStats, String) {
     let setup = match which {
         "axpy" => kernels::axpy::build(
             cfg,
@@ -284,13 +301,20 @@ pub fn run_kernel(cfg: &ClusterConfig, which: &str, scale: Scale) -> (RunStats, 
     };
     let name = setup.name.clone();
     let (mut cl, _io) = setup.into_cluster(cfg.clone());
-    let stats = cl.run(2_000_000_000);
+    let stats = cl.run_threads(2_000_000_000, threads);
     (stats, name)
 }
 
 pub const FIG14A_KERNELS: [&str; 5] = ["axpy", "dotp", "gemm", "fft", "spmmadd"];
 
 pub fn fig14a(scale: Scale) -> Table {
+    fig14a_threads(scale, 1)
+}
+
+/// Fig. 14a with the engine choice threaded through: `threads > 1` runs
+/// every kernel on the tile-parallel engine (identical numbers, less
+/// wall clock — this is the sweep the parallel engine exists for).
+pub fn fig14a_threads(scale: Scale, threads: usize) -> Table {
     let cfg = ClusterConfig::terapool(9); // the energy-optimal 850 MHz point
     let em = energy::EnergyModel::for_cluster(&cfg);
     let mut t = Table::new(
@@ -301,7 +325,7 @@ pub fn fig14a(scale: Scale) -> Table {
         ],
     );
     for k in FIG14A_KERNELS {
-        let (s, name) = run_kernel(&cfg, k, scale);
+        let (s, name) = run_kernel_threads(&cfg, k, scale, threads);
         t.row(vec![
             name,
             f2(s.ipc()),
@@ -323,6 +347,10 @@ pub fn fig14a(scale: Scale) -> Table {
 // ------------------------------------------------------------------
 
 pub fn fig14b(scale: Scale) -> Table {
+    fig14b_threads(scale, 1)
+}
+
+pub fn fig14b_threads(scale: Scale, threads: usize) -> Table {
     let cfg = ClusterConfig::terapool(9);
     let chunk = scale.pick(32 * 4096, 16 * 4096); // 6 buffers must fit 896 KiW
     let rounds = scale.pick(8, 4);
@@ -336,9 +364,10 @@ pub fn fig14b(scale: Scale) -> Table {
         double_buffer::DbKernel::Axpy,
     ] {
         hbm_image_clear();
-        let r = double_buffer::run(
+        let r = double_buffer::run_threads(
             &cfg,
             &double_buffer::DbParams { kernel: k, chunk, rounds },
+            threads,
         );
         t.row(vec![
             k.name().into(),
@@ -390,6 +419,13 @@ pub fn table5() -> Table {
 // ------------------------------------------------------------------
 
 pub fn table6(scale: Scale) -> Table {
+    table6_threads(scale, 1)
+}
+
+/// Table 6 with the engine choice threaded through (`threads > 1` → the
+/// tile-parallel engine; identical simulated numbers).
+pub fn table6_threads(scale: Scale, threads: usize) -> Table {
+    let run = |cl: &mut crate::cluster::Cluster| cl.run_threads(2_000_000_000, threads);
     let mut t = Table::new(
         "Table 6 — Main-memory Byte/FLOP vs IPC (AXPY f32 / MatMul f32)",
         &[
@@ -411,7 +447,7 @@ pub fn table6(scale: Scale) -> Table {
             &kernels::axpy::AxpyParams { n: axpy_n, alpha: 2.0 },
         )
         .into_cluster(cfg.clone());
-        let sa = ca.run(2_000_000_000);
+        let sa = run(&mut ca);
         let gemm_edge = scale
             .pick(8, 4)
             .max((cfg.num_pes() as f64).sqrt() as usize / 4 * 4)
@@ -422,7 +458,7 @@ pub fn table6(scale: Scale) -> Table {
             &kernels::gemm::GemmParams { m: gemm_edge, n: gemm_edge, k: gemm_edge },
         )
         .into_cluster(cfg.clone());
-        let sg = cg.run(2_000_000_000);
+        let sg = run(&mut cg);
         t.row(vec![
             cfg.name.clone(),
             f2(l1 as f64 / (1024.0 * 1024.0)),
@@ -471,6 +507,10 @@ pub fn scaling_analysis() -> Table {
 // ------------------------------------------------------------------
 
 pub fn headline(scale: Scale) -> Table {
+    headline_threads(scale, 1)
+}
+
+pub fn headline_threads(scale: Scale, threads: usize) -> Table {
     let mut t = Table::new("Headline — TeraPool reproduction vs paper", &["Metric", "Paper", "Measured"]);
     let c11 = ClusterConfig::terapool(11);
     t.row(vec![
@@ -486,7 +526,7 @@ pub fn headline(scale: Scale) -> Table {
     // GEMM sustained.
     let cfg = ClusterConfig::terapool(9);
     let em = energy::EnergyModel::for_cluster(&cfg);
-    let (s, _) = run_kernel(&cfg, "gemm", scale);
+    let (s, _) = run_kernel_threads(&cfg, "gemm", scale, threads);
     t.row(vec!["GEMM IPC".into(), "0.70".into(), f2(s.ipc())]);
     t.row(vec![
         "GEMM sustained GFLOP/s".into(),
@@ -498,7 +538,7 @@ pub fn headline(scale: Scale) -> Table {
         "100-200 (up to 200 w/ f16)".into(),
         f1(em.gflops_per_watt(&s)),
     ]);
-    let (sa, _) = run_kernel(&cfg, "axpy", scale);
+    let (sa, _) = run_kernel_threads(&cfg, "axpy", scale, threads);
     t.row(vec!["AXPY IPC".into(), "0.85".into(), f2(sa.ipc())]);
     // HBML.
     let (gbps, util) = hbml_sweep_point(900.0, DdrRate::G3_6, scale.pick(896 * 1024, 64 * 1024));

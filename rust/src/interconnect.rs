@@ -394,6 +394,14 @@ impl Interconnect {
         self.scratch_nodes = nodes;
     }
 
+    /// Deliver all responses due at `now` into a caller-owned vector, in
+    /// the same fixed order `drain_responses` uses — the collection form
+    /// the two-phase parallel engine needs to bucket responses per Tile
+    /// before handing them to the worker threads.
+    pub fn drain_responses_into(&mut self, now: u64, out: &mut Vec<Response>) {
+        self.drain_responses(now, |r| out.push(r));
+    }
+
     /// Deliver all responses due at `now` (call at the top of each cycle).
     pub fn drain_responses(&mut self, now: u64, mut sink: impl FnMut(Response)) {
         let mut due = std::mem::take(&mut self.scratch_responses);

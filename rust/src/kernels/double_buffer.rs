@@ -51,6 +51,13 @@ pub struct DbResult {
 
 /// Build and run a double-buffered kernel; returns the timing breakdown.
 pub fn run(cfg: &ClusterConfig, p: &DbParams) -> DbResult {
+    run_threads(cfg, p, 1)
+}
+
+/// [`run`] with the host engine choice threaded through: `threads > 1`
+/// executes the cluster on the deterministic tile-parallel engine
+/// (identical simulated results, less wall clock).
+pub fn run_threads(cfg: &ClusterConfig, p: &DbParams, threads: usize) -> DbResult {
     let nb = cfg.num_banks();
     let bf = cfg.banking_factor;
     let npes = cfg.num_pes();
@@ -226,7 +233,7 @@ pub fn run(cfg: &ClusterConfig, p: &DbParams) -> DbResult {
         hbm_image_stage(y_base + r as u64 * ch_b, &data);
     }
 
-    let stats = cl.run(200_000_000);
+    let stats = cl.run_threads(200_000_000, threads);
     let total_pe_cycles = stats.cycles as f64 * npes as f64;
     // Compute fraction: cycles not stalled on synchronization (DMA wait +
     // barrier) — the Fig. 14b split.

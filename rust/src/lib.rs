@@ -11,7 +11,11 @@
 //!   cluster: Snitch-like PEs ([`pe`]), the hierarchical Tile → SubGroup →
 //!   Group crossbar interconnect ([`interconnect`]), the banked shared-L1
 //!   SPM with the paper's hybrid address map ([`memory`]), and the cluster
-//!   composition with fork-join barriers ([`cluster`]);
+//!   composition with fork-join barriers ([`cluster`]) — runnable on a
+//!   serial reference engine or the deterministic two-phase tile-parallel
+//!   engine ([`parallel`], `Cluster::run_parallel`), which shards PE
+//!   stepping across host threads by the paper's Tile → SubGroup → Group
+//!   hierarchy while staying bit-identical to the serial engine;
 //! * the paper's **analytical AMAT model** of hierarchical crossbars,
 //!   Eqs. (3)–(6) ([`amat`]) — regenerates Table 4 and Fig. 8b;
 //! * the **High Bandwidth Memory Link**: a cycle-level HBM2E channel model
@@ -24,13 +28,18 @@
 //! * **physical-design models** calibrated on the paper's GF12 data:
 //!   routing congestion, GE area, per-instruction energy + EDP, EDA effort
 //!   ([`physical`]) — regenerates Table 3/Fig. 3 and Figs. 11–13;
-//! * the **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas AOT
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them as golden
-//!   references for the simulator's functional results.
+//! * the **golden runtime** ([`runtime`]) that loads the JAX/Pallas AOT
+//!   artifact manifest and the build-time-evaluated golden outputs
+//!   (`artifacts/*.golden.bin`) used as references for the simulator's
+//!   functional results.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
-//! Rust binary is self-contained afterwards. See DESIGN.md for the module
-//! ↔ experiment map and EXPERIMENTS.md for paper-vs-measured results.
+//! Rust binary is self-contained afterwards and depends on **no external
+//! crates** (the offline build has no registry — [`errors`] stands in for
+//! anyhow, [`rng`] for rand, [`parallel`] for rayon, `benches/util.rs`
+//! for criterion, `tests/properties.rs` for proptest). See DESIGN.md for
+//! the module ↔ experiment map and EXPERIMENTS.md for paper-vs-measured
+//! results.
 
 pub mod amat;
 pub mod axi;
@@ -38,11 +47,13 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dma;
+pub mod errors;
 pub mod hbm;
 pub mod interconnect;
 pub mod isa;
 pub mod kernels;
 pub mod memory;
+pub mod parallel;
 pub mod pe;
 pub mod physical;
 pub mod report;

@@ -104,6 +104,28 @@ impl AddressMap {
         }
     }
 
+    /// Inverse of [`AddressMap::map`]: the word address stored at a bank
+    /// location. Together with `map` this witnesses that the hybrid
+    /// scheme is a **bijection** between the word-address space and the
+    /// bank×row space (the paper's "wire crossings and a multiplexer"
+    /// claim, Sec. 5.4) — property-tested over randomized bank/tile
+    /// counts in rust/tests/properties.rs.
+    pub fn unmap(&self, at: BankAddr) -> u32 {
+        let bank = at.bank as usize;
+        let row = at.row as usize;
+        debug_assert!(bank < self.num_banks && row < self.words_per_bank);
+        if row < self.seq_rows_per_bank {
+            // Sequential region: the Tile owning the bank, row-major
+            // within the Tile's private range.
+            let tile = bank / self.banks_per_tile;
+            let off = row * self.banks_per_tile + bank % self.banks_per_tile;
+            (tile * self.seq_words_per_tile + off) as u32
+        } else {
+            let off = (row - self.seq_rows_per_bank) * self.num_banks + bank;
+            (self.seq_words_total + off) as u32
+        }
+    }
+
     /// SubGroup that owns an interleaved-region word (for the iDMA midend
     /// split, Sec. 5.4: 256 banks per SubGroup, one word per bank-row →
     /// contiguous 256-word runs alternate SubGroups).
@@ -255,6 +277,24 @@ mod tests {
             assert!((ma.row as usize) < cfg.words_per_bank);
             if a != b {
                 assert_ne!(ma, mb, "collision: {a} and {b} -> {ma:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unmap_inverts_map_on_both_regions() {
+        for cfg in [ClusterConfig::tiny(), ClusterConfig::terapool(9)] {
+            let m = AddressMap::new(&cfg);
+            let probes = [
+                0u32,
+                1,
+                m.interleaved_base() - 1,
+                m.interleaved_base(),
+                m.interleaved_base() + 4097,
+                cfg.l1_words() as u32 - 1,
+            ];
+            for w in probes {
+                assert_eq!(m.unmap(m.map(w)), w, "{}: word {w}", cfg.name);
             }
         }
     }

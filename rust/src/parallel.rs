@@ -1,0 +1,256 @@
+//! Host-side parallel execution plumbing for the deterministic two-phase
+//! cluster engine (`Cluster::run_parallel`), replacing the `rayon` crate
+//! in this offline build with `std::thread::scope` plus a spin barrier.
+//!
+//! ## Determinism contract (see DESIGN.md §Two-phase engine)
+//!
+//! Each simulated cycle is split into:
+//!
+//! * **phase 1 (parallel)** — per-Tile work with no shared state: apply
+//!   the cycle's L1 responses and wake-ups to the Tile's PEs, then issue
+//!   each PE in index order, queuing the resulting memory/sync actions
+//!   into a per-worker buffer. Workers own disjoint, *contiguous* ranges
+//!   of Tiles (Tile → SubGroup → Group order, the paper's physical
+//!   hierarchy), so concatenating the per-worker buffers in worker order
+//!   reproduces the exact PE-ascending order of the serial engine.
+//! * **phase 2 (serial)** — the coordinator drains the per-worker action
+//!   buffers in worker order and performs bank arbitration, barrier
+//!   bookkeeping and DMA progress in a fixed total order, bit-identically
+//!   to [`crate::cluster::Cluster::step`].
+//!
+//! Because PE state is only ever mutated in phase 1 by the worker that
+//! owns it, and all shared structures (interconnect queues, L1 banks,
+//! barrier counters, the DMA engine) are only mutated in phase 2 in a
+//! fixed order, results, cycle counts and every statistic are identical
+//! to the serial engine for any thread count — `rust/tests/
+//! parallel_equiv.rs` enforces this differentially.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::interconnect::Response;
+use crate::pe::{Action, Pe};
+
+/// Default worker-thread count for harness code (tests, benches,
+/// examples): the host's cores, capped at 8 — beyond the Tile-sharding
+/// sweet spot the serial phase 2 dominates anyway (EXPERIMENTS.md §Perf).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Sense-reversing spin barrier: far cheaper per crossing than
+/// `std::sync::Barrier` (no mutex/condvar), which matters because the
+/// engine crosses it twice per simulated cycle.
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block (spinning) until all `n` participants have arrived.
+    pub fn wait(&self) {
+        let round = self.generation.load(Ordering::SeqCst);
+        if self.count.fetch_add(1, Ordering::SeqCst) + 1 == self.n {
+            // Last arriver: reset the counter *before* releasing the
+            // generation, so early re-entrants of the next round never
+            // race the reset.
+            self.count.store(0, Ordering::SeqCst);
+            self.generation.fetch_add(1, Ordering::SeqCst);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::SeqCst) == round {
+                spins += 1;
+                if spins < 4096 {
+                    std::hint::spin_loop();
+                } else {
+                    // Long serial phase (e.g. heavy bank arbitration):
+                    // stop burning the core.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Coordinator-side drop guard: sets `stop` and performs the final
+/// barrier crossing exactly once — on normal completion *or* while the
+/// coordinator unwinds from a panic (e.g. a routing assert in phase 2).
+/// Without it, workers parked at the cycle-top rendezvous would spin
+/// forever and `std::thread::scope` would never finish joining, turning
+/// a clean panic into a hang. Every coordinator panic site has the
+/// workers parked at that rendezvous (they only run strictly between
+/// the two phase-1 barrier crossings), so the single release here is
+/// always paired.
+pub struct PoolShutdown<'a> {
+    stop: &'a AtomicBool,
+    barrier: &'a SpinBarrier,
+}
+
+impl<'a> PoolShutdown<'a> {
+    pub fn new(stop: &'a AtomicBool, barrier: &'a SpinBarrier) -> Self {
+        PoolShutdown { stop, barrier }
+    }
+}
+
+impl Drop for PoolShutdown<'_> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.barrier.wait();
+    }
+}
+
+/// Coordinator → worker hand-off for one cycle.
+#[derive(Default)]
+pub struct Inbox {
+    /// L1 responses due this cycle for PEs owned by the worker, in the
+    /// global drained order.
+    pub responses: Vec<Response>,
+    /// PEs (global indices) to wake before issuing: barrier releases and
+    /// DMA completions.
+    pub wakes: Vec<u32>,
+}
+
+/// Per-worker mailbox. Phases strictly alternate (enforced by the
+/// barrier), so every lock below is uncontended; the Mutex exists to give
+/// the alternation a safe Rust expression, not for arbitration.
+pub struct WorkerChannel {
+    /// Global index of the first PE owned by this worker.
+    pub pe_base: u32,
+    pub inbox: Mutex<Inbox>,
+    /// Actions issued in phase 1, `(global pe index, action)` in PE order.
+    pub outbox: Mutex<Vec<(u32, Action)>>,
+    /// Whether any owned PE is still live after this worker's last phase.
+    pub busy: AtomicBool,
+}
+
+impl WorkerChannel {
+    pub fn new(pe_base: u32) -> Self {
+        WorkerChannel {
+            pe_base,
+            inbox: Mutex::new(Inbox::default()),
+            outbox: Mutex::new(Vec::new()),
+            busy: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Worker body: one iteration per simulated cycle until `stop` is raised.
+///
+/// `pes` is the worker's contiguous PE slice (whole Tiles); `ch.pe_base`
+/// is the global index of `pes[0]`. A panic inside the phase work (e.g.
+/// a debug assertion) raises `failed` and keeps the barrier protocol
+/// alive, so the coordinator can shut the pool down and re-raise instead
+/// of spinning forever.
+pub fn worker_loop(
+    pes: &mut [Pe],
+    ch: &WorkerChannel,
+    barrier: &SpinBarrier,
+    stop: &AtomicBool,
+    failed: &AtomicBool,
+) {
+    let base = ch.pe_base as usize;
+    let mut responses: Vec<Response> = Vec::new();
+    let mut wakes: Vec<u32> = Vec::new();
+    let mut actions: Vec<(u32, Action)> = Vec::new();
+    loop {
+        barrier.wait();
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+
+        let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Take this cycle's events (capacity is recycled both ways).
+            {
+                let mut inbox = ch.inbox.lock().unwrap();
+                std::mem::swap(&mut inbox.responses, &mut responses);
+                std::mem::swap(&mut inbox.wakes, &mut wakes);
+            }
+
+            // Response write-backs first, wake-ups second — the same
+            // order the serial engine uses within a cycle.
+            for r in &responses {
+                pes[r.core as usize - base].apply_response(r);
+            }
+            responses.clear();
+            for &pe in &wakes {
+                pes[pe as usize - base].wake();
+            }
+            wakes.clear();
+
+            // Issue every owned PE in index order.
+            let mut busy = false;
+            for (i, pe) in pes.iter_mut().enumerate() {
+                let action = pe.try_issue();
+                if action != Action::None {
+                    actions.push(((base + i) as u32, action));
+                }
+                busy |= !pe.done();
+            }
+            ch.busy.store(busy, Ordering::SeqCst);
+            {
+                // Publish the actions; the coordinator swapped in an
+                // empty vector (recycled capacity) at the end of last
+                // cycle.
+                let mut outbox = ch.outbox.lock().unwrap();
+                std::mem::swap(&mut *outbox, &mut actions);
+            }
+            debug_assert!(actions.is_empty());
+        }));
+        if work.is_err() {
+            failed.store(true, Ordering::SeqCst);
+        }
+
+        barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn spin_barrier_rendezvous_many_rounds() {
+        const THREADS: usize = 4;
+        const ROUNDS: u64 = 200;
+        let barrier = SpinBarrier::new(THREADS);
+        let counter = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for round in 0..ROUNDS {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        barrier.wait();
+                        // After the barrier, all THREADS increments of
+                        // this round must be visible.
+                        let c = counter.load(Ordering::SeqCst);
+                        assert!(c >= (round + 1) * THREADS as u64, "round {round}: {c}");
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), ROUNDS * THREADS as u64);
+    }
+
+    #[test]
+    fn single_participant_barrier_never_blocks() {
+        let b = SpinBarrier::new(1);
+        for _ in 0..10 {
+            b.wait();
+        }
+    }
+}

@@ -16,6 +16,7 @@
 //! * **barrier/WFI**: arrival is an atomic fetch&add on the Tile-local
 //!   counter, then the core sleeps until the cluster's wake-up broadcast.
 
+use crate::interconnect::{ReqKind, Response};
 use crate::isa::{Op, OpClass, Program, CTRL_BUBBLE, NUM_REGS};
 
 /// Why the PE could not issue this cycle (Fig. 14a stall taxonomy).
@@ -315,6 +316,17 @@ impl Pe {
     pub fn complete_ack(&mut self) {
         debug_assert!(self.tx_inflight > 0);
         self.tx_inflight -= 1;
+    }
+
+    /// Apply a completed L1 response: load write-back or store/atomic
+    /// acknowledgement. Touches only this PE's private state, so both the
+    /// serial and the tile-parallel engine route responses through here
+    /// (barrier-counter bookkeeping stays with the cluster).
+    pub fn apply_response(&mut self, r: &Response) {
+        match r.kind {
+            ReqKind::Read { rd } => self.complete_load(rd, r.value),
+            ReqKind::Write | ReqKind::Amo => self.complete_ack(),
+        }
     }
 
     /// Barrier release broadcast (or DMA completion) received.

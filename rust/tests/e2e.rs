@@ -37,6 +37,16 @@ fn kernel_suite_runs_on_full_terapool_fast_scale() {
 }
 
 #[test]
+fn parallel_engine_reproduces_serial_on_full_terapool_fast_scale() {
+    use terapool::coordinator::run_kernel_threads;
+    let cfg = ClusterConfig::terapool(9);
+    let (serial, _) = run_kernel(&cfg, "axpy", Scale::Fast);
+    let threads = terapool::parallel::default_threads();
+    let (parallel, _) = run_kernel_threads(&cfg, "axpy", Scale::Fast, threads);
+    assert_eq!(serial, parallel, "1024-PE axpy diverges at {threads} threads");
+}
+
+#[test]
 fn spill_register_tradeoff_latency_vs_frequency() {
     // More spill registers (11-cycle remote) cost cycles but buy MHz —
     // wall-clock for a remote-heavy workload must stay within ~20 %.

@@ -1,0 +1,239 @@
+//! Differential suite: the deterministic two-phase tile-parallel engine
+//! (`Cluster::run_parallel`) vs the serial reference engine
+//! (`Cluster::run`).
+//!
+//! The acceptance bar of the engine (DESIGN.md §Two-phase engine): for
+//! every Table-6 cluster configuration and kernel, the parallel engine
+//! must produce the **identical** final memory image, cycle count and
+//! `RunStats` (instructions, per-cause stalls, AMAT, per-class request
+//! histogram — everything `RunStats: PartialEq` compares) at 1, 2, 4 and
+//! 8 host threads. No tolerances anywhere: determinism means bit
+//! equality.
+
+use terapool::cluster::{Cluster, RunStats};
+use terapool::config::ClusterConfig;
+use terapool::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
+use terapool::isa::{Op, Program};
+use terapool::kernels::{axpy, dotp, gemm, KernelSetup};
+use terapool::memory::L1Memory;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Every ClusterConfig the paper's Table 6 sweeps, plus all three
+/// TeraPool spill-register operating points.
+fn table6_configs() -> Vec<ClusterConfig> {
+    vec![
+        ClusterConfig::tiny(),
+        ClusterConfig::mempool(),
+        ClusterConfig::occamy(),
+        ClusterConfig::terapool(7),
+        ClusterConfig::terapool(9),
+        ClusterConfig::terapool(11),
+    ]
+}
+
+/// Cluster-size-scaled kernel problems, small enough that the full
+/// matrix (6 configs × 3 kernels × 5 engine runs) stays fast in debug.
+fn build_kernel(cfg: &ClusterConfig, which: &str) -> KernelSetup {
+    match which {
+        "axpy" => axpy::build(cfg, &axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 }),
+        "dotp" => dotp::build(cfg, &dotp::DotpParams { n: cfg.num_banks() * 4 }),
+        "gemm" => gemm::build(cfg, &gemm::GemmParams { m: 32, n: 32, k: 32 }),
+        other => panic!("unknown kernel {other}"),
+    }
+}
+
+fn run_engine(
+    cfg: &ClusterConfig,
+    which: &str,
+    threads: Option<usize>,
+) -> (RunStats, Vec<f32>) {
+    let setup = build_kernel(cfg, which);
+    let (mut cl, io) = setup.into_cluster(cfg.clone());
+    let stats = match threads {
+        None => cl.run(50_000_000),
+        Some(t) => cl.run_parallel(50_000_000, t),
+    };
+    let out = io.read_output(&cl);
+    (stats, out)
+}
+
+fn assert_engines_agree(cfg: &ClusterConfig, which: &str) {
+    let (serial_stats, serial_out) = run_engine(cfg, which, None);
+    for &threads in &THREADS {
+        let (par_stats, par_out) = run_engine(cfg, which, Some(threads));
+        assert_eq!(
+            serial_stats, par_stats,
+            "{} / {which}: stats diverge at {threads} threads",
+            cfg.name
+        );
+        assert_eq!(
+            serial_out, par_out,
+            "{} / {which}: memory image diverges at {threads} threads",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn axpy_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        assert_engines_agree(&cfg, "axpy");
+    }
+}
+
+#[test]
+fn dotp_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        assert_engines_agree(&cfg, "dotp");
+    }
+}
+
+#[test]
+fn gemm_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        assert_engines_agree(&cfg, "gemm");
+    }
+}
+
+/// Synthetic stress trace: control bubbles, bank-hammering atomics and
+/// two barrier phases with a straggler PE — the shared-state paths
+/// (barrier counters, wake broadcast, atomic serialization) where a
+/// non-deterministic engine would diverge first.
+#[test]
+fn stress_trace_identical_across_engines() {
+    for cfg in [ClusterConfig::tiny(), ClusterConfig::mempool()] {
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let hot = base; // every PE's atomic hits this word
+        let out = base + cfg.num_banks() as u32;
+        let npes = cfg.num_pes();
+        let build = |cfg: &ClusterConfig| -> Vec<Program> {
+            (0..cfg.num_pes())
+                .map(|i| {
+                    let mut p = Program::new();
+                    p.ld_imm(1, 1.0);
+                    if i == 0 {
+                        // Straggler: every other PE piles up at barrier 0.
+                        for _ in 0..100 {
+                            p.alu();
+                            p.branch();
+                        }
+                    }
+                    p.atom_add(1, hot);
+                    p.barrier(0);
+                    p.ld(2, hot);
+                    p.st(2, out + i as u32);
+                    p.barrier(1);
+                    p.ld(3, out + ((i as u32 + 1) % cfg.num_pes() as u32));
+                    p.add(4, 3, 2);
+                    p.halt();
+                    p
+                })
+                .collect()
+        };
+        let mut serial = Cluster::new(cfg.clone(), build(&cfg));
+        let s_stats = serial.run(1_000_000);
+        // The atomic sum must be visible to every PE after barrier 0.
+        assert_eq!(serial.l1.read(hot), npes as f32, "{}", cfg.name);
+        for &threads in &THREADS {
+            let mut par = Cluster::new(cfg.clone(), build(&cfg));
+            let p_stats = par.run_parallel(1_000_000, threads);
+            assert_eq!(s_stats, p_stats, "{}: stats @ {threads} threads", cfg.name);
+            assert_eq!(
+                serial.l1.read_slice(out, npes),
+                par.l1.read_slice(out, npes),
+                "{}: image @ {threads} threads",
+                cfg.name
+            );
+        }
+    }
+}
+
+/// DMA start/wait traces must behave identically too: the coordinator
+/// owns DMA progress in both engines, but the wake paths differ
+/// mechanically (in-cycle vs next-cycle-top wake) and must stay
+/// observationally identical.
+#[test]
+fn dma_trace_identical_across_engines() {
+    let cfg = ClusterConfig::tiny();
+    let base = L1Memory::new(&cfg).map.interleaved_base();
+    let words = 256usize;
+    let data: Vec<f32> = (0..words).map(|i| i as f32 + 0.25).collect();
+    let build = |cfg: &ClusterConfig| -> Vec<Program> {
+        (0..cfg.num_pes())
+            .map(|i| {
+                let mut p = Program::new();
+                if i == 0 {
+                    p.push(Op::DmaStart { id: 0 });
+                }
+                p.push(Op::DmaWait { id: 0 });
+                p.ld(1, base + i as u32);
+                p.push(Op::DmaWait { id: 0 }); // already-retired wait path
+                p.st(1, base + words as u32 + i as u32);
+                p.halt();
+                p
+            })
+            .collect()
+    };
+    let run = |threads: Option<usize>| -> (RunStats, Vec<f32>) {
+        hbm_image_clear();
+        hbm_image_stage(0, &data);
+        let mut cl = Cluster::new(cfg.clone(), build(&cfg)).with_dma();
+        cl.dma.as_mut().unwrap().register(DmaDescriptor {
+            l1_word: base,
+            mem_byte: 0,
+            words: words as u32,
+            to_l1: true,
+        });
+        let stats = match threads {
+            None => cl.run(1_000_000),
+            Some(t) => cl.run_parallel(1_000_000, t),
+        };
+        let image = cl.l1.read_slice(base + words as u32, cfg.num_pes());
+        (stats, image)
+    };
+    let (s_stats, s_image) = run(None);
+    assert_eq!(s_image[0], 0.25, "DMA staged data must land in L1");
+    for &threads in &THREADS {
+        let (p_stats, p_image) = run(Some(threads));
+        assert_eq!(s_stats, p_stats, "stats @ {threads} threads");
+        assert_eq!(s_image, p_image, "image @ {threads} threads");
+    }
+}
+
+/// Thread counts beyond the Tile count (and absurd ones) clamp instead
+/// of misbehaving — occamy has a single Tile, so this exercises the
+/// one-worker edge of the sharding.
+#[test]
+fn thread_clamping_preserves_results() {
+    let cfg = ClusterConfig::occamy();
+    let (serial_stats, serial_out) = run_engine(&cfg, "axpy", None);
+    for threads in [1usize, 3, 64, 1024] {
+        let (p_stats, p_out) = run_engine(&cfg, "axpy", Some(threads));
+        assert_eq!(serial_stats, p_stats, "{threads} threads");
+        assert_eq!(serial_out, p_out, "{threads} threads");
+    }
+}
+
+/// The coordinator must also agree with itself: re-running the parallel
+/// engine at the same thread count is reproducible (no hidden
+/// scheduling dependence).
+#[test]
+fn parallel_engine_is_reproducible() {
+    let cfg = ClusterConfig::tiny();
+    let (a_stats, a_out) = run_engine(&cfg, "gemm", Some(4));
+    let (b_stats, b_out) = run_engine(&cfg, "gemm", Some(4));
+    assert_eq!(a_stats, b_stats);
+    assert_eq!(a_out, b_out);
+}
+
+/// run_kernel_threads must route through the same engines (guards the
+/// coordinator plumbing used by the CLI's --threads flag).
+#[test]
+fn coordinator_threading_matches_serial() {
+    use terapool::coordinator::{run_kernel, run_kernel_threads, Scale};
+    let cfg = ClusterConfig::tiny();
+    let (s, _) = run_kernel(&cfg, "axpy", Scale::Fast);
+    let (p, _) = run_kernel_threads(&cfg, "axpy", Scale::Fast, 4);
+    assert_eq!(s, p);
+}

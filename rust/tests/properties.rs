@@ -1,0 +1,276 @@
+//! Property tests over randomized configurations — the offline stand-in
+//! for `proptest` (same policy as `rng` replacing rand): a deterministic
+//! `forall` driver that reports the failing case and seed so a failure
+//! reproduces exactly.
+//!
+//! Covered contracts:
+//!
+//! * **hybrid address map is a bijection** (memory.rs, Sec. 5.4): for
+//!   randomized bank/tile/region shapes, `map` is injective over the
+//!   full L1 range, onto the bank×row space, and `unmap` inverts it;
+//! * **AMAT monotonicity** (amat.rs, Sec. 3.1): latency never decreases
+//!   with radix-induced hop count — per-level zero-load latencies grow
+//!   strictly with hierarchy distance, contention models are monotone in
+//!   injection rate and port sharing, and measured burst latencies are
+//!   bounded below by their zero-load floor.
+
+use terapool::amat::{
+    expected_latency_n_to_1, expected_latency_n_to_k, HierSpec,
+};
+use terapool::config::{ClusterConfig, Hierarchy};
+use terapool::memory::AddressMap;
+use terapool::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs; panic with the case index,
+/// seed and input debug on the first violation.
+fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    generate: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x})\n  \
+                 input: {input:?}\n  violation: {msg}"
+            );
+        }
+    }
+}
+
+fn pick<T: Copy>(rng: &mut Rng, options: &[T]) -> T {
+    options[rng.gen_range(options.len())]
+}
+
+/// Random but valid cluster shape: hierarchy, banking factor, bank depth
+/// and sequential-region size all vary; the seed keeps it reproducible.
+fn random_cfg(rng: &mut Rng) -> ClusterConfig {
+    let mut cfg = ClusterConfig::tiny();
+    cfg.hierarchy = Hierarchy {
+        pes_per_tile: pick(rng, &[2, 4, 8]),
+        tiles_per_subgroup: pick(rng, &[1, 2, 4]),
+        subgroups_per_group: pick(rng, &[1, 2, 4]),
+        groups: pick(rng, &[1, 2, 4]),
+    };
+    cfg.banking_factor = pick(rng, &[2, 4]);
+    cfg.words_per_bank = pick(rng, &[64, 128, 256]);
+    // Sequential region: whole bank rows per Tile, leaving most rows to
+    // the interleaved region (the AddressMap constructor's invariants).
+    let rows = 1 + rng.gen_range(8);
+    cfg.seq_words_per_tile = rows * cfg.banks_per_tile();
+    cfg.name = format!(
+        "prop-{}c-{}t-{}sg-{}g-bf{}-wpb{}-seq{}",
+        cfg.hierarchy.pes_per_tile,
+        cfg.hierarchy.tiles_per_subgroup,
+        cfg.hierarchy.subgroups_per_group,
+        cfg.hierarchy.groups,
+        cfg.banking_factor,
+        cfg.words_per_bank,
+        cfg.seq_words_per_tile,
+    );
+    cfg
+}
+
+#[test]
+fn address_map_is_a_bijection_for_random_shapes() {
+    forall(
+        "hybrid map bijection",
+        24,
+        0xB17_5EED,
+        |rng| random_cfg(rng),
+        |cfg| {
+            let m = AddressMap::new(cfg);
+            let words = cfg.l1_words();
+            let mut seen = vec![false; words];
+            for w in 0..words as u32 {
+                let at = m.map(w);
+                if at.bank as usize >= cfg.num_banks() || at.row as usize >= cfg.words_per_bank
+                {
+                    return Err(format!("{}: word {w} maps out of range {at:?}", cfg.name));
+                }
+                let flat = at.bank as usize * cfg.words_per_bank + at.row as usize;
+                if seen[flat] {
+                    return Err(format!("{}: collision at word {w} -> {at:?}", cfg.name));
+                }
+                seen[flat] = true;
+                let back = m.unmap(at);
+                if back != w {
+                    return Err(format!(
+                        "{}: round-trip broke: {w} -> {at:?} -> {back}",
+                        cfg.name
+                    ));
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("{}: map is not onto", cfg.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Realistic hierarchy shapes for the AMAT model (the γ>1, δ=1 corner is
+/// not a paper configuration and the 3-level bookkeeping excludes it).
+fn random_spec(rng: &mut Rng) -> HierSpec {
+    let alpha = pick(rng, &[2, 4, 8, 16]);
+    let beta = pick(rng, &[2, 4, 8]);
+    let (gamma, delta) = pick(rng, &[(1, 1), (1, 2), (1, 4), (2, 2), (2, 4), (4, 4)]);
+    HierSpec::new(alpha, beta, gamma, delta)
+}
+
+#[test]
+fn level_latency_grows_with_hop_count() {
+    forall(
+        "zero-load latency strictly increases per hierarchy level",
+        32,
+        0xA3A7,
+        |rng| random_spec(rng),
+        |spec| {
+            for level in 0..3 {
+                let (lo, hi) = (spec.level_latency(level), spec.level_latency(level + 1));
+                if hi <= lo {
+                    return Err(format!(
+                        "{}: level {} latency {hi} <= level {} latency {lo}",
+                        spec.name(),
+                        level + 1,
+                        level
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn arbiter_contention_is_monotone_in_injection_rate_and_fanin() {
+    forall(
+        "E[n->1] monotone in p and n",
+        200,
+        0xC0DE,
+        |rng| {
+            let n = 2 + rng.gen_range(63);
+            let p_lo = rng.f64() * 0.98 + 0.01;
+            let p_hi = p_lo + rng.f64() * (1.0 - p_lo);
+            (n, p_lo, p_hi)
+        },
+        |&(n, p_lo, p_hi)| {
+            let (e_lo, e_hi) = (
+                expected_latency_n_to_1(n, p_lo),
+                expected_latency_n_to_1(n, p_hi),
+            );
+            if e_hi + 1e-9 < e_lo {
+                return Err(format!("p: E({n},{p_hi:.4})={e_hi} < E({n},{p_lo:.4})={e_lo}"));
+            }
+            let e_more = expected_latency_n_to_1(n + 8, p_lo);
+            if e_more + 1e-9 < e_lo {
+                return Err(format!("n: E({},{p_lo:.4})={e_more} < E({n},..)={e_lo}", n + 8));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wider_arbiters_never_increase_expected_latency() {
+    forall(
+        "E[n->k] non-increasing in k",
+        200,
+        0xFA57,
+        |rng| {
+            let n = 2 + rng.gen_range(31);
+            let k = 1 << rng.gen_range(5); // 1..16
+            let p = rng.f64() * 0.99 + 0.01;
+            (n, k, p)
+        },
+        |&(n, k, p)| {
+            let narrow = expected_latency_n_to_k(n, k, p);
+            let wide = expected_latency_n_to_k(n, k * 2, p);
+            if wide > narrow + 1e-9 {
+                return Err(format!(
+                    "E({n}->{},{p:.4})={wide} > E({n}->{k},{p:.4})={narrow}",
+                    k * 2
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn analytic_amat_never_beats_zero_load() {
+    forall(
+        "AMAT >= zero-load latency",
+        32,
+        0x1234_5678,
+        |rng| random_spec(rng),
+        |spec| {
+            let (amat, zl) = (spec.analytic_amat(), spec.zero_load_latency());
+            if amat + 1e-9 < zl {
+                return Err(format!(
+                    "{}: analytic AMAT {amat:.4} < zero-load {zl:.4}",
+                    spec.name()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn burst_latencies_are_floored_by_their_hop_count() {
+    forall(
+        "per-level burst mean >= per-level zero-load",
+        12,
+        0xB0B5,
+        |rng| (random_spec(rng), rng.next_u64()),
+        |(spec, seed)| {
+            let r = terapool::amat::burst_amat(spec, *seed);
+            if r.amat < 1.0 - 1e-9 {
+                return Err(format!("{}: AMAT {} < 1", spec.name(), r.amat));
+            }
+            for level in 0..spec.levels() {
+                let mean = r.amat_per_level[level];
+                if mean == 0.0 {
+                    continue; // no request drew this level in the burst
+                }
+                let floor = spec.level_latency(level) as f64;
+                if mean + 1e-9 < floor {
+                    return Err(format!(
+                        "{}: level {level} mean {mean:.3} < zero-load {floor}",
+                        spec.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fig. 8b's qualitative shape on the paper's own four-level rows:
+/// measured per-level latency is ordered by hop count.
+#[test]
+fn burst_per_level_latency_ordered_on_table4_four_level_rows() {
+    for spec in [
+        HierSpec::new(4, 16, 4, 4),
+        HierSpec::new(8, 8, 4, 4),
+        HierSpec::new(16, 4, 4, 4),
+    ] {
+        let r = terapool::amat::amat(&spec, 4);
+        for level in 0..3 {
+            assert!(
+                r.amat_per_level[level] <= r.amat_per_level[level + 1] + 1e-9,
+                "{}: level {} mean {:.3} > level {} mean {:.3}",
+                spec.name(),
+                level,
+                r.amat_per_level[level],
+                level + 1,
+                r.amat_per_level[level + 1]
+            );
+        }
+    }
+}
