@@ -20,9 +20,11 @@ is self-contained afterwards.  Two manifest-described products per entry:
   by python/tests), so the Rust golden tests compare the cluster
   simulator against an independent code path with no FFI at test time.
 
-spmmadd gets no golden: its canonical inputs are CSR matrices drawn from
-the Rust-side SplitMix64 generator, not a closed form; the Rust tests
-cover it with the dense-add oracle instead.
+spmmadd's canonical inputs are CSR matrices drawn from the Rust-side
+SplitMix64 generator rather than a closed form; ``rng.py`` ports the
+generator bit-for-bit (cross-language pinned by python/tests/test_rng.py
+and rust/src/rng.rs), densifies the same matrices, and the dense-sum
+oracle evaluates them into ``spmmadd.golden.bin``.
 """
 
 from __future__ import annotations
@@ -38,7 +40,8 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from .kernels import ref
-from .model import AXPY_N, ENTRIES, FFT_BATCH, FFT_N, GEMM_N
+from .model import AXPY_N, ENTRIES, FFT_BATCH, FFT_N, GEMM_N, SPM_N
+from .rng import spmmadd_dense_inputs
 
 
 def to_hlo_text(lowered) -> str:
@@ -83,7 +86,12 @@ def golden_inputs(name: str):
             _ramp(FFT_BATCH * FFT_N, 17, 0.25, 2.0).reshape(FFT_BATCH, FFT_N),
             _ramp(FFT_BATCH * FFT_N, 5, 0.5, 1.0).reshape(FFT_BATCH, FFT_N),
         )
-    return None  # spmmadd: no closed-form canonical inputs
+    if name == "spmmadd":
+        # Densified canonical CSR pair from the ported SplitMix64
+        # generator (rng.py) — bit-identical to Csr::random in
+        # rust/src/kernels/spmmadd.rs.
+        return spmmadd_dense_inputs(SPM_N)
+    return None
 
 
 # Pure-jnp oracle per entry (the specification layer of kernels/ref.py).
@@ -92,6 +100,7 @@ GOLDEN_ORACLES = {
     "dotp": lambda x, y: (ref.dotp(x, y).reshape(1),),
     "gemm": lambda a, b: (ref.gemm(a, b),),
     "fft": lambda re, im: ref.fft(re, im),
+    "spmmadd": lambda a, b: (ref.spmmadd_dense(a, b),),
 }
 
 

@@ -1,0 +1,93 @@
+"""SplitMix64 port of rust/src/rng.rs, plus the CSR workload generator of
+rust/src/kernels/spmmadd.rs.
+
+The SpMMadd kernel's canonical inputs are sparse CSR matrices drawn from
+the Rust-side SplitMix64 generator — not a closed form — which is why the
+kernel long had no JAX golden. This module reproduces the generator (and
+the exact draw *order* of ``Csr::random``) bit-for-bit, so ``aot.py`` can
+densify the same matrices and evaluate ``ref.spmmadd_dense`` into
+``artifacts/spmmadd.golden.bin``.
+
+Cross-language contract: ``python/tests/test_rng.py`` and the tests in
+``rust/src/rng.rs`` pin the first 64 draws of seed ``0x5EED`` to the same
+constants; drift on either side fails both suites.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+
+# The canonical SpMMadd workload (mirrors `terapool validate` and the
+# golden tests in rust/tests/golden.rs): 512×512, ~8 nnz/row, seed 0x5EED;
+# B's seed is derived exactly as in rust/src/kernels/spmmadd.rs.
+SPMMADD_SEED = 0x5EED
+SPMMADD_SEED_B_XOR = 0xFFFF_0000
+SPMMADD_NNZ_PER_ROW = 8
+
+
+class SplitMix64:
+    """Bit-exact port of ``rust/src/rng.rs::Rng`` (SplitMix64 core)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E37_79B9_7F4A_7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+    def gen_range(self, n: int) -> int:
+        """Uniform in [0, n) — Lemire multiply-shift, as in Rust."""
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+    def range(self, lo: int, hi: int) -> int:
+        """Uniform in [lo, hi)."""
+        return lo + self.gen_range(hi - lo)
+
+
+def csr_random(rows: int, cols: int, nnz_per_row: int, seed: int):
+    """Port of ``Csr::random``: identical draw order, sort and dedup.
+
+    Returns ``(row_ptr, col_idx, values)`` as Python lists; ``values``
+    are exact multiples of 0.25 (f32-representable).
+    """
+    rng = SplitMix64(seed)
+    row_ptr = [0]
+    col_idx: list[int] = []
+    values: list[float] = []
+    for _ in range(rows):
+        k = rng.gen_range(2 * nnz_per_row + 1)
+        cols_r = sorted(rng.gen_range(cols) for _ in range(k))
+        # dedup (consecutive, post-sort — matches Vec::dedup)
+        deduped: list[int] = []
+        for c in cols_r:
+            if not deduped or deduped[-1] != c:
+                deduped.append(c)
+        for c in deduped:
+            col_idx.append(c)
+            values.append(rng.range(-8, 8) * 0.25)
+        row_ptr.append(len(col_idx))
+    return row_ptr, col_idx, values
+
+
+def csr_to_dense(rows: int, cols: int, row_ptr, col_idx, values) -> np.ndarray:
+    """Port of ``Csr::to_dense`` (float32 accumulation)."""
+    d = np.zeros(rows * cols, dtype=np.float32)
+    for r in range(rows):
+        for i in range(row_ptr[r], row_ptr[r + 1]):
+            d[r * cols + col_idx[i]] += np.float32(values[i])
+    return d.reshape(rows, cols)
+
+
+def spmmadd_dense_inputs(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Densified canonical A and B for the spmmadd golden: the same CSR
+    matrices ``terapool validate`` and rust/tests/golden.rs rebuild from
+    the Rust generator."""
+    a = csr_random(n, n, SPMMADD_NNZ_PER_ROW, SPMMADD_SEED)
+    b = csr_random(n, n, SPMMADD_NNZ_PER_ROW, SPMMADD_SEED ^ SPMMADD_SEED_B_XOR)
+    return csr_to_dense(n, n, *a), csr_to_dense(n, n, *b)

@@ -1,0 +1,94 @@
+"""Cross-language pin of the SplitMix64 generator and the CSR workload
+generator (python/compile/rng.py vs rust/src/rng.rs +
+rust/src/kernels/spmmadd.rs).
+
+The 64 constants below are identical to
+`rust/src/rng.rs::tests::first_64_draws_pinned_cross_language`; the CSR
+invariant tests mirror what `Csr::random` guarantees structurally. If the
+port drifts from the Rust generator in any way, the spmmadd golden would
+silently describe a *different* matrix pair — these pins make that loud
+on both sides.
+"""
+
+import numpy as np
+
+from compile.rng import (
+    SPMMADD_NNZ_PER_ROW,
+    SPMMADD_SEED,
+    SPMMADD_SEED_B_XOR,
+    SplitMix64,
+    csr_random,
+    csr_to_dense,
+    spmmadd_dense_inputs,
+)
+
+# Keep in sync with rust/src/rng.rs (same seed, same order).
+PINNED_SEED = 0x5EED
+PINNED_DRAWS = [
+    0x09F1FD9D03F0A9B4, 0x553274161BBF8475, 0x5D5BCA4696B343B3, 0x70D29B6C7D22528D,
+    0x0BF2B716F9915475, 0x5EB7F92B95387CCA, 0x296CD0F2C21D7F90, 0x1289A69805C125B1,
+    0xDAA27FB8DACB9E73, 0x3ED08D59CB3F4727, 0x58A5F17B6C15C659, 0x651AC042FA7B481A,
+    0x22AF6AEAA88E8DCC, 0x2D2BAE64640ABFB9, 0xAD0E83A710231B07, 0x9D30FF2169D91F12,
+    0xF5FF07C9523504DD, 0x1273C823BA66EEC0, 0x47E1DBE249CB520B, 0xBBEA42BD69484ADC,
+    0xC33E61BC6EF9E4C4, 0x752CD583231B5114, 0xE53DC6E1988622E5, 0x928EB721ED361BA3,
+    0x10BF7972F379031E, 0x974041D15AD75C38, 0xFF9B273F42286387, 0x2601349FEF087EB0,
+    0x5753F8EF429A4A7E, 0x2663E5E9DCBCBABA, 0xA8BB872E52C6235C, 0xE1774D56B0DC91AC,
+    0x8634930F702B6452, 0x1674658F30892DDD, 0x2F957488E4FD469E, 0x656ED1CB9A126362,
+    0x5325662609163089, 0x3BA278A39643A1BC, 0x0EFA3DDA544646D9, 0x4CC8C74C1FB520CC,
+    0x626C1EF331F85C18, 0x01457B862CC7B3C9, 0x3825403DF6F9AD71, 0x272C78C413C9D42D,
+    0x4DDE6838B289C9CE, 0x1467A1289E64EB89, 0x00EB8B8A36B5B98D, 0xF2443B542BF81344,
+    0x278641CAD03AD4BE, 0x5A71CD3D503FAEEE, 0x2C58DAA06446969A, 0x79559FF0F9D26976,
+    0x4A127FE7AAC0FFFD, 0xBCA4883827803ECC, 0xB60627C1559D3728, 0x0D1D73CE3F48B12D,
+    0x78E74B9EB7B50E87, 0xEB26C664BA822E65, 0xEF794A8DCA9DCB0A, 0x89119CBF1EE9784B,
+    0x180B37DFF135DE45, 0xBE1B67D3E6055F33, 0x6FBE6FBA62CE02C8, 0x1FBF7B87B4F36BC8,
+]
+
+
+def test_first_64_draws_match_rust_pin():
+    rng = SplitMix64(PINNED_SEED)
+    draws = [rng.next_u64() for _ in range(64)]
+    assert draws == PINNED_DRAWS
+
+
+def test_gen_range_bounds_and_determinism():
+    a, b = SplitMix64(7), SplitMix64(7)
+    for _ in range(1000):
+        x, y = a.gen_range(13), b.gen_range(13)
+        assert x == y and 0 <= x < 13
+    assert SplitMix64(9).range(-8, 8) in range(-8, 8)
+
+
+def test_csr_structure_matches_rust_invariants():
+    row_ptr, col_idx, values = csr_random(64, 64, 4, 1)
+    assert row_ptr[0] == 0 and row_ptr[-1] == len(col_idx) == len(values)
+    for r in range(64):
+        cols_r = col_idx[row_ptr[r] : row_ptr[r + 1]]
+        # sorted + deduped, within range, ≤ 2*nnz_per_row entries
+        assert cols_r == sorted(set(cols_r))
+        assert all(0 <= c < 64 for c in cols_r)
+        assert len(cols_r) <= 8
+    # values are exact multiples of 0.25 in [-2, 2) (f32-representable)
+    assert all(v * 4 == int(v * 4) and -2.0 <= v < 2.0 for v in values)
+
+
+def test_densified_inputs_are_deterministic_and_sparse():
+    a1, b1 = spmmadd_dense_inputs(64)
+    a2, b2 = spmmadd_dense_inputs(64)
+    assert np.array_equal(a1, a2) and np.array_equal(b1, b2)
+    assert a1.dtype == np.float32 and a1.shape == (64, 64)
+    assert not np.array_equal(a1, b1), "A and B use different seeds"
+    # ~nnz_per_row entries per row on average, far below dense
+    assert 0 < np.count_nonzero(a1) < 64 * 64 // 2
+
+
+def test_dense_roundtrip_small_case():
+    row_ptr, col_idx, values = [0, 2, 3], [1, 3, 0], [0.25, -0.5, 1.75]
+    d = csr_to_dense(2, 4, row_ptr, col_idx, values)
+    want = np.array([[0, 0.25, 0, -0.5], [1.75, 0, 0, 0]], dtype=np.float32)
+    assert np.array_equal(d, want)
+
+
+def test_canonical_seed_constants():
+    # The golden pipeline and the Rust tests agree on the workload.
+    assert (SPMMADD_SEED, SPMMADD_NNZ_PER_ROW) == (0x5EED, 8)
+    assert SPMMADD_SEED ^ SPMMADD_SEED_B_XOR == 0x5EED ^ 0xFFFF_0000

@@ -1,9 +1,16 @@
 //! Bench (§Perf): raw simulator speed — simulated PE-cycles per host
 //! second on the 1024-PE cluster, serial engine vs the deterministic
-//! tile-parallel engine. The EXPERIMENTS.md §Perf target is ≥ 20 M
-//! PE-cycles/s so Fig. 14a regenerates in seconds; the parallel-engine
-//! acceptance bar is ≥ 3× over serial on the compute-trace benchmark at
-//! 8 threads (on a host with ≥ 8 cores).
+//! three-phase sharded engine. The EXPERIMENTS.md §Perf targets: ≥ 20 M
+//! PE-cycles/s serial on the compute trace so Fig. 14a regenerates in
+//! seconds, ≥ 3× over serial at 8 threads on the compute trace, and —
+//! now that phase 2 (bank arbitration) is sharded by destination Tile —
+//! ≥ 2.5× over serial at 8 threads on the memory-bound AXPY row (hosts
+//! with ≥ 8 cores).
+//!
+//! Besides the human-readable report, every run rewrites
+//! `BENCH_simspeed.json` at the repository root (one row per
+//! engine/thread-count configuration) so the perf trajectory is tracked
+//! across PRs; CI uploads it as an advisory artifact.
 //!
 //! `cargo bench --bench simspeed`
 
@@ -14,6 +21,73 @@ use terapool::cluster::Cluster;
 use terapool::config::ClusterConfig;
 use terapool::isa::Program;
 use terapool::kernels::axpy::{build, AxpyParams};
+
+/// One benchmark configuration's outcome, destined for the JSON report.
+struct Row {
+    bench: &'static str,
+    engine: String,
+    threads: usize,
+    median_ms: f64,
+    mean_ms: f64,
+    min_ms: f64,
+    /// Simulated PE-cycles of one run, in millions.
+    pe_mcycles: f64,
+    /// Throughput: simulated PE-cycles per host second, in millions.
+    mcycles_per_s: f64,
+    /// Wall-clock speedup vs this bench's serial row (1.0 for serial).
+    speedup_vs_serial: f64,
+}
+
+impl Row {
+    fn new(bench: &'static str, threads: usize, r: &util::BenchResult, pe_mcycles: f64, serial_ms: f64) -> Self {
+        Row {
+            bench,
+            engine: if threads <= 1 { "serial".into() } else { format!("sharded-{threads}") },
+            threads,
+            median_ms: r.median_ms,
+            mean_ms: r.mean_ms,
+            min_ms: r.min_ms,
+            pe_mcycles,
+            mcycles_per_s: pe_mcycles / (r.median_ms / 1e3),
+            speedup_vs_serial: serial_ms / r.median_ms,
+        }
+    }
+}
+
+/// Hand-rolled JSON (the offline build has no serde): enough structure
+/// for CI trend tooling — `{schema, host, rows: [...]}`.
+fn write_json(rows: &[Row], host_cores: usize) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simspeed.json");
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"terapool-simspeed-v1\",\n");
+    s.push_str(&format!("  \"host_cores\": {host_cores},\n"));
+    s.push_str("  \"unit\": \"simulated PE-Mcycles per host second\",\n");
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"bench\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
+             \"median_ms\": {:.3}, \"mean_ms\": {:.3}, \"min_ms\": {:.3}, \
+             \"pe_mcycles\": {:.3}, \"mcycles_per_s\": {:.2}, \
+             \"speedup_vs_serial\": {:.3}}}{}\n",
+            r.bench,
+            r.engine,
+            r.threads,
+            r.median_ms,
+            r.mean_ms,
+            r.min_ms,
+            r.pe_mcycles,
+            r.mcycles_per_s,
+            r.speedup_vs_serial,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+}
 
 fn compute_programs(cfg: &ClusterConfig) -> Vec<Program> {
     (0..cfg.num_pes())
@@ -33,15 +107,17 @@ fn compute_programs(cfg: &ClusterConfig) -> Vec<Program> {
 fn main() {
     let cfg = ClusterConfig::terapool(9);
     let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let pe_mcycles = 1024.0 * 2002.0 / 1e6;
+    let mut rows: Vec<Row> = Vec::new();
 
     // Pure-compute traces: issue-loop ceiling (no memory traffic). This
     // is the 1024-PE compute-trace benchmark of the acceptance criteria.
+    let pe_mcycles = 1024.0 * 2002.0 / 1e6;
     let serial = util::bench("compute 1024 PEs × 2k instrs (serial)", 5, || {
         let mut cl = Cluster::new(cfg.clone(), compute_programs(&cfg));
         cl.run(1_000_000).cycles
     });
     util::report_rate("PE-cycles", pe_mcycles, "M", serial.median_ms);
+    rows.push(Row::new("compute", 1, &serial, pe_mcycles, serial.median_ms));
 
     for threads in [2usize, 4, 8] {
         let r = util::bench(
@@ -57,12 +133,13 @@ fn main() {
             "  ↳ speedup vs serial: {:.2}x ({threads} threads, {host_cores} host cores)",
             serial.median_ms / r.median_ms
         );
+        rows.push(Row::new("compute", threads, &r, pe_mcycles, serial.median_ms));
     }
 
-    // Local-access memory traffic: AXPY (1 request per ~2 instrs) —
-    // phase 2 (bank arbitration) stays serial, so this bounds the
-    // Amdahl fraction of real kernels. Cycle count is captured from the
-    // timed runs (deterministic workload — every rep reports the same).
+    // Memory-bound traffic: AXPY (1 request per ~2 instrs). With phase 2
+    // sharded per destination Tile, the bank arbitration now scales with
+    // the workers; this row is the acceptance bar for the sharded engine
+    // (≥ 2.5× at 8 threads on an ≥ 8-core host).
     let p = AxpyParams { n: 256 * 1024, alpha: 2.0 };
     let mut cycles = 0u64;
     let serial = util::bench("axpy 256Ki on 1024 PEs (serial)", 3, || {
@@ -70,16 +147,22 @@ fn main() {
         cycles = cl.run(100_000_000).cycles;
         cycles
     });
-    util::report_rate("PE-cycles", (cycles * 1024) as f64 / 1e6, "M", serial.median_ms);
+    let axpy_mcycles = (cycles * 1024) as f64 / 1e6;
+    util::report_rate("PE-cycles", axpy_mcycles, "M", serial.median_ms);
+    rows.push(Row::new("axpy-1024", 1, &serial, axpy_mcycles, serial.median_ms));
 
-    let threads = terapool::parallel::default_threads().max(2);
-    let r = util::bench(&format!("axpy 256Ki on 1024 PEs ({threads} threads)"), 3, || {
-        let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
-        cl.run_parallel(100_000_000, threads).cycles
-    });
-    util::report_rate("PE-cycles", (cycles * 1024) as f64 / 1e6, "M", r.median_ms);
-    println!(
-        "  ↳ speedup vs serial: {:.2}x ({threads} threads, {host_cores} host cores)",
-        serial.median_ms / r.median_ms
-    );
+    for threads in [2usize, 4, 8] {
+        let r = util::bench(&format!("axpy 256Ki on 1024 PEs ({threads} threads)"), 3, || {
+            let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
+            cl.run_parallel(100_000_000, threads).cycles
+        });
+        util::report_rate("PE-cycles", axpy_mcycles, "M", r.median_ms);
+        println!(
+            "  ↳ speedup vs serial: {:.2}x ({threads} threads, {host_cores} host cores)",
+            serial.median_ms / r.median_ms
+        );
+        rows.push(Row::new("axpy-1024", threads, &r, axpy_mcycles, serial.median_ms));
+    }
+
+    write_json(&rows, host_cores);
 }

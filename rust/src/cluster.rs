@@ -12,24 +12,26 @@
 //! Two execution engines share the same per-cycle semantics:
 //!
 //! * [`Cluster::run`] — the serial reference engine: one host thread
-//!   steps every PE, the crossbar hierarchy and all banks in a fixed
-//!   order each cycle.
-//! * [`Cluster::run_parallel`] — the deterministic **two-phase
-//!   tile-parallel engine** (see DESIGN.md): phase 1 steps each Tile's
-//!   PEs on a pool of host worker threads sharded Tile → SubGroup →
-//!   Group (the paper's physical hierarchy), producing per-worker action
-//!   queues; phase 2 replays those queues in the serial engine's exact
-//!   PE order and resolves bank arbitration, barriers and DMA serially.
-//!   Results, cycle counts and statistics are bit-identical to the
-//!   serial engine for any thread count (`rust/tests/parallel_equiv.rs`).
+//!   steps every PE and every per-Tile memory domain in a fixed order
+//!   each cycle.
+//! * [`Cluster::run_parallel`] — the deterministic **three-phase sharded
+//!   engine** (see DESIGN.md): a serial pre-phase (responses, barriers,
+//!   DMA, cross-shard transfer merge) on the coordinator, then
+//!   tile-parallel PE issue with destination bucketing (phase 1) and
+//!   per-shard arbitration + bank access (phase 2) on a pool of host
+//!   worker threads, each owning a contiguous Tile range (Tile →
+//!   SubGroup → Group, the paper's physical hierarchy) — its PEs *and*
+//!   its Tiles' memory domains and L1 slices. Results, cycle counts and
+//!   statistics are bit-identical to the serial engine for any thread
+//!   count (`rust/tests/parallel_equiv.rs`).
 
 use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::dma::DmaSubsystem;
-use crate::interconnect::{Interconnect, NumaClass, ReqKind, Response};
+use crate::interconnect::{Interconnect, ReqKind, Request, Response, Topology, XferEvent};
 use crate::isa::Program;
-use crate::memory::L1Memory;
+use crate::memory::{AddressMap, L1Memory};
 use crate::pe::{Action, Pe, PeStats};
 
 /// Word offset inside each Tile's sequential region reserved for the
@@ -165,12 +167,15 @@ impl Cluster {
     }
 
     /// DMA/HBM progress + DmaWait-parked wake-ups (step 3 of the cycle),
-    /// shared by both engines like [`Cluster::release_barriers`].
+    /// shared by both engines like [`Cluster::release_barriers`]. The L1
+    /// goes in by shared reference: the DMA's functional word movement
+    /// uses the per-Tile slice locks, which are free here (the engines
+    /// only run DMA while no memory domain is being stepped).
     fn dma_progress(
         dma: &mut Option<DmaSubsystem>,
         dma_waiters: &mut Vec<(u32, u16)>,
         now: u64,
-        l1: &mut L1Memory,
+        l1: &L1Memory,
         mut wake: impl FnMut(u32),
     ) {
         if let Some(d) = dma.as_mut() {
@@ -186,11 +191,46 @@ impl Cluster {
         }
     }
 
+    /// Route one DMA control op into the engine-shared DMA state
+    /// (shared by both engines like [`Cluster::dma_progress`]):
+    /// `DmaStart` programs the frontend stamped with the op's issue
+    /// cycle; `DmaWait` wakes the PE when the descriptor already retired
+    /// (`wake` is an immediate PE wake in the serial engine, a
+    /// wake-buffer push in the parallel coordinator — observationally
+    /// identical) or parks it among the waiters otherwise.
+    fn dma_control(
+        dma: &mut Option<DmaSubsystem>,
+        dma_waiters: &mut Vec<(u32, u16)>,
+        issued_at: u64,
+        pe: u32,
+        action: Action,
+        mut wake: impl FnMut(u32),
+    ) {
+        match action {
+            Action::DmaStart { id } => dma
+                .as_mut()
+                .expect("trace uses DMA but cluster built without with_dma()")
+                .start(id, issued_at),
+            Action::DmaWait { id } => {
+                let done = dma.as_ref().map(|d| d.is_done(id)).unwrap_or(true);
+                if done {
+                    // DmaWait on an already-retired descriptor: resume
+                    // next cycle (the issue slot is spent either way).
+                    wake(pe);
+                } else {
+                    dma_waiters.push((pe, id));
+                }
+            }
+            _ => unreachable!("only DMA control ops reach dma_control"),
+        }
+    }
+
     /// Advance a single cycle.
     pub fn step(&mut self) {
         let now = self.cycle;
 
-        // 1. Deliver L1 responses due this cycle.
+        // 1. Deliver L1 responses due this cycle (drained from the domain
+        //    wheels at the end of the previous cycle's memory step).
         let pes = &mut self.pes;
         let barriers = &mut self.barriers;
         self.icn.drain_responses(now, |r| {
@@ -211,35 +251,42 @@ impl Cluster {
 
         // 3. DMA / HBM progress; wake DmaWait-parked PEs.
         let pes = &mut self.pes;
-        Self::dma_progress(&mut self.dma, &mut self.dma_waiters, now, &mut self.l1, |pe| {
+        Self::dma_progress(&mut self.dma, &mut self.dma_waiters, now, &self.l1, |pe| {
             pes[pe as usize].wake()
         });
 
-        // 4. PE issue phase.
+        // 4. PE issue phase: bucket every action by the pure routing
+        //    function shared with the parallel workers, then ingest.
         let ppt = self.cfg.hierarchy.pes_per_tile;
         for i in 0..self.pes.len() {
             let action = self.pes[i].try_issue();
             if action == Action::None {
                 continue;
             }
-            let wake = route_action(
-                now,
-                i as u32,
-                i / ppt,
-                action,
-                &mut self.icn,
-                &self.l1,
-                &mut self.dma,
-                &mut self.dma_waiters,
-            );
-            if let Some(pe) = wake {
-                // DmaWait on an already-retired descriptor: resume next
-                // cycle (the issue slot is spent either way).
-                self.pes[pe as usize].wake();
+            let tile = i / ppt;
+            let routed =
+                route_action(now, i as u32, tile, action, &self.l1.map, self.icn.topo());
+            match routed {
+                RoutedAction::None => {}
+                RoutedAction::Mem { req, master_port } => {
+                    self.icn.ingest(tile, req, master_port)
+                }
+                RoutedAction::Dma(op) => {
+                    let pes = &mut self.pes;
+                    Self::dma_control(
+                        &mut self.dma,
+                        &mut self.dma_waiters,
+                        now,
+                        i as u32,
+                        op,
+                        |pe| pes[pe as usize].wake(),
+                    );
+                }
             }
         }
 
-        // 5. Interconnect arbitration + bank accesses.
+        // 5. Memory step: cross-shard transfer merge, then per-Tile
+        //    master/slave/bank arbitration and bank accesses.
         self.icn.step(now, &mut self.l1);
 
         self.cycle += 1;
@@ -275,22 +322,23 @@ impl Cluster {
         }
     }
 
-    /// Run to completion on the deterministic two-phase tile-parallel
-    /// engine with `threads` host worker threads (clamped to `[1,
-    /// num_tiles]`). Cycle counts, memory image and statistics are
-    /// bit-identical to [`Cluster::run`] for every thread count; see the
-    /// module docs and DESIGN.md for the determinism argument.
+    /// Run to completion on the deterministic three-phase sharded engine
+    /// with `threads` host worker threads (clamped to `[1, num_tiles]`).
+    /// Cycle counts, memory image and statistics are bit-identical to
+    /// [`Cluster::run`] for every thread count; see the module docs and
+    /// DESIGN.md for the determinism argument.
     pub fn run_parallel(&mut self, max_cycles: u64, threads: usize) -> RunStats {
-        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-        use crate::parallel::{worker_loop, PoolShutdown, SpinBarrier, WorkerChannel};
+        use crate::parallel::{worker_loop, PoolShutdown, SpinBarrier, WorkerChannel, WorkerCtx};
 
         let num_tiles = self.cfg.num_tiles();
         let ppt = self.cfg.hierarchy.pes_per_tile;
         let workers = threads.clamp(1, num_tiles);
-        // Contiguous Tile ranges per worker: concatenating per-worker
-        // action queues in worker order reproduces the serial engine's
-        // PE-ascending order exactly.
+        // Contiguous Tile ranges per worker: a worker owns a Tile's PEs
+        // *and* its memory domain + L1 slice, so phase-1 buckets never
+        // cross workers, and concatenating per-worker outputs in worker
+        // order reproduces the serial engine's Tile-ascending order.
         let tiles_per_worker = num_tiles.div_ceil(workers);
         let pes_per_worker = tiles_per_worker * ppt;
         let expected = self.pes.len() as u32;
@@ -308,10 +356,13 @@ impl Cluster {
         let barrier = SpinBarrier::new(workers + 1);
         let stop = AtomicBool::new(false);
         let failed = AtomicBool::new(false);
+        let now_shared = AtomicU64::new(self.cycle);
 
         // Split the cluster into disjoint field borrows: the PE array is
-        // handed to the workers for the whole run, everything else stays
-        // with the coordinator (this thread).
+        // handed to the workers for the whole run; the memory system is
+        // shared (workers lock their own Tiles during their phase, the
+        // coordinator between phases); DMA and barrier state stay with
+        // the coordinator (this thread).
         let Cluster {
             cfg: _,
             l1,
@@ -323,18 +374,37 @@ impl Cluster {
             cycle,
         } = self;
 
+        // Carry-over from earlier serial stepping on the same cluster:
+        // requests alive in the memory system, plus already-drained
+        // responses and unmerged transfer events.
+        let carry_inflight = icn.inflight() as i64;
+        let pending_resp: Vec<Response> = icn.take_pending_responses();
+        let pending_xfer: Vec<XferEvent> = icn.take_pending_xfers();
+
+        let l1_ref: &L1Memory = l1;
+        let icn_ref: &Interconnect = icn;
+
         std::thread::scope(|s| {
             let mut rest: &mut [Pe] = pes;
-            for ch in &channels {
+            for (w, ch) in channels.iter().enumerate() {
                 let take = pes_per_worker.min(rest.len());
                 // mem::take detaches the slice from `rest` so the chunk
                 // borrows 'scope-long, not loop-iteration-long.
                 let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
                 rest = tail;
+                let ctx = WorkerCtx {
+                    ch,
+                    icn: icn_ref,
+                    l1: l1_ref,
+                    tile_lo: (w * tiles_per_worker).min(num_tiles),
+                    tile_hi: ((w + 1) * tiles_per_worker).min(num_tiles),
+                    pes_per_tile: ppt,
+                    now: &now_shared,
+                };
                 let barrier = &barrier;
                 let stop = &stop;
                 let failed = &failed;
-                s.spawn(move || worker_loop(chunk, ch, barrier, stop, failed));
+                s.spawn(move || worker_loop(chunk, ctx, barrier, stop, failed));
             }
             // Releases the pool exactly once when the coordinator leaves
             // this closure — by `break` or by unwinding from a panic.
@@ -342,80 +412,121 @@ impl Cluster {
 
             let mut resp_buf: Vec<Vec<Response>> = (0..workers).map(|_| Vec::new()).collect();
             let mut wake_buf: Vec<Vec<u32>> = (0..workers).map(|_| Vec::new()).collect();
-            let mut drained: Vec<Response> = Vec::new();
+            let mut xfer_buf: Vec<Vec<XferEvent>> = (0..workers).map(|_| Vec::new()).collect();
+            let mut drained: Vec<Response> = pending_resp;
+            let mut xfer_all: Vec<XferEvent> = pending_xfer;
             let mut actions: Vec<(u32, Action)> = Vec::new();
 
             loop {
-                let all_idle = channels.iter().all(|c| !c.busy.load(Ordering::SeqCst));
-                let done = all_idle
-                    && icn.inflight() == 0
-                    && dma.as_ref().map(|d| d.idle()).unwrap_or(true);
-                if done || *cycle >= max_cycles {
-                    break; // _shutdown releases the workers
-                }
                 let now = *cycle;
 
-                // --- serial pre-phase: responses, barriers, DMA -------
-                drained.clear();
-                icn.drain_responses_into(now, &mut drained);
+                // --- serial pre-phase ---------------------------------
+                // (a) Responses the workers drained during the previous
+                // cycle, already concatenating to the global Tile order;
+                // barrier bookkeeping happens here, the PE write-backs in
+                // the owners' phase 1.
+                for ch in &channels {
+                    let mut out = ch.resp_out.lock().unwrap();
+                    drained.append(&mut out);
+                }
                 for r in &drained {
                     Self::bookkeep_barrier(barriers, r);
                     resp_buf[r.core as usize / pes_per_worker].push(*r);
                 }
+                drained.clear();
+
+                // (b) Barrier releases.
                 Self::release_barriers(barriers, now, expected, wakeup, |pe| {
                     wake_buf[pe as usize / pes_per_worker].push(pe)
                 });
-                Self::dma_progress(dma, dma_waiters, now, l1, |pe| {
-                    wake_buf[pe as usize / pes_per_worker].push(pe)
-                });
-                for (w, ch) in channels.iter().enumerate() {
-                    if !resp_buf[w].is_empty() || !wake_buf[w].is_empty() {
-                        let mut inbox = ch.inbox.lock().unwrap();
-                        inbox.responses.append(&mut resp_buf[w]);
-                        inbox.wakes.append(&mut wake_buf[w]);
-                    }
-                }
 
-                // --- phase 1: tile-parallel PE stepping ---------------
-                barrier.wait();
-                barrier.wait();
-                if failed.load(Ordering::SeqCst) {
-                    // _shutdown drains the pool during the unwind.
-                    panic!("parallel engine: a worker thread panicked during phase 1");
-                }
-
-                // --- phase 2: fixed-total-order arbitration -----------
+                // (c) DMA control ops issued during the previous cycle,
+                // in global PE order (worker order = PE order). `start`
+                // is stamped with the issue cycle, so frontend occupancy
+                // chains exactly as in the serial engine.
+                let issued_at = now.saturating_sub(1);
                 for ch in &channels {
                     {
                         let mut outbox = ch.outbox.lock().unwrap();
                         std::mem::swap(&mut *outbox, &mut actions);
                     }
                     for &(pe, action) in &actions {
-                        let wake = route_action(
-                            now,
-                            pe,
-                            pe as usize / ppt,
-                            action,
-                            icn,
-                            l1,
-                            dma,
-                            dma_waiters,
-                        );
-                        if let Some(target) = wake {
-                            // DmaWait on a retired descriptor: wake at the
-                            // top of the next cycle — the serial engine's
-                            // in-cycle wake is observationally identical
-                            // (the issue slot is already spent).
-                            wake_buf[target as usize / pes_per_worker].push(target);
-                        }
+                        Self::dma_control(dma, dma_waiters, issued_at, pe, action, |p| {
+                            wake_buf[p as usize / pes_per_worker].push(p)
+                        });
                     }
                     actions.clear();
                 }
-                icn.step(now, l1);
+
+                // (d) DMA/HBM progress.
+                Self::dma_progress(dma, dma_waiters, now, l1_ref, |pe| {
+                    wake_buf[pe as usize / pes_per_worker].push(pe)
+                });
+
+                // (e) Cross-shard transfer merge: per-worker winner lists
+                // concatenate to the global Tile-ascending order; stable
+                // bucketing by destination preserves it per worker.
+                for ch in &channels {
+                    let mut out = ch.xfer_out.lock().unwrap();
+                    xfer_all.append(&mut out);
+                }
+
+                let inflight: i64 = carry_inflight
+                    + channels
+                        .iter()
+                        .map(|c| c.inflight.load(Ordering::SeqCst))
+                        .sum::<i64>();
+                let all_idle = channels.iter().all(|c| !c.busy.load(Ordering::SeqCst));
+                let done = all_idle
+                    && inflight == 0
+                    && xfer_all.is_empty()
+                    && resp_buf.iter().all(|b| b.is_empty())
+                    && wake_buf.iter().all(|b| b.is_empty())
+                    && dma.as_ref().map(|d| d.idle()).unwrap_or(true);
+                if done || now >= max_cycles {
+                    break; // _shutdown releases the workers
+                }
+
+                for ev in xfer_all.drain(..) {
+                    xfer_buf[ev.dst_tile as usize / tiles_per_worker].push(ev);
+                }
+
+                // (f) Hand this cycle's inputs to the workers.
+                for (w, ch) in channels.iter().enumerate() {
+                    if !resp_buf[w].is_empty() || !wake_buf[w].is_empty() {
+                        let mut inbox = ch.inbox.lock().unwrap();
+                        inbox.responses.append(&mut resp_buf[w]);
+                        inbox.wakes.append(&mut wake_buf[w]);
+                    }
+                    if !xfer_buf[w].is_empty() {
+                        let mut xin = ch.xfer_in.lock().unwrap();
+                        xin.append(&mut xfer_buf[w]);
+                    }
+                }
+
+                // --- phases 1+2: parallel issue + sharded memory step -
+                now_shared.store(now, Ordering::SeqCst);
+                barrier.wait();
+                barrier.wait();
+                if failed.load(Ordering::SeqCst) {
+                    // _shutdown drains the pool during the unwind.
+                    panic!("parallel engine: a worker thread panicked");
+                }
                 *cycle += 1;
             }
         });
 
+        let inflight: i64 = carry_inflight
+            + channels
+                .iter()
+                .map(|c| c.inflight.load(std::sync::atomic::Ordering::SeqCst))
+                .sum::<i64>();
+        // Individual worker counters may sit below zero (a request can be
+        // born in one worker's source Tile and retire in another's
+        // destination Tile), but the total is a population count and must
+        // never be negative — that would mean double-counted deaths.
+        debug_assert!(inflight >= 0, "negative in-flight total {inflight}");
+        self.icn.set_inflight(inflight.max(0) as u64);
         assert!(
             self.done(),
             "cluster did not finish within {max_cycles} cycles (possible deadlock)"
@@ -438,7 +549,7 @@ impl Cluster {
             agg.stall_ctrl += s.stall_ctrl;
             agg.stall_synch += s.stall_synch;
         }
-        let ic = &self.icn.stats;
+        let ic = self.icn.stats();
         RunStats {
             cycles: self.cycle,
             instructions: agg.issued,
@@ -470,80 +581,80 @@ impl Cluster {
 
     /// Convenience: the NUMA class histogram as fractions.
     pub fn class_mix(&self) -> [f64; 4] {
-        let total: u64 = self.icn.stats.per_class.iter().map(|c| c.count).sum();
+        let stats = self.icn.stats();
+        let total: u64 = stats.per_class.iter().map(|c| c.count).sum();
         let mut out = [0.0; 4];
         if total > 0 {
-            for (i, c) in self.icn.stats.per_class.iter().enumerate() {
+            for (i, c) in stats.per_class.iter().enumerate() {
                 out[i] = c.count as f64 / total as f64;
             }
         }
-        let _ = NumaClass::Local;
         out
     }
 }
 
-/// Route one PE action into the shared machinery (interconnect request,
-/// barrier atomic, DMA control). Shared verbatim by the serial issue loop
-/// and the parallel engine's phase-2 replay, so both engines mutate the
-/// interconnect and DMA in the identical order. Returns `Some(pe)` when
-/// the PE must be woken (DmaWait on an already-retired descriptor).
-#[allow(clippy::too_many_arguments)]
-fn route_action(
+/// One PE action resolved against the shared routing function.
+pub(crate) enum RoutedAction {
+    None,
+    /// A memory request for the issuing Tile's domain (see
+    /// [`Topology::make_request`] for the `master_port` contract).
+    Mem { req: Request, master_port: Option<u8> },
+    /// DMA control (`Action::DmaStart`/`DmaWait`), handled by whoever
+    /// owns the DMA engine — the serial issue loop via
+    /// [`Cluster::dma_control`] directly, the parallel workers via the
+    /// coordinator outbox (same helper, one cycle-top later).
+    Dma(Action),
+}
+
+/// Route one PE action: a **pure function** of the address map and the
+/// topology, shared verbatim by the serial issue loop and the parallel
+/// engine's phase-1 workers, so both engines build identical requests and
+/// bucket them identically. Barrier arrivals become real atomics on the
+/// Tile-local counter word.
+pub(crate) fn route_action(
     now: u64,
     pe: u32,
     tile: usize,
     action: Action,
-    icn: &mut Interconnect,
-    l1: &L1Memory,
-    dma: &mut Option<DmaSubsystem>,
-    dma_waiters: &mut Vec<(u32, u16)>,
-) -> Option<u32> {
+    map: &AddressMap,
+    topo: &Topology,
+) -> RoutedAction {
     match action {
-        Action::None => None,
+        Action::None => RoutedAction::None,
         Action::Load { rd, addr } => {
-            let bank = l1.map.map(addr);
-            icn.push_request(now, pe, tile, ReqKind::Read { rd }, 0.0, bank, 0);
-            None
+            let bank = map.map(addr);
+            let (req, master_port) =
+                topo.make_request(now, pe, tile, ReqKind::Read { rd }, 0.0, bank, 0);
+            RoutedAction::Mem { req, master_port }
         }
         Action::Store { value, addr } => {
-            let bank = l1.map.map(addr);
-            icn.push_request(now, pe, tile, ReqKind::Write, value, bank, 0);
-            None
+            let bank = map.map(addr);
+            let (req, master_port) =
+                topo.make_request(now, pe, tile, ReqKind::Write, value, bank, 0);
+            RoutedAction::Mem { req, master_port }
         }
         Action::AmoAdd { value, addr } => {
-            let bank = l1.map.map(addr);
-            icn.push_request(now, pe, tile, ReqKind::Amo, value, bank, 0);
-            None
+            let bank = map.map(addr);
+            let (req, master_port) =
+                topo.make_request(now, pe, tile, ReqKind::Amo, value, bank, 0);
+            RoutedAction::Mem { req, master_port }
         }
         Action::BarrierArrive { id } => {
             // Barrier-counter word: sequential-region slot 0 of the Tile.
-            let addr = l1.map.seq_base_of_tile(tile) + BARRIER_SLOT;
-            let bank = l1.map.map(addr);
-            icn.push_request(now, pe, tile, ReqKind::Amo, 1.0, bank, id as u32 + 1);
-            None
+            let addr = map.seq_base_of_tile(tile) + BARRIER_SLOT;
+            let bank = map.map(addr);
+            let (req, master_port) =
+                topo.make_request(now, pe, tile, ReqKind::Amo, 1.0, bank, id as u32 + 1);
+            RoutedAction::Mem { req, master_port }
         }
-        Action::DmaStart { id } => {
-            dma.as_mut()
-                .expect("trace uses DMA but cluster built without with_dma()")
-                .start(id, now);
-            None
-        }
-        Action::DmaWait { id } => {
-            let done = dma.as_ref().map(|d| d.is_done(id)).unwrap_or(true);
-            if done {
-                Some(pe)
-            } else {
-                dma_waiters.push((pe, id));
-                None
-            }
-        }
+        Action::DmaStart { .. } | Action::DmaWait { .. } => RoutedAction::Dma(action),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::{Op, Program};
+    use crate::isa::Op;
 
     fn programs_for(cfg: &ClusterConfig, f: impl Fn(usize) -> Program) -> Vec<Program> {
         (0..cfg.num_pes()).map(f).collect()
@@ -696,7 +807,7 @@ mod tests {
         );
     }
 
-    /// Quick in-module smoke of the two-phase engine; the exhaustive
+    /// Quick in-module smoke of the sharded engine; the exhaustive
     /// serial-vs-parallel matrix lives in rust/tests/parallel_equiv.rs.
     #[test]
     fn parallel_engine_matches_serial_on_tiny_store_load() {

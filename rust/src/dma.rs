@@ -75,6 +75,8 @@ pub struct DmaSubsystem {
     inflight: Vec<Burst>,
     free_inflight: Vec<u32>,
     frontend_free: u64,
+    /// Recycled burst staging buffer for the functional data movement.
+    word_buf: Vec<f32>,
     // geometry
     interleaved_base: u32,
     num_banks: usize,
@@ -96,6 +98,7 @@ impl DmaSubsystem {
             inflight: Vec::new(),
             free_inflight: Vec::new(),
             frontend_free: 0,
+            word_buf: Vec::new(),
             interleaved_base: cfg.seq_words_total() as u32,
             num_banks: cfg.num_banks(),
             banks_per_subgroup: cfg.banks_per_subgroup(),
@@ -176,7 +179,12 @@ impl DmaSubsystem {
 
     /// Advance one cycle: retire HBM completions into L1 and issue new
     /// bursts from the backend queues.
-    pub fn step(&mut self, now: u64, l1: &mut L1Memory) {
+    ///
+    /// Takes `&L1Memory` (word access through the per-Tile slice locks):
+    /// the parallel engine's coordinator runs DMA progress while the
+    /// worker threads hold the shared L1 view, and `&mut L1Memory`
+    /// call sites coerce.
+    pub fn step(&mut self, now: u64, l1: &L1Memory) {
         // 1. Completions coming back from the memory controller.
         let mut done_ids: Vec<u64> = Vec::new();
         self.hbm.take_completed(now, |bid| done_ids.push(bid));
@@ -219,17 +227,22 @@ impl DmaSubsystem {
             // Functional data movement happens at issue (outbound) /
             // completion (inbound); we move it here in one shot — the
             // timing of visibility is guarded by DmaWait in the traces.
+            // Whole-burst staging through `word_buf` lets the L1 side use
+            // run-grouped Tile locking instead of per-word locks.
+            let mut words = std::mem::take(&mut self.word_buf);
             if b.to_l1 {
-                for w in 0..b.words {
-                    let v = hbm_image_read(b.mem_byte + w as u64 * 4);
-                    l1.write(b.l1_word + w, v);
-                }
+                words.clear();
+                words.extend(
+                    (0..b.words).map(|w| hbm_image_read(b.mem_byte + w as u64 * 4)),
+                );
+                l1.write_run_shared(b.l1_word, &words);
             } else {
-                for w in 0..b.words {
-                    let v = l1.read(b.l1_word + w);
+                l1.read_run_shared(b.l1_word, b.words as usize, &mut words);
+                for (w, &v) in words.iter().enumerate() {
                     hbm_image_write(b.mem_byte + w as u64 * 4, v);
                 }
             }
+            self.word_buf = words;
             let bid = match self.free_inflight.pop() {
                 Some(i) => {
                     self.inflight[i as usize] = b;

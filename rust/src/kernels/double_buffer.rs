@@ -39,8 +39,10 @@ pub struct DbParams {
     pub rounds: usize,
 }
 
-/// Result of a double-buffered run.
-#[derive(Debug, Clone, Copy)]
+/// Result of a double-buffered run. `PartialEq` backs the
+/// serial-vs-parallel differential suite: every field must match bit for
+/// bit across engines and thread counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DbResult {
     pub cycles: u64,
     /// Cycles PEs spent computing (issuing) rather than DMA-waiting.

@@ -99,6 +99,36 @@ impl Csr {
     }
 }
 
+/// Seed of the canonical golden workload (mirrored by
+/// `python/compile/rng.py::SPMMADD_SEED`, which regenerates the same
+/// matrices for `artifacts/spmmadd.golden.bin`).
+pub const CANONICAL_SEED: u64 = 0x5EED;
+/// How B's seed derives from A's (`SPMMADD_SEED_B_XOR` in the port).
+pub const SEED_B_XOR: u64 = 0xFFFF_0000;
+/// Non-zeros per row of the canonical workload.
+pub const CANONICAL_NNZ_PER_ROW: usize = 8;
+
+/// The canonical CSR pair (A, B) at the given shape — exactly the
+/// matrices the Python port densifies for the spmmadd golden.
+pub fn canonical_csr_pair(rows: usize, cols: usize) -> (Csr, Csr) {
+    (
+        Csr::random(rows, cols, CANONICAL_NNZ_PER_ROW, CANONICAL_SEED),
+        Csr::random(rows, cols, CANONICAL_NNZ_PER_ROW, CANONICAL_SEED ^ SEED_B_XOR),
+    )
+}
+
+/// Densified A + B of the canonical pair: the exact contents of
+/// `artifacts/spmmadd.golden.bin` (quarters with ≤ 2 addends per cell —
+/// no rounding, so comparisons against the golden are bit-exact).
+pub fn canonical_dense_sum(rows: usize, cols: usize) -> Vec<f32> {
+    let (a, b) = canonical_csr_pair(rows, cols);
+    let mut sum = a.to_dense();
+    for (s, x) in sum.iter_mut().zip(b.to_dense()) {
+        *s += x;
+    }
+    sum
+}
+
 pub struct SpmmaddParams {
     pub rows: usize,
     pub cols: usize,
@@ -132,7 +162,7 @@ const R_OUT: u8 = 6;
 
 pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (KernelSetup, SpmmaddLayout) {
     let a = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed);
-    let b = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed ^ 0xFFFF_0000);
+    let b = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed ^ SEED_B_XOR);
     let c = a.add(&b);
     let npes = cfg.num_pes();
 

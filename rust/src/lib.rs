@@ -9,13 +9,15 @@
 //!
 //! * a **cycle-level functional + timing simulator** of the TeraPool
 //!   cluster: Snitch-like PEs ([`pe`]), the hierarchical Tile → SubGroup →
-//!   Group crossbar interconnect ([`interconnect`]), the banked shared-L1
-//!   SPM with the paper's hybrid address map ([`memory`]), and the cluster
+//!   Group crossbar interconnect sharded into per-Tile memory domains
+//!   ([`interconnect`]), the banked shared-L1 SPM with the paper's hybrid
+//!   address map, stored as per-Tile slices ([`memory`]), and the cluster
 //!   composition with fork-join barriers ([`cluster`]) — runnable on a
-//!   serial reference engine or the deterministic two-phase tile-parallel
-//!   engine ([`parallel`], `Cluster::run_parallel`), which shards PE
-//!   stepping across host threads by the paper's Tile → SubGroup → Group
-//!   hierarchy while staying bit-identical to the serial engine;
+//!   serial reference engine or the deterministic three-phase sharded
+//!   engine ([`parallel`], `Cluster::run_parallel`), which distributes PE
+//!   stepping *and* per-Tile bank arbitration across host threads by the
+//!   paper's Tile → SubGroup → Group hierarchy while staying bit-identical
+//!   to the serial engine;
 //! * the paper's **analytical AMAT model** of hierarchical crossbars,
 //!   Eqs. (3)–(6) ([`amat`]) — regenerates Table 4 and Fig. 8b;
 //! * the **High Bandwidth Memory Link**: a cycle-level HBM2E channel model

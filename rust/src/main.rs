@@ -183,8 +183,8 @@ fn validate(scale: Scale, threads: usize) -> Result<()> {
     let sp = kernels::spmmadd::SpmmaddParams {
         rows: 512,
         cols: 512,
-        nnz_per_row: 8,
-        seed: 0x5EED,
+        nnz_per_row: kernels::spmmadd::CANONICAL_NNZ_PER_ROW,
+        seed: kernels::spmmadd::CANONICAL_SEED,
     };
     let (setup, layout) = kernels::spmmadd::build_with_layout(&cfg, &sp);
     let (mut cl, _io) = setup.into_cluster(cfg.clone());
@@ -237,6 +237,16 @@ fn validate(scale: Scale, threads: usize) -> Result<()> {
             let golden = rt.golden_f32("gemm")?;
             assert_allclose(&kernels::gemm::reference(&gp), &golden, 1e-2, "gemm ref vs golden");
             println!("gemm     OK: {}x{} host reference matches the JAX golden", gp.m, gp.n);
+
+            // spmmadd's golden was evaluated on CSR inputs regenerated by
+            // the Python SplitMix64 port; the Rust generator must land on
+            // the identical dense sum (exact — quarters, two addends).
+            let shape = rt.entry("spmmadd")?.inputs[0].shape.clone();
+            let (rows, cols) = (shape[0], shape[1]);
+            let golden = rt.golden_f32("spmmadd")?;
+            let want = kernels::spmmadd::canonical_dense_sum(rows, cols);
+            ensure!(golden == want, "spmmadd golden diverges from the Rust CSR generator");
+            println!("spmmadd  OK: {rows}x{cols} CSR dense sum matches the JAX golden");
         }
     }
 

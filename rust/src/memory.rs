@@ -12,6 +12,20 @@
 //!
 //! The map is pure address scrambling (the paper: "wire crossings and a
 //! multiplexer"), so it is a bijection — property-tested below.
+//!
+//! ## Storage sharding
+//!
+//! The backing storage is split into **per-Tile slices** ([`TileStore`]),
+//! mirroring the physical design: a bank belongs to exactly one Tile, so
+//! the sharded memory engine's per-Tile domains mutate disjoint slices
+//! with no shared mutable state. Each slice sits behind an uncontended
+//! mutex: the hot paths (the serial engine, and each parallel worker
+//! inside its own phase) either go through `Mutex::get_mut` or lock a
+//! slice once per cycle; the host-side word accessors used for staging,
+//! result readback and the DMA's functional data movement lock per
+//! access (cold paths).
+
+use std::sync::Mutex;
 
 use crate::config::ClusterConfig;
 
@@ -135,34 +149,89 @@ impl AddressMap {
     }
 }
 
-/// The banked L1 storage: `num_banks` arrays of f32 words. Functional
-/// state only — timing (ports, conflicts) is owned by the interconnect.
-#[derive(Debug, Clone)]
+/// One Tile's slice of the banked L1: `banks_per_tile` banks, bank-major.
+/// Functional state only — timing (ports, conflicts) is owned by the
+/// Tile's memory domain in [`crate::interconnect`].
+#[derive(Debug)]
+pub struct TileStore {
+    words: Vec<f32>,
+    words_per_bank: usize,
+}
+
+impl TileStore {
+    #[inline]
+    pub fn read(&self, local_bank: usize, row: usize) -> f32 {
+        self.words[local_bank * self.words_per_bank + row]
+    }
+    #[inline]
+    pub fn write(&mut self, local_bank: usize, row: usize, v: f32) {
+        self.words[local_bank * self.words_per_bank + row] = v;
+    }
+    /// Atomic fetch-and-add at the bank (returns the *new* value).
+    #[inline]
+    pub fn amo_add(&mut self, local_bank: usize, row: usize, v: f32) -> f32 {
+        let slot = &mut self.words[local_bank * self.words_per_bank + row];
+        *slot += v;
+        *slot
+    }
+}
+
+/// The banked L1 storage, sharded per Tile (see the module docs).
+#[derive(Debug)]
 pub struct L1Memory {
     pub map: AddressMap,
-    banks: Vec<Vec<f32>>,
+    banks_per_tile: usize,
+    tiles: Vec<Mutex<TileStore>>,
 }
 
 impl L1Memory {
     pub fn new(cfg: &ClusterConfig) -> Self {
         let map = AddressMap::new(cfg);
         L1Memory {
-            banks: vec![vec![0.0; cfg.words_per_bank]; cfg.num_banks()],
             map,
+            banks_per_tile: cfg.banks_per_tile(),
+            tiles: (0..cfg.num_tiles())
+                .map(|_| {
+                    Mutex::new(TileStore {
+                        words: vec![0.0; cfg.banks_per_tile() * cfg.words_per_bank],
+                        words_per_bank: cfg.words_per_bank,
+                    })
+                })
+                .collect(),
         }
     }
 
+    /// (tile, bank-within-tile) of a global bank index.
+    #[inline]
+    fn locate(&self, at: BankAddr) -> (usize, usize) {
+        let bank = at.bank as usize;
+        (bank / self.banks_per_tile, bank % self.banks_per_tile)
+    }
+
+    /// A Tile's slice cell, for the parallel engine's workers (each locks
+    /// its owned Tiles once per cycle; never contended — phases strictly
+    /// alternate).
+    pub fn tile_store(&self, tile: usize) -> &Mutex<TileStore> {
+        &self.tiles[tile]
+    }
+
+    /// A Tile's slice with exclusive access (serial engine; no locking).
+    pub fn tile_store_mut(&mut self, tile: usize) -> &mut TileStore {
+        self.tiles[tile].get_mut().unwrap()
+    }
+
     pub fn read_bank(&self, at: BankAddr) -> f32 {
-        self.banks[at.bank as usize][at.row as usize]
+        let (t, b) = self.locate(at);
+        self.tiles[t].lock().unwrap().read(b, at.row as usize)
     }
     pub fn write_bank(&mut self, at: BankAddr, v: f32) {
-        self.banks[at.bank as usize][at.row as usize] = v;
+        let (t, b) = self.locate(at);
+        self.tiles[t].get_mut().unwrap().write(b, at.row as usize, v);
     }
     /// Atomic fetch-and-add at the bank (returns the *new* value).
     pub fn amo_add_bank(&mut self, at: BankAddr, v: f32) -> f32 {
-        let slot = &mut self.banks[at.bank as usize][at.row as usize];
-        *slot += v;
-        *slot
+        let (t, b) = self.locate(at);
+        self.tiles[t].get_mut().unwrap().amo_add(b, at.row as usize, v)
     }
 
     /// Word-addressed accessors (host/DMA side).
@@ -171,6 +240,63 @@ impl L1Memory {
     }
     pub fn write(&mut self, word: u32, v: f32) {
         self.write_bank(self.map.map(word), v)
+    }
+    /// Word write through a shared reference (the DMA's functional data
+    /// movement runs in the coordinator's serial pre-phase while the
+    /// worker threads hold `&L1Memory`; the per-Tile locks are free then).
+    pub fn write_shared(&self, word: u32, v: f32) {
+        let at = self.map.map(word);
+        let (t, b) = self.locate(at);
+        self.tiles[t].lock().unwrap().write(b, at.row as usize, v);
+    }
+
+    /// Bulk write of consecutive words through a shared reference,
+    /// locking each destination Tile once per contiguous run instead of
+    /// once per word. Consecutive interleaved words sweep consecutive
+    /// banks, so runs are `banks_per_tile` long — a 256-word DMA burst
+    /// takes ~8 locks instead of 256.
+    pub fn write_run_shared(&self, base: u32, data: &[f32]) {
+        let mut i = 0;
+        while i < data.len() {
+            let at = self.map.map(base + i as u32);
+            let (t, b) = self.locate(at);
+            let mut store = self.tiles[t].lock().unwrap();
+            store.write(b, at.row as usize, data[i]);
+            i += 1;
+            while i < data.len() {
+                let at = self.map.map(base + i as u32);
+                let (t2, b2) = self.locate(at);
+                if t2 != t {
+                    break;
+                }
+                store.write(b2, at.row as usize, data[i]);
+                i += 1;
+            }
+        }
+    }
+
+    /// Bulk read of consecutive words through a shared reference into a
+    /// caller-recycled buffer (cleared first); Tile-run locking as in
+    /// [`L1Memory::write_run_shared`].
+    pub fn read_run_shared(&self, base: u32, n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let mut i = 0;
+        while i < n {
+            let at = self.map.map(base + i as u32);
+            let (t, b) = self.locate(at);
+            let store = self.tiles[t].lock().unwrap();
+            out.push(store.read(b, at.row as usize));
+            i += 1;
+            while i < n {
+                let at = self.map.map(base + i as u32);
+                let (t2, b2) = self.locate(at);
+                if t2 != t {
+                    break;
+                }
+                out.push(store.read(b2, at.row as usize));
+                i += 1;
+            }
+        }
     }
 
     /// Bulk host-side copy-in/out, used by test harnesses and the DMA
@@ -259,6 +385,27 @@ mod tests {
         assert_eq!(l1.amo_add_bank(at, 2.5), 2.5);
         assert_eq!(l1.amo_add_bank(at, 1.5), 4.0);
         assert_eq!(l1.read_bank(at), 4.0);
+    }
+
+    #[test]
+    fn shared_writes_land_in_tile_slices() {
+        let cfg = ClusterConfig::tiny();
+        let l1 = L1Memory::new(&cfg);
+        // Every 128th interleaved word lands in the same bank of tile 0.
+        let base = l1.map.interleaved_base();
+        l1.write_shared(base, 3.25);
+        l1.write_shared(base + cfg.num_banks() as u32, 4.5);
+        assert_eq!(l1.read(base), 3.25);
+        assert_eq!(l1.read(base + cfg.num_banks() as u32), 4.5);
+        // The bank-level view agrees with the word-level view.
+        let at = l1.map.map(base);
+        assert_eq!(l1.read_bank(at), 3.25);
+        let (t, b) = l1.locate(at);
+        assert_eq!(t, 0, "first interleaved word lives in tile 0");
+        assert_eq!(
+            l1.tile_store(t).lock().unwrap().read(b, at.row as usize),
+            3.25
+        );
     }
 
     /// Property: the hybrid map is a bijection over the full address

@@ -1,44 +1,57 @@
-//! Host-side parallel execution plumbing for the deterministic two-phase
-//! cluster engine (`Cluster::run_parallel`), replacing the `rayon` crate
-//! in this offline build with `std::thread::scope` plus a spin barrier.
+//! Host-side parallel execution plumbing for the deterministic
+//! three-phase cluster engine (`Cluster::run_parallel`), replacing the
+//! `rayon` crate in this offline build with `std::thread::scope` plus a
+//! spin barrier.
 //!
-//! ## Determinism contract (see DESIGN.md §Two-phase engine)
+//! ## Determinism contract (see DESIGN.md §Three-phase sharded engine)
 //!
 //! Each simulated cycle is split into:
 //!
-//! * **phase 1 (parallel)** — per-Tile work with no shared state: apply
-//!   the cycle's L1 responses and wake-ups to the Tile's PEs, then issue
-//!   each PE in index order, queuing the resulting memory/sync actions
-//!   into a per-worker buffer. Workers own disjoint, *contiguous* ranges
-//!   of Tiles (Tile → SubGroup → Group order, the paper's physical
-//!   hierarchy), so concatenating the per-worker buffers in worker order
-//!   reproduces the exact PE-ascending order of the serial engine.
-//! * **phase 2 (serial)** — the coordinator drains the per-worker action
-//!   buffers in worker order and performs bank arbitration, barrier
-//!   bookkeeping and DMA progress in a fixed total order, bit-identically
-//!   to [`crate::cluster::Cluster::step`].
+//! * **serial pre-phase (coordinator)** — deliver the previous cycle's
+//!   drained responses and wake-ups, barrier bookkeeping/release, DMA
+//!   control + progress, and the cross-shard transfer merge, all in fixed
+//!   global orders (worker order = Tile order = the serial engine's
+//!   order).
+//! * **phase 1 (parallel)** — each worker applies its PEs' responses and
+//!   wake-ups, then issues each PE in index order, bucketing every memory
+//!   action *directly into the issuing Tile's memory domain* (a pure
+//!   function of the address map; a Tile's requests can only come from
+//!   its own PEs, so no cross-worker hand-off exists here). DMA control
+//!   ops go to the coordinator's outbox instead.
+//! * **phase 2 (parallel)** — each worker steps its owned Tile domains in
+//!   ascending Tile order: master/slave/bank arbitration and the bank
+//!   reads/writes/AMOs against the Tiles' own L1 slices, then drains the
+//!   responses falling due next cycle into its channel.
 //!
-//! Because PE state is only ever mutated in phase 1 by the worker that
-//! owns it, and all shared structures (interconnect queues, L1 banks,
-//! barrier counters, the DMA engine) are only mutated in phase 2 in a
-//! fixed order, results, cycle counts and every statistic are identical
+//! Workers own disjoint, *contiguous* ranges of Tiles (and exactly those
+//! Tiles' PEs), in Tile → SubGroup → Group order — the paper's physical
+//! hierarchy. Every per-domain input stream is consumed in a canonical
+//! order and every cross-domain hand-off is merged in ascending Tile
+//! order, so results, cycle counts and all statistics are bit-identical
 //! to the serial engine for any thread count — `rust/tests/
 //! parallel_equiv.rs` enforces this differentially.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
-use crate::interconnect::Response;
+use crate::cluster::{route_action, RoutedAction};
+use crate::interconnect::{Interconnect, Response, TileDomain, XferEvent};
+use crate::memory::L1Memory;
 use crate::pe::{Action, Pe};
 
 /// Default worker-thread count for harness code (tests, benches,
-/// examples): the host's cores, capped at 8 — beyond the Tile-sharding
-/// sweet spot the serial phase 2 dominates anyway (EXPERIMENTS.md §Perf).
+/// examples): the host's cores, capped at 16. Phase 2 (bank arbitration)
+/// is sharded by destination Tile, so the old 8-thread knee — "the serial
+/// phase 2 dominates anyway" — is gone; what bounds scaling now is the
+/// per-cycle coordinator merge plus two barrier crossings, whose cost
+/// grows with the worker count while each worker's share of the domain
+/// work shrinks. Past ~16 workers the crossings outweigh the shrinking
+/// shares on every realistic simulated cycle length.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
-        .min(8)
+        .min(16)
 }
 
 /// Sense-reversing spin barrier: far cheaper per crossing than
@@ -76,7 +89,7 @@ impl SpinBarrier {
                 if spins < 4096 {
                     std::hint::spin_loop();
                 } else {
-                    // Long serial phase (e.g. heavy bank arbitration):
+                    // Long serial pre-phase (e.g. heavy DMA traffic):
                     // stop burning the core.
                     std::thread::yield_now();
                 }
@@ -87,12 +100,12 @@ impl SpinBarrier {
 
 /// Coordinator-side drop guard: sets `stop` and performs the final
 /// barrier crossing exactly once — on normal completion *or* while the
-/// coordinator unwinds from a panic (e.g. a routing assert in phase 2).
-/// Without it, workers parked at the cycle-top rendezvous would spin
-/// forever and `std::thread::scope` would never finish joining, turning
-/// a clean panic into a hang. Every coordinator panic site has the
-/// workers parked at that rendezvous (they only run strictly between
-/// the two phase-1 barrier crossings), so the single release here is
+/// coordinator unwinds from a panic (e.g. a routing assert in the
+/// pre-phase). Without it, workers parked at the cycle-top rendezvous
+/// would spin forever and `std::thread::scope` would never finish
+/// joining, turning a clean panic into a hang. Every coordinator panic
+/// site has the workers parked at that rendezvous (they only run strictly
+/// between the two barrier crossings), so the single release here is
 /// always paired.
 pub struct PoolShutdown<'a> {
     stop: &'a AtomicBool,
@@ -116,7 +129,7 @@ impl Drop for PoolShutdown<'_> {
 #[derive(Default)]
 pub struct Inbox {
     /// L1 responses due this cycle for PEs owned by the worker, in the
-    /// global drained order.
+    /// global (Tile-ascending) drained order.
     pub responses: Vec<Response>,
     /// PEs (global indices) to wake before issuing: barrier releases and
     /// DMA completions.
@@ -130,8 +143,22 @@ pub struct WorkerChannel {
     /// Global index of the first PE owned by this worker.
     pub pe_base: u32,
     pub inbox: Mutex<Inbox>,
-    /// Actions issued in phase 1, `(global pe index, action)` in PE order.
+    /// DMA control ops issued in phase 1, `(global pe, action)` in PE
+    /// order — the only actions the coordinator still routes itself.
     pub outbox: Mutex<Vec<(u32, Action)>>,
+    /// Transfer events routed *to* this worker's Tiles, already in the
+    /// global merge order (the coordinator buckets a Tile-ascending
+    /// stream, which bucketing preserves per destination).
+    pub xfer_in: Mutex<Vec<XferEvent>>,
+    /// Master-port winners of this worker's source Tiles, Tile-ascending.
+    pub xfer_out: Mutex<Vec<XferEvent>>,
+    /// Responses drained from this worker's domains, Tile-ascending.
+    pub resp_out: Mutex<Vec<Response>>,
+    /// Net requests born minus retired in this worker's domains. The sum
+    /// over all channels is the cluster-wide in-flight count (a request
+    /// born in one worker's source Tile may retire in another's
+    /// destination Tile, so individual counters can go negative).
+    pub inflight: AtomicI64,
     /// Whether any owned PE is still live after this worker's last phase.
     pub busy: AtomicBool,
 }
@@ -142,29 +169,50 @@ impl WorkerChannel {
             pe_base,
             inbox: Mutex::new(Inbox::default()),
             outbox: Mutex::new(Vec::new()),
+            xfer_in: Mutex::new(Vec::new()),
+            xfer_out: Mutex::new(Vec::new()),
+            resp_out: Mutex::new(Vec::new()),
+            inflight: AtomicI64::new(0),
             busy: AtomicBool::new(false),
         }
     }
 }
 
+/// Everything a worker needs besides its PE slice: its channel, the
+/// shared (read-only-routed) views of the memory system, its owned Tile
+/// range, and the coordinator-published cycle counter.
+pub struct WorkerCtx<'a> {
+    pub ch: &'a WorkerChannel,
+    pub icn: &'a Interconnect,
+    pub l1: &'a L1Memory,
+    pub tile_lo: usize,
+    pub tile_hi: usize,
+    pub pes_per_tile: usize,
+    pub now: &'a AtomicU64,
+}
+
 /// Worker body: one iteration per simulated cycle until `stop` is raised.
 ///
-/// `pes` is the worker's contiguous PE slice (whole Tiles); `ch.pe_base`
-/// is the global index of `pes[0]`. A panic inside the phase work (e.g.
-/// a debug assertion) raises `failed` and keeps the barrier protocol
-/// alive, so the coordinator can shut the pool down and re-raise instead
-/// of spinning forever.
+/// `pes` is the worker's contiguous PE slice (exactly the PEs of Tiles
+/// `[tile_lo, tile_hi)`); `ctx.ch.pe_base` is the global index of
+/// `pes[0]`. A panic inside the phase work (e.g. a debug assertion)
+/// raises `failed` and keeps the barrier protocol alive, so the
+/// coordinator can shut the pool down and re-raise instead of spinning
+/// forever.
 pub fn worker_loop(
     pes: &mut [Pe],
-    ch: &WorkerChannel,
+    ctx: WorkerCtx<'_>,
     barrier: &SpinBarrier,
     stop: &AtomicBool,
     failed: &AtomicBool,
 ) {
+    let ch = ctx.ch;
     let base = ch.pe_base as usize;
     let mut responses: Vec<Response> = Vec::new();
     let mut wakes: Vec<u32> = Vec::new();
     let mut actions: Vec<(u32, Action)> = Vec::new();
+    let mut xfer_out: Vec<XferEvent> = Vec::new();
+    let mut resp_out: Vec<Response> = Vec::new();
     loop {
         barrier.wait();
         if stop.load(Ordering::SeqCst) {
@@ -172,6 +220,8 @@ pub fn worker_loop(
         }
 
         let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let now = ctx.now.load(Ordering::SeqCst);
+
             // Take this cycle's events (capacity is recycled both ways).
             {
                 let mut inbox = ch.inbox.lock().unwrap();
@@ -190,24 +240,76 @@ pub fn worker_loop(
             }
             wakes.clear();
 
-            // Issue every owned PE in index order.
+            // Own this worker's Tile domains for the whole phase (one
+            // uncontended lock per Tile per cycle).
+            let mut domains: Vec<MutexGuard<'_, TileDomain>> = (ctx.tile_lo..ctx.tile_hi)
+                .map(|t| ctx.icn.domain(t).lock().unwrap())
+                .collect();
+
+            // Cross-shard arrivals routed by the coordinator, already in
+            // the global (Tile-ascending) merge order.
+            {
+                let mut xin = ch.xfer_in.lock().unwrap();
+                for ev in xin.drain(..) {
+                    domains[ev.dst_tile as usize - ctx.tile_lo]
+                        .ingest_arrival(ev.at, ev.slave_port, ev.req);
+                }
+            }
+
+            // Phase 1: issue every owned PE in index order, bucketing
+            // memory actions straight into the issuing Tile's domain.
             let mut busy = false;
+            let mut births: i64 = 0;
             for (i, pe) in pes.iter_mut().enumerate() {
                 let action = pe.try_issue();
                 if action != Action::None {
-                    actions.push(((base + i) as u32, action));
+                    let gpe = (base + i) as u32;
+                    let tile = (base + i) / ctx.pes_per_tile;
+                    match route_action(now, gpe, tile, action, &ctx.l1.map, ctx.icn.topo()) {
+                        RoutedAction::None => {}
+                        RoutedAction::Mem { req, master_port } => {
+                            births += 1;
+                            let d = &mut domains[tile - ctx.tile_lo];
+                            match master_port {
+                                None => d.ingest_local(req),
+                                Some(p) => d.ingest_master(p, req),
+                            }
+                        }
+                        RoutedAction::Dma(op) => actions.push((gpe, op)),
+                    }
                 }
                 busy |= !pe.done();
             }
-            ch.busy.store(busy, Ordering::SeqCst);
+
+            // Phase 2: per-shard arbitration + bank accesses, ascending
+            // Tile order; responses due next cycle leave the domains.
+            for (k, t) in (ctx.tile_lo..ctx.tile_hi).enumerate() {
+                let d = &mut *domains[k];
+                if d.is_idle() {
+                    continue;
+                }
+                let mut store = ctx.l1.tile_store(t).lock().unwrap();
+                d.step(now, &mut store, ctx.icn.topo(), &mut xfer_out, &mut resp_out);
+            }
+            let deaths = resp_out.len() as i64;
+            ch.inflight.fetch_add(births - deaths, Ordering::SeqCst);
+            drop(domains);
+
+            // Publish this cycle's outputs for the coordinator.
             {
-                // Publish the actions; the coordinator swapped in an
-                // empty vector (recycled capacity) at the end of last
-                // cycle.
+                let mut out = ch.xfer_out.lock().unwrap();
+                out.append(&mut xfer_out);
+            }
+            {
+                let mut out = ch.resp_out.lock().unwrap();
+                out.append(&mut resp_out);
+            }
+            {
                 let mut outbox = ch.outbox.lock().unwrap();
                 std::mem::swap(&mut *outbox, &mut actions);
             }
             debug_assert!(actions.is_empty());
+            ch.busy.store(busy, Ordering::SeqCst);
         }));
         if work.is_err() {
             failed.store(true, Ordering::SeqCst);

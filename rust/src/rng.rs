@@ -1,6 +1,13 @@
 //! Minimal deterministic PRNG (SplitMix64 core), replacing the `rand`
 //! crate in this offline build. Quality is ample for workload generation
 //! and the AMAT burst simulations (equidistributed 64-bit outputs).
+//!
+//! The generator is ported bit-for-bit to `python/compile/rng.py` so the
+//! build layer can regenerate SpMMadd's canonical CSR inputs for the JAX
+//! golden (`artifacts/spmmadd.golden.bin`). Both sides pin the first 64
+//! draws of seed `0x5EED` to the same constants (see
+//! `first_64_draws_pinned_cross_language` below and
+//! python/tests/test_rng.py) — drift on either side fails both suites.
 
 /// SplitMix64 generator.
 #[derive(Debug, Clone)]
@@ -71,6 +78,36 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s), "all buckets hit: {seen:?}");
+    }
+
+    /// Cross-language pin: the same 64 draws are asserted by
+    /// python/tests/test_rng.py against python/compile/rng.py, which
+    /// regenerates SpMMadd's CSR golden inputs. Seed 0x5EED is the
+    /// canonical SpMMadd workload seed.
+    #[test]
+    fn first_64_draws_pinned_cross_language() {
+        const EXPECTED: [u64; 64] = [
+            0x09F1FD9D03F0A9B4, 0x553274161BBF8475, 0x5D5BCA4696B343B3, 0x70D29B6C7D22528D,
+            0x0BF2B716F9915475, 0x5EB7F92B95387CCA, 0x296CD0F2C21D7F90, 0x1289A69805C125B1,
+            0xDAA27FB8DACB9E73, 0x3ED08D59CB3F4727, 0x58A5F17B6C15C659, 0x651AC042FA7B481A,
+            0x22AF6AEAA88E8DCC, 0x2D2BAE64640ABFB9, 0xAD0E83A710231B07, 0x9D30FF2169D91F12,
+            0xF5FF07C9523504DD, 0x1273C823BA66EEC0, 0x47E1DBE249CB520B, 0xBBEA42BD69484ADC,
+            0xC33E61BC6EF9E4C4, 0x752CD583231B5114, 0xE53DC6E1988622E5, 0x928EB721ED361BA3,
+            0x10BF7972F379031E, 0x974041D15AD75C38, 0xFF9B273F42286387, 0x2601349FEF087EB0,
+            0x5753F8EF429A4A7E, 0x2663E5E9DCBCBABA, 0xA8BB872E52C6235C, 0xE1774D56B0DC91AC,
+            0x8634930F702B6452, 0x1674658F30892DDD, 0x2F957488E4FD469E, 0x656ED1CB9A126362,
+            0x5325662609163089, 0x3BA278A39643A1BC, 0x0EFA3DDA544646D9, 0x4CC8C74C1FB520CC,
+            0x626C1EF331F85C18, 0x01457B862CC7B3C9, 0x3825403DF6F9AD71, 0x272C78C413C9D42D,
+            0x4DDE6838B289C9CE, 0x1467A1289E64EB89, 0x00EB8B8A36B5B98D, 0xF2443B542BF81344,
+            0x278641CAD03AD4BE, 0x5A71CD3D503FAEEE, 0x2C58DAA06446969A, 0x79559FF0F9D26976,
+            0x4A127FE7AAC0FFFD, 0xBCA4883827803ECC, 0xB60627C1559D3728, 0x0D1D73CE3F48B12D,
+            0x78E74B9EB7B50E87, 0xEB26C664BA822E65, 0xEF794A8DCA9DCB0A, 0x89119CBF1EE9784B,
+            0x180B37DFF135DE45, 0xBE1B67D3E6055F33, 0x6FBE6FBA62CE02C8, 0x1FBF7B87B4F36BC8,
+        ];
+        let mut r = Rng::seed_from_u64(0x5EED);
+        for (i, &want) in EXPECTED.iter().enumerate() {
+            assert_eq!(r.next_u64(), want, "draw {i}");
+        }
     }
 
     #[test]

@@ -135,8 +135,9 @@ fn manifest_lists_all_kernels_with_shapes() {
     assert_eq!(gemm.inputs.len(), 2);
     assert_eq!(gemm.inputs[0].shape, vec![256, 256]);
     assert!(!gemm.sha256.is_empty());
-    // Every closed-form entry carries an evaluated golden.
-    for k in ["gemm", "axpy", "dotp", "fft"] {
+    // Every entry carries an evaluated golden (spmmadd's CSR inputs come
+    // from the SplitMix64 generator ported to python/compile/rng.py).
+    for k in ["gemm", "axpy", "dotp", "fft", "spmmadd"] {
         assert!(rt.entry(k).unwrap().golden.is_some(), "{k} has no golden");
     }
 }
@@ -173,6 +174,54 @@ fn host_references_match_jax_goldens() {
     let p = gemm::GemmParams { m: shape[0], n: shape[1], k: shape[0] };
     let golden = rt.golden_f32("gemm").unwrap();
     assert_allclose(&gemm::reference(&p), &golden, 1e-2, "gemm host ref vs JAX golden");
+}
+
+/// The spmmadd golden was evaluated on CSR inputs regenerated by the
+/// *Python* port of the SplitMix64 generator; rebuilding the same
+/// matrices from the *Rust* generator and densifying must reproduce it
+/// exactly (all values are multiples of 0.25 with at most two addends
+/// per cell — no rounding anywhere). This is the cross-language closure
+/// of the CSR workload: rng port ↔ CSR generator ↔ dense-sum oracle.
+#[test]
+fn spmmadd_golden_matches_rust_csr_dense_sum() {
+    let rt = require_artifacts!();
+    let shape = rt.entry("spmmadd").unwrap().inputs[0].shape.clone();
+    let (rows, cols) = (shape[0], shape[1]);
+    let golden = rt.golden_f32("spmmadd").unwrap();
+    assert_eq!(golden.len(), rows * cols, "dense sum shape");
+    let want = spmmadd::canonical_dense_sum(rows, cols);
+    assert_eq!(golden, want, "spmmadd golden vs Rust-generated CSR dense sum");
+}
+
+/// End-to-end at golden scale: the cluster executes the canonical
+/// 512×512 SpMMadd (CSR in, CSR out), the densified result must match
+/// the JAX-evaluated golden. mempool's 1 MiB L1 holds the working set;
+/// tiny's 128 KiB does not.
+#[test]
+fn spmmadd_cluster_matches_jax_golden_end_to_end() {
+    let rt = require_artifacts!();
+    let shape = rt.entry("spmmadd").unwrap().inputs[0].shape.clone();
+    let (rows, cols) = (shape[0], shape[1]);
+    let golden = rt.golden_f32("spmmadd").unwrap();
+    let cfg = ClusterConfig::mempool();
+    let p = spmmadd::SpmmaddParams {
+        rows,
+        cols,
+        nnz_per_row: spmmadd::CANONICAL_NNZ_PER_ROW,
+        seed: spmmadd::CANONICAL_SEED,
+    };
+    let (setup, layout) = spmmadd::build_with_layout(&cfg, &p);
+    let (mut cl, _) = setup.into_cluster(cfg);
+    cl.run_parallel(500_000_000, threads());
+    let vals = cl.l1.read_slice(layout.c_val_base, layout.c_ref.nnz());
+    let cols_got = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
+    let mut dense = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for i in layout.c_ref.row_ptr[r] as usize..layout.c_ref.row_ptr[r + 1] as usize {
+            dense[r * cols + cols_got[i] as usize] += vals[i];
+        }
+    }
+    assert_allclose(&dense, &golden, 1e-6, "spmmadd cluster vs JAX golden");
 }
 
 /// FFT golden layout is re || im, checked against a single-row naive DFT

@@ -1,20 +1,22 @@
-//! Differential suite: the deterministic two-phase tile-parallel engine
+//! Differential suite: the deterministic three-phase sharded engine
 //! (`Cluster::run_parallel`) vs the serial reference engine
 //! (`Cluster::run`).
 //!
-//! The acceptance bar of the engine (DESIGN.md §Two-phase engine): for
-//! every Table-6 cluster configuration and kernel, the parallel engine
+//! The acceptance bar of the engine (DESIGN.md §Three-phase sharded
+//! engine): for every Table-6 cluster configuration and kernel — the
+//! full Sec. 7 set: axpy, dotp, gemm, fft, spmmadd — the parallel engine
 //! must produce the **identical** final memory image, cycle count and
 //! `RunStats` (instructions, per-cause stalls, AMAT, per-class request
 //! histogram — everything `RunStats: PartialEq` compares) at 1, 2, 4 and
 //! 8 host threads. No tolerances anywhere: determinism means bit
-//! equality.
+//! equality. DMA coverage: a raw start/wait trace plus the Fig. 14b
+//! double-buffer pipeline.
 
 use terapool::cluster::{Cluster, RunStats};
 use terapool::config::ClusterConfig;
 use terapool::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
 use terapool::isa::{Op, Program};
-use terapool::kernels::{axpy, dotp, gemm, KernelSetup};
+use terapool::kernels::{axpy, dotp, double_buffer, fft, gemm, spmmadd, KernelSetup};
 use terapool::memory::L1Memory;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
@@ -33,12 +35,24 @@ fn table6_configs() -> Vec<ClusterConfig> {
 }
 
 /// Cluster-size-scaled kernel problems, small enough that the full
-/// matrix (6 configs × 3 kernels × 5 engine runs) stays fast in debug.
+/// matrix (6 configs × 5 kernels × 5 engine runs) stays fast in debug.
 fn build_kernel(cfg: &ClusterConfig, which: &str) -> KernelSetup {
     match which {
         "axpy" => axpy::build(cfg, &axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 }),
         "dotp" => dotp::build(cfg, &dotp::DotpParams { n: cfg.num_banks() * 4 }),
         "gemm" => gemm::build(cfg, &gemm::GemmParams { m: 32, n: 32, k: 32 }),
+        // Barrier-heavy, all-hierarchy strides (radix-4, 3 stages).
+        "fft" => fft::build(cfg, &fft::FftParams { batch: 2, n: 64 }),
+        // Irregular, branch-heavy CSR merges with data-dependent loads.
+        "spmmadd" => spmmadd::build(
+            cfg,
+            &spmmadd::SpmmaddParams {
+                rows: cfg.num_pes().min(512),
+                cols: 256,
+                nnz_per_row: 4,
+                seed: 0xD1FF,
+            },
+        ),
         other => panic!("unknown kernel {other}"),
     }
 }
@@ -93,6 +107,42 @@ fn dotp_identical_on_all_table6_configs() {
 fn gemm_identical_on_all_table6_configs() {
     for cfg in table6_configs() {
         assert_engines_agree(&cfg, "gemm");
+    }
+}
+
+#[test]
+fn fft_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        assert_engines_agree(&cfg, "fft");
+    }
+}
+
+#[test]
+fn spmmadd_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        assert_engines_agree(&cfg, "spmmadd");
+    }
+}
+
+/// The Fig. 14b double-buffer pipeline: DMA start/wait chains overlapping
+/// compute across rounds — the richest interleaving of the coordinator's
+/// DMA control path with the sharded memory step. `DbResult` carries the
+/// cycle count, stall-derived compute fraction, transferred bytes and
+/// IPC; all four must be bit-identical across engines and thread counts.
+#[test]
+fn double_buffer_trace_identical_across_engines() {
+    let cfg = ClusterConfig::tiny();
+    let p = double_buffer::DbParams {
+        kernel: double_buffer::DbKernel::Axpy,
+        chunk: cfg.num_banks() * 4,
+        rounds: 3,
+    };
+    hbm_image_clear();
+    let serial = double_buffer::run(&cfg, &p);
+    for &threads in &THREADS {
+        hbm_image_clear();
+        let par = double_buffer::run_threads(&cfg, &p, threads);
+        assert_eq!(serial, par, "double-buffer diverges at {threads} threads");
     }
 }
 
