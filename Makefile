@@ -1,7 +1,7 @@
 # Build-time entry points. The Rust crate is self-contained; Python (JAX)
 # runs only for `make artifacts`.
 
-.PHONY: artifacts build test bench pytest
+.PHONY: artifacts build test bench bench-check pytest
 
 # AOT-lower the JAX entries and evaluate the golden outputs into
 # artifacts/ (needs jax + numpy; see python/compile/aot.py).
@@ -18,6 +18,13 @@ test: build
 bench:
 	cargo bench --bench simspeed
 	cargo bench --bench scaling
+
+# Regenerate BENCH_simspeed.json and gate it against the committed
+# baseline (>25% sim-speed regression on any row fails; see
+# tools/bench_gate.py — advisory in CI, blocking here).
+bench-check:
+	cargo bench --bench simspeed
+	python3 tools/bench_gate.py
 
 pytest:
 	python3 -m pytest python/tests -q

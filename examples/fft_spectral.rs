@@ -33,7 +33,7 @@ fn main() -> Result<()> {
     let im_off = im_plane_offset(&cfg, &p);
     let (mut cl, io) = setup.into_cluster(cfg.clone());
     let stats = cl.run(2_000_000_000);
-    let got_re = io.read_output(&cl);
+    let got_re = io.read_output(&cl)?;
     let got_im = cl.l1.read_slice(io.output_base + im_off, p.batch * p.n);
 
     println!(

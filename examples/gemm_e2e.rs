@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     let (mut cl, io) = setup.into_cluster(cfg.clone());
     let stats = cl.run_parallel(2_000_000_000, threads);
 
-    assert_allclose(&io.read_output(&cl), &golden, 2e-2, "gemm vs JAX golden");
+    assert_allclose(&io.read_output(&cl)?, &golden, 2e-2, "gemm vs JAX golden");
     println!("numerics: cluster L1 image matches the JAX golden ✓");
 
     let us = stats.cycles as f64 / cfg.freq_mhz;

@@ -1,18 +1,24 @@
-//! Quickstart: build a TeraPool cluster, run an AXPY across all 1024 PEs,
-//! and check the result against the host reference.
+//! Quickstart: the Workload/Session API in four steps — run a registered
+//! kernel, pin a custom problem size, batch a sweep across host threads,
+//! and drop down to raw instruction traces.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use terapool::cluster::Cluster;
-use terapool::config::ClusterConfig;
+use terapool::config::{ClusterConfig, Scale};
+use terapool::errors::Result;
 use terapool::isa::Program;
-use terapool::kernels::axpy::{build, reference, AxpyParams};
+use terapool::kernels::axpy::{Axpy, AxpyParams};
+use terapool::report::Verdict;
+use terapool::session::{Job, Session};
 
-fn main() {
-    // 1. Pick an operating point: TeraPool-1-3-5-9 runs at 850 MHz, the
-    //    paper's energy-optimal configuration.
+fn main() -> Result<()> {
+    // 1. Pick an operating point and build a Session — the single run
+    //    path. TeraPool-1-3-5-9 runs at 850 MHz, the paper's
+    //    energy-optimal configuration. `check(true)` compares every run
+    //    against its host reference and records the verdict.
     let cfg = ClusterConfig::terapool(9);
     println!(
         "cluster: {} — {} PEs, {} banks, {:.1} MiB L1, {} MHz",
@@ -22,29 +28,43 @@ fn main() {
         cfg.l1_bytes() as f64 / (1024.0 * 1024.0),
         cfg.freq_mhz
     );
+    let session = Session::new(cfg.clone()).scale(Scale::Fast).check(true);
 
-    // 2. Build a kernel: AXPY over 256 Ki elements, local-access layout.
-    let params = AxpyParams { n: 256 * 1024, alpha: 2.0 };
-    let setup = build(&cfg, &params);
-    let want = reference(&params);
-
-    // 3. Stage the data into the simulated L1 and run to completion.
-    let (mut cluster, io) = setup.into_cluster(cfg);
-    let stats = cluster.run(100_000_000);
-
-    // 4. Inspect the result and the performance counters.
-    let got = io.read_output(&cluster);
-    assert_eq!(got, want, "cluster result must match the host reference");
+    // 2. Run a kernel by registry name. The report carries the config
+    //    fingerprint, full RunStats and the validation verdict — and is
+    //    JSON-serializable (`terapool <exp> --json out.json`).
+    let r = session.run_named("axpy")?;
     println!(
-        "axpy OK: {} elements in {} cycles — IPC/PE {:.2}, {:.1} GFLOP/s, AMAT {:.2} cyc",
-        params.n,
-        stats.cycles,
-        stats.ipc(),
-        stats.gflops(),
-        stats.amat,
+        "{}: {} in {} cycles — IPC/PE {:.2}, {:.1} GFLOP/s, AMAT {:.2} cyc [{}]",
+        r.kind,
+        r.workload,
+        r.stats.cycles,
+        r.stats.ipc(),
+        r.stats.gflops(),
+        r.stats.amat,
+        r.verdict.status(),
     );
+    assert!(matches!(r.verdict, Verdict::Passed { .. }));
 
-    // 5. Programs are plain instruction traces — write your own:
+    // 3. Pin explicit parameters, or fan a batch of workload×config
+    //    jobs out across host threads — results are bit-identical to
+    //    running them sequentially, in job order.
+    let batch = Session::new(cfg.clone()).scale(Scale::Fast).threads(4);
+    let jobs = vec![
+        Job::new(cfg.clone(), Box::new(Axpy::with(AxpyParams { n: cfg.num_banks() * 8, alpha: 0.5 }))),
+        Job::new(ClusterConfig::mempool(), Box::new(Axpy::default())),
+        Job::new(ClusterConfig::occamy(), Box::new(Axpy::default())),
+    ];
+    for r in batch.run_batch(&jobs) {
+        let r = r?;
+        println!(
+            "batch: {:24} on {:16} IPC {:.2} ({} cycles)",
+            r.workload, r.config, r.stats.ipc(), r.stats.cycles
+        );
+    }
+
+    // 4. Programs are plain instruction traces — write your own and
+    //    drive the cluster directly when the Workload API is too coarse:
     let cfg = ClusterConfig::tiny();
     let progs: Vec<Program> = (0..cfg.num_pes())
         .map(|i| {
@@ -57,8 +77,6 @@ fn main() {
         .collect();
     let mut tiny = Cluster::new(cfg, progs);
     tiny.run(1000);
-    println!(
-        "custom trace OK: PE 5 computed 5² = {}",
-        tiny.pes[5].reg(2)
-    );
+    println!("custom trace OK: PE 5 computed 5² = {}", tiny.pes[5].reg(2));
+    Ok(())
 }

@@ -1,6 +1,7 @@
 //! Bench (ablation): spill-register configurations (1-3-5-7/9/11),
 //! transaction-table depth, and sequential-region sizing — the design
-//! choices DESIGN.md calls out, measured on GEMM/AXPY.
+//! choices DESIGN.md calls out, measured on GEMM/AXPY through the
+//! Session run path.
 //!
 //! `cargo bench --bench interconnect`
 
@@ -8,10 +9,15 @@
 mod util;
 
 use terapool::config::ClusterConfig;
-use terapool::coordinator::{run_kernel, Scale};
+use terapool::coordinator::Scale;
+use terapool::kernels::gemm::Gemm;
 use terapool::report::{f1, f2, int, pct, Table};
+use terapool::session::Session;
 
 fn main() {
+    let session = Session::new(ClusterConfig::terapool(9)).scale(Scale::Fast);
+    let gemm = Gemm::default();
+
     // Ablation 1: spill registers — latency vs frequency (Sec. 6.2).
     let mut t = Table::new(
         "Ablation — spill-register configs (GEMM, fast scale)",
@@ -19,7 +25,7 @@ fn main() {
     );
     for rg in [7u32, 9, 11] {
         let cfg = ClusterConfig::terapool(rg);
-        let (s, _) = run_kernel(&cfg, "gemm", Scale::Fast);
+        let s = session.run_on(&cfg, &gemm).expect("gemm run").stats;
         t.row(vec![
             cfg.name.clone(),
             f1(cfg.freq_mhz),
@@ -39,7 +45,7 @@ fn main() {
     for entries in [1usize, 2, 4, 8, 16] {
         let mut cfg = ClusterConfig::terapool(9);
         cfg.tx_table_entries = entries;
-        let (s, _) = run_kernel(&cfg, "gemm", Scale::Fast);
+        let s = session.run_on(&cfg, &gemm).expect("gemm run").stats;
         t.row(vec![
             int(entries as u64),
             f2(s.ipc()),
@@ -50,8 +56,7 @@ fn main() {
     t.print();
 
     // Timing of the arbitration engine itself.
-    let cfg = ClusterConfig::terapool(9);
     util::bench("gemm fast on terapool-9", 3, || {
-        run_kernel(&cfg, "gemm", Scale::Fast).0.cycles
+        session.run_named("gemm").expect("gemm run").stats.cycles
     });
 }

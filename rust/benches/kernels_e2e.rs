@@ -1,6 +1,7 @@
 //! Bench: Fig. 14a / Fig. 14b regeneration — the five benchmark kernels
 //! on the full 1024-PE cluster (reduced problem sizes so a bench run
-//! stays in seconds), plus the double-buffered HBM variants.
+//! stays in seconds), plus the double-buffered HBM variants. Everything
+//! goes through the Session run path.
 //!
 //! `cargo bench --bench kernels_e2e`
 
@@ -8,36 +9,40 @@
 mod util;
 
 use terapool::config::ClusterConfig;
-use terapool::coordinator::{
-    fig14a_threads, fig14b_threads, run_kernel, run_kernel_threads, Scale, FIG14A_KERNELS,
-};
+use terapool::coordinator::{fig14a, fig14b, Scale, FIG14A_KERNELS};
+use terapool::kernels;
+use terapool::session::Session;
 
 fn main() {
-    // Regenerate Fig. 14a on the tile-parallel engine (identical numbers,
-    // less wall clock), then time the kernels per engine.
+    // Regenerate Fig. 14a/b with the host-thread budget: the kernel
+    // batch fans out across jobs (identical numbers, less wall clock).
     let threads = terapool::parallel::default_threads();
-    fig14a_threads(Scale::Fast, threads).print();
-    fig14b_threads(Scale::Fast, threads).print();
+    let batch = Session::new(ClusterConfig::terapool(9)).scale(Scale::Fast).threads(threads);
+    fig14a(&batch).print();
+    fig14b(&batch).print();
 
     let cfg = ClusterConfig::terapool(9);
+    let serial = Session::new(cfg.clone()).scale(Scale::Fast);
+    let parallel = Session::new(cfg).scale(Scale::Fast).threads(threads);
     for k in FIG14A_KERNELS {
+        let w = kernels::lookup(k).expect("registered kernel");
         // Capture the stats from inside the timed runs instead of paying
         // for an extra full simulation afterwards.
         let mut last = None;
         let r = util::bench(&format!("kernel {k} (fast scale, serial)"), 3, || {
-            let (stats, _) = run_kernel(&cfg, k, Scale::Fast);
-            let cycles = stats.cycles;
-            last = Some(stats);
+            let rep = serial.run(&*w).expect("serial run");
+            let cycles = rep.stats.cycles;
+            last = Some(rep);
             cycles
         });
         let rp = util::bench(&format!("kernel {k} (fast scale, {threads} threads)"), 3, || {
-            run_kernel_threads(&cfg, k, Scale::Fast, threads).0.cycles
+            parallel.run(&*w).expect("parallel run").stats.cycles
         });
         println!("  ↳ parallel speedup: {:.2}x", r.median_ms / rp.median_ms);
-        let stats = last.expect("bench ran at least once");
+        let rep = last.expect("bench ran at least once");
         util::report_rate(
             "simulated PE-cycles",
-            (stats.cycles * stats.num_pes as u64) as f64 / 1e6,
+            (rep.stats.cycles * rep.stats.num_pes as u64) as f64 / 1e6,
             "M",
             r.median_ms,
         );

@@ -9,12 +9,16 @@
 mod util;
 
 use terapool::config::ClusterConfig;
-use terapool::coordinator::{scaling_analysis, table6_threads, Scale};
+use terapool::coordinator::{scaling_analysis, table6, Scale};
 use terapool::kernels::gemm::{build, GemmParams};
+use terapool::session::Session;
 
 fn main() {
     let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    table6_threads(Scale::Fast, terapool::parallel::default_threads()).print();
+    let session = Session::new(ClusterConfig::terapool(9))
+        .scale(Scale::Fast)
+        .threads(terapool::parallel::default_threads());
+    table6(&session).print();
     scaling_analysis().print();
 
     for cfg in [

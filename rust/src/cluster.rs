@@ -300,15 +300,24 @@ impl Cluster {
     }
 
     /// Run to completion (or `max_cycles`); returns aggregated stats.
+    /// Panics on a timeout — harness entry points that must not compare a
+    /// half-finished memory image use [`Cluster::try_run_threads`], which
+    /// surfaces the same condition as a typed
+    /// [`crate::errors::ErrorKind::MaxCyclesExceeded`] instead.
     pub fn run(&mut self, max_cycles: u64) -> RunStats {
+        self.try_run(max_cycles).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Cluster::run`] without the panic: `Err(MaxCyclesExceeded)` when
+    /// the cluster is not [`Cluster::done`] after `max_cycles`.
+    pub fn try_run(&mut self, max_cycles: u64) -> crate::errors::Result<RunStats> {
         while !self.done() && self.cycle < max_cycles {
             self.step();
         }
-        assert!(
-            self.done(),
-            "cluster did not finish within {max_cycles} cycles (possible deadlock)"
-        );
-        self.stats()
+        if !self.done() {
+            return Err(crate::errors::Error::max_cycles("cluster", max_cycles));
+        }
+        Ok(self.stats())
     }
 
     /// Engine dispatch: `threads <= 1` runs the serial reference engine,
@@ -322,12 +331,37 @@ impl Cluster {
         }
     }
 
+    /// [`Cluster::run_threads`] with the timeout surfaced as a typed
+    /// error instead of a panic — the `Session` run path, which must
+    /// never read output from (or report stats of) an unfinished run.
+    pub fn try_run_threads(
+        &mut self,
+        max_cycles: u64,
+        threads: usize,
+    ) -> crate::errors::Result<RunStats> {
+        if threads > 1 {
+            self.try_run_parallel(max_cycles, threads)
+        } else {
+            self.try_run(max_cycles)
+        }
+    }
+
     /// Run to completion on the deterministic three-phase sharded engine
     /// with `threads` host worker threads (clamped to `[1, num_tiles]`).
     /// Cycle counts, memory image and statistics are bit-identical to
     /// [`Cluster::run`] for every thread count; see the module docs and
-    /// DESIGN.md for the determinism argument.
+    /// DESIGN.md for the determinism argument. Panics on a timeout, like
+    /// [`Cluster::run`]; `Session` uses [`Cluster::try_run_threads`].
     pub fn run_parallel(&mut self, max_cycles: u64, threads: usize) -> RunStats {
+        self.try_run_parallel(max_cycles, threads)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn try_run_parallel(
+        &mut self,
+        max_cycles: u64,
+        threads: usize,
+    ) -> crate::errors::Result<RunStats> {
         use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
         use crate::parallel::{worker_loop, PoolShutdown, SpinBarrier, WorkerChannel, WorkerCtx};
@@ -527,11 +561,10 @@ impl Cluster {
         // never be negative — that would mean double-counted deaths.
         debug_assert!(inflight >= 0, "negative in-flight total {inflight}");
         self.icn.set_inflight(inflight.max(0) as u64);
-        assert!(
-            self.done(),
-            "cluster did not finish within {max_cycles} cycles (possible deadlock)"
-        );
-        self.stats()
+        if !self.done() {
+            return Err(crate::errors::Error::max_cycles("cluster", max_cycles));
+        }
+        Ok(self.stats())
     }
 
     /// Aggregate statistics at the current cycle.

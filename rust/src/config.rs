@@ -79,6 +79,33 @@ impl DdrRate {
 
 /// Full cluster configuration. `Default` is TeraPool(1-3-5-9) @ 850 MHz —
 /// the paper's energy-optimal operating point (Sec. 6.3).
+/// Experiment scale: `Full` regenerates paper-sized workloads (minutes),
+/// `Fast` shrinks problem sizes for smoke runs and CI. Lives next to
+/// [`ClusterConfig`] because workload builders resolve their default
+/// problem sizes from the (config, scale) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Full,
+    Fast,
+}
+
+impl Scale {
+    pub fn pick<T>(&self, full: T, fast: T) -> T {
+        match self {
+            Scale::Full => full,
+            Scale::Fast => fast,
+        }
+    }
+
+    /// Stable lowercase tag (used by `RunReport` serialization).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Scale::Full => "full",
+            Scale::Fast => "fast",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub name: String,
@@ -294,6 +321,22 @@ impl ClusterConfig {
     pub fn tile_of_bank(&self, bank: usize) -> usize {
         bank / self.banks_per_tile()
     }
+
+    /// Stable fingerprint of every timing-relevant knob (FNV-1a over the
+    /// canonical `Debug` rendering, hex). Two configs with the same
+    /// fingerprint produce bit-identical simulations; `RunReport` carries
+    /// it so results can be matched to the exact configuration that
+    /// produced them.
+    pub fn fingerprint(&self) -> String {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        format!("{h:016x}")
+    }
 }
 
 #[cfg(test)]
@@ -354,5 +397,25 @@ mod tests {
         assert_eq!(c.num_pes(), 32);
         assert_eq!(c.num_banks(), 128);
         assert!(c.seq_words_total() < c.l1_words());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_knob_sensitive() {
+        let a = ClusterConfig::terapool(9);
+        assert_eq!(a.fingerprint(), ClusterConfig::terapool(9).fingerprint());
+        assert_eq!(a.fingerprint().len(), 16);
+        // Any timing-relevant knob must move the fingerprint.
+        let mut b = ClusterConfig::terapool(9);
+        b.tx_table_entries = 4;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), ClusterConfig::terapool(11).fingerprint());
+    }
+
+    #[test]
+    fn scale_picks_and_tags() {
+        assert_eq!(Scale::Full.pick(1, 2), 1);
+        assert_eq!(Scale::Fast.pick(1, 2), 2);
+        assert_eq!(Scale::Full.tag(), "full");
+        assert_eq!(Scale::Fast.tag(), "fast");
     }
 }

@@ -1,14 +1,22 @@
 //! Experiment drivers — one per paper table/figure (see DESIGN.md's
 //! experiment index).
+//!
+//! Cluster-simulator experiments (Fig. 14a/b, Table 6, headline) take a
+//! [`Session`] and submit their kernels as one **batch** of
+//! workload×config jobs — the session's host-thread budget makes the
+//! sweep embarrassingly parallel while every simulated number stays
+//! bit-identical to a sequential run. There are no `*_threads` variants:
+//! the engine/batch choice lives in the session, not in duplicated
+//! drivers.
 
 use crate::amat::{self, HierSpec};
-use crate::cluster::RunStats;
 use crate::config::{ClusterConfig, DdrRate};
 use crate::dma::{hbm_image_clear, DmaDescriptor, DmaSubsystem};
-use crate::kernels::{self, double_buffer};
+use crate::kernels::{self, axpy::Axpy, gemm::Gemm, gemm::GemmParams};
 use crate::memory::L1Memory;
 use crate::physical::{area, congestion, eda, energy, scaling, soa};
 use crate::report::{f1, f2, f3, int, pct, Table};
+use crate::session::{Job, Session};
 
 use super::Scale;
 
@@ -240,81 +248,20 @@ pub fn fig13() -> Table {
 // Fig. 14a — kernel IPC and stall fractions
 // ------------------------------------------------------------------
 
-/// Run one kernel on the given cluster config with the serial reference
-/// engine; returns (stats, name). Shorthand for [`run_kernel_threads`]
-/// with one thread.
-pub fn run_kernel(cfg: &ClusterConfig, which: &str, scale: Scale) -> (RunStats, String) {
-    run_kernel_threads(cfg, which, scale, 1)
-}
-
-/// Run one kernel on the given cluster config; returns (stats, name).
-///
-/// `threads == 1` uses the serial reference engine; `threads > 1` uses
-/// the deterministic tile-parallel engine (`Cluster::run_parallel`),
-/// which produces identical stats — the knob only changes host wall
-/// clock, never simulated results.
-pub fn run_kernel_threads(
-    cfg: &ClusterConfig,
-    which: &str,
-    scale: Scale,
-    threads: usize,
-) -> (RunStats, String) {
-    let setup = match which {
-        "axpy" => kernels::axpy::build(
-            cfg,
-            &kernels::axpy::AxpyParams {
-                n: scale.pick(256 * 1024, cfg.num_banks() * 16),
-                alpha: 2.0,
-            },
-        ),
-        "dotp" => kernels::dotp::build(
-            cfg,
-            &kernels::dotp::DotpParams { n: scale.pick(256 * 1024, cfg.num_banks() * 16) },
-        ),
-        // Fast-scale problems stay big enough to keep all 1024 PEs busy
-        // (≥1 GEMM block / FFT butterfly group / CSR row per PE).
-        "gemm" => kernels::gemm::build(
-            cfg,
-            &kernels::gemm::GemmParams {
-                m: scale.pick(256, 128),
-                n: scale.pick(256, 128),
-                k: scale.pick(256, 128),
-            },
-        ),
-        "fft" => kernels::fft::build(
-            cfg,
-            &kernels::fft::FftParams {
-                batch: scale.pick(64, 16),
-                n: scale.pick(4096, 1024),
-            },
-        ),
-        "spmmadd" => kernels::spmmadd::build(
-            cfg,
-            &kernels::spmmadd::SpmmaddParams {
-                rows: scale.pick(4096, 2048),
-                cols: scale.pick(4096, 2048),
-                nnz_per_row: 16,
-                seed: 0x5EED,
-            },
-        ),
-        other => panic!("unknown kernel {other}"),
-    };
-    let name = setup.name.clone();
-    let (mut cl, _io) = setup.into_cluster(cfg.clone());
-    let stats = cl.run_threads(2_000_000_000, threads);
-    (stats, name)
-}
-
+/// The Fig. 14a kernel sweep, in reporting order. Resolved through the
+/// workload registry ([`kernels::lookup`]) — this list is data, not
+/// dispatch.
 pub const FIG14A_KERNELS: [&str; 5] = ["axpy", "dotp", "gemm", "fft", "spmmadd"];
 
-pub fn fig14a(scale: Scale) -> Table {
-    fig14a_threads(scale, 1)
+/// Registry jobs for a kernel-name list, all on the same config.
+fn jobs_for(cfg: &ClusterConfig, names: &[&str]) -> Vec<Job> {
+    names
+        .iter()
+        .map(|k| Job::new(cfg.clone(), kernels::lookup(k).expect("registered kernel")))
+        .collect()
 }
 
-/// Fig. 14a with the engine choice threaded through: `threads > 1` runs
-/// every kernel on the tile-parallel engine (identical numbers, less
-/// wall clock — this is the sweep the parallel engine exists for).
-pub fn fig14a_threads(scale: Scale, threads: usize) -> Table {
+pub fn fig14a(s: &Session) -> Table {
     let cfg = ClusterConfig::terapool(9); // the energy-optimal 850 MHz point
     let em = energy::EnergyModel::for_cluster(&cfg);
     let mut t = Table::new(
@@ -324,10 +271,11 @@ pub fn fig14a_threads(scale: Scale, threads: usize) -> Table {
             "AMAT", "GFLOP/s", "GFLOP/s/W",
         ],
     );
-    for k in FIG14A_KERNELS {
-        let (s, name) = run_kernel_threads(&cfg, k, scale, threads);
+    for r in s.run_batch(&jobs_for(&cfg, &FIG14A_KERNELS)) {
+        let r = r.expect("fig14a kernel run");
+        let s = &r.stats;
         t.row(vec![
-            name,
+            r.workload.clone(),
             f2(s.ipc()),
             pct(s.fraction(s.instructions)),
             pct(s.fraction(s.stall_lsu)),
@@ -336,7 +284,7 @@ pub fn fig14a_threads(scale: Scale, threads: usize) -> Table {
             pct(s.fraction(s.stall_synch)),
             f2(s.amat),
             f1(s.gflops()),
-            f1(em.gflops_per_watt(&s)),
+            f1(em.gflops_per_watt(s)),
         ]);
     }
     t
@@ -346,36 +294,25 @@ pub fn fig14a_threads(scale: Scale, threads: usize) -> Table {
 // Fig. 14b — double-buffered kernels with HBM2E
 // ------------------------------------------------------------------
 
-pub fn fig14b(scale: Scale) -> Table {
-    fig14b_threads(scale, 1)
-}
-
-pub fn fig14b_threads(scale: Scale, threads: usize) -> Table {
+pub fn fig14b(s: &Session) -> Table {
     let cfg = ClusterConfig::terapool(9);
-    let chunk = scale.pick(32 * 4096, 16 * 4096); // 6 buffers must fit 896 KiW
-    let rounds = scale.pick(8, 4);
     let mut t = Table::new(
         "Fig. 14b — Double-buffered kernels with HBM2E transfers",
         &["Kernel", "Cycles", "Compute %", "Transfer-hidden %", "MB moved", "IPC"],
     );
-    for k in [
-        double_buffer::DbKernel::Gemm,
-        double_buffer::DbKernel::Dotp,
-        double_buffer::DbKernel::Axpy,
-    ] {
-        hbm_image_clear();
-        let r = double_buffer::run_threads(
-            &cfg,
-            &double_buffer::DbParams { kernel: k, chunk, rounds },
-            threads,
-        );
+    for r in s.run_batch(&jobs_for(&cfg, &["db-gemm", "db-dotp", "db-axpy"])) {
+        let r = r.expect("fig14b kernel run");
+        let st = &r.stats;
+        // Compute fraction: cycles not stalled on synchronization (DMA
+        // wait + barrier) — the Fig. 14b split.
+        let compute = 1.0 - st.stall_synch as f64 / (st.cycles as f64 * st.num_pes as f64);
         t.row(vec![
-            k.name().into(),
-            int(r.cycles),
-            pct(r.compute_fraction),
-            pct(r.compute_fraction), // hidden fraction == compute share
-            f1(r.bytes_transferred as f64 / 1e6),
-            f2(r.ipc),
+            r.kind.trim_start_matches("db-").into(),
+            int(st.cycles),
+            pct(compute),
+            pct(compute), // hidden fraction == compute share
+            f1(r.dma_bytes.expect("db workloads attach the HBML") as f64 / 1e6),
+            f2(st.ipc()),
         ]);
     }
     t
@@ -418,47 +355,41 @@ pub fn table5() -> Table {
 // Table 6 — data-transfer cost vs compute IPC across cluster scales
 // ------------------------------------------------------------------
 
-pub fn table6(scale: Scale) -> Table {
-    table6_threads(scale, 1)
-}
-
-/// Table 6 with the engine choice threaded through (`threads > 1` → the
-/// tile-parallel engine; identical simulated numbers).
-pub fn table6_threads(scale: Scale, threads: usize) -> Table {
-    let run = |cl: &mut crate::cluster::Cluster| cl.run_threads(2_000_000_000, threads);
+pub fn table6(s: &Session) -> Table {
+    let scale = s.current_scale();
     let mut t = Table::new(
         "Table 6 — Main-memory Byte/FLOP vs IPC (AXPY f32 / MatMul f32)",
         &[
             "Cluster", "Max tiling MiB", "AXPY B/F", "AXPY IPC", "GEMM B/F", "GEMM IPC",
         ],
     );
-    for cfg in [
+    let configs = [
         ClusterConfig::terapool(9),
         ClusterConfig::mempool(),
         ClusterConfig::occamy(),
-    ] {
-        let l1 = cfg.l1_bytes();
-        let tile = scaling::max_tile_edge(l1);
-        // Measure IPC on the actual cluster simulator. Scale workloads to
-        // cluster size so every PE has comparable work.
-        let axpy_n = cfg.num_banks() * scale.pick(64, 16);
-        let (mut ca, _) = kernels::axpy::build(
-            &cfg,
-            &kernels::axpy::AxpyParams { n: axpy_n, alpha: 2.0 },
-        )
-        .into_cluster(cfg.clone());
-        let sa = run(&mut ca);
+    ];
+    // One batch: (AXPY, GEMM) per cluster, workloads scaled to cluster
+    // size so every PE has comparable work (AXPY's registry default is
+    // already 64/16 bank sweeps; GEMM's edge tracks sqrt(num_pes)).
+    let mut jobs = Vec::new();
+    for cfg in &configs {
         let gemm_edge = scale
             .pick(8, 4)
             .max((cfg.num_pes() as f64).sqrt() as usize / 4 * 4)
             .max(8)
             * 4;
-        let (mut cg, _) = kernels::gemm::build(
-            &cfg,
-            &kernels::gemm::GemmParams { m: gemm_edge, n: gemm_edge, k: gemm_edge },
-        )
-        .into_cluster(cfg.clone());
-        let sg = run(&mut cg);
+        jobs.push(Job::new(cfg.clone(), Box::new(Axpy::default())));
+        jobs.push(Job::new(
+            cfg.clone(),
+            Box::new(Gemm::with(GemmParams { m: gemm_edge, n: gemm_edge, k: gemm_edge })),
+        ));
+    }
+    let results = s.run_batch(&jobs);
+    for (cfg, pair) in configs.iter().zip(results.chunks(2)) {
+        let sa = &pair[0].as_ref().expect("table6 axpy run").stats;
+        let sg = &pair[1].as_ref().expect("table6 gemm run").stats;
+        let l1 = cfg.l1_bytes();
+        let tile = scaling::max_tile_edge(l1);
         t.row(vec![
             cfg.name.clone(),
             f2(l1 as f64 / (1024.0 * 1024.0)),
@@ -506,11 +437,8 @@ pub fn scaling_analysis() -> Table {
 // Headline numbers
 // ------------------------------------------------------------------
 
-pub fn headline(scale: Scale) -> Table {
-    headline_threads(scale, 1)
-}
-
-pub fn headline_threads(scale: Scale, threads: usize) -> Table {
+pub fn headline(sess: &Session) -> Table {
+    let scale = sess.current_scale();
     let mut t = Table::new("Headline — TeraPool reproduction vs paper", &["Metric", "Paper", "Measured"]);
     let c11 = ClusterConfig::terapool(11);
     t.row(vec![
@@ -523,10 +451,11 @@ pub fn headline_threads(scale: Scale, threads: usize) -> Table {
         "~3.7".into(),
         f2(c11.peak_gflops_f16() / 1000.0),
     ]);
-    // GEMM sustained.
+    // GEMM/AXPY sustained, one batch on the energy-optimal config.
     let cfg = ClusterConfig::terapool(9);
     let em = energy::EnergyModel::for_cluster(&cfg);
-    let (s, _) = run_kernel_threads(&cfg, "gemm", scale, threads);
+    let results = sess.run_batch(&jobs_for(&cfg, &["gemm", "axpy"]));
+    let s = &results[0].as_ref().expect("headline gemm run").stats;
     t.row(vec!["GEMM IPC".into(), "0.70".into(), f2(s.ipc())]);
     t.row(vec![
         "GEMM sustained GFLOP/s".into(),
@@ -536,9 +465,9 @@ pub fn headline_threads(scale: Scale, threads: usize) -> Table {
     t.row(vec![
         "GEMM GFLOP/s/W (f32)".into(),
         "100-200 (up to 200 w/ f16)".into(),
-        f1(em.gflops_per_watt(&s)),
+        f1(em.gflops_per_watt(s)),
     ]);
-    let (sa, _) = run_kernel_threads(&cfg, "axpy", scale, threads);
+    let sa = &results[1].as_ref().expect("headline axpy run").stats;
     t.row(vec!["AXPY IPC".into(), "0.85".into(), f2(sa.ipc())]);
     // HBML.
     let (gbps, util) = hbml_sweep_point(900.0, DdrRate::G3_6, scale.pick(896 * 1024, 64 * 1024));

@@ -2,25 +2,39 @@
 //! by the CLI (`terapool <experiment>`) and the criterion benches.
 //!
 //! Every function returns a [`crate::report::Table`] with the same rows
-//! the paper reports; EXPERIMENTS.md records paper-vs-measured.
+//! the paper reports; EXPERIMENTS.md records paper-vs-measured. The
+//! cluster-simulator experiments (Fig. 14a/b, Table 6, headline) take a
+//! [`crate::session::Session`] — the single run path — so scale, engine
+//! threads and report collection are configured once by the caller.
 
 pub mod experiments;
 
 pub use experiments::*;
 
-/// Experiment scale: `Full` regenerates paper-sized workloads (minutes),
-/// `Fast` shrinks problem sizes for smoke runs and CI.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Scale {
-    Full,
-    Fast,
-}
+/// Re-export: `Scale` moved to [`crate::config`] so workload builders can
+/// resolve their default problem sizes without depending on the
+/// coordinator layer.
+pub use crate::config::Scale;
 
-impl Scale {
-    pub fn pick<T>(&self, full: T, fast: T) -> T {
-        match self {
-            Scale::Full => full,
-            Scale::Fast => fast,
-        }
-    }
-}
+/// Experiment index: name ↔ one-line description, the source of truth for
+/// the CLI dispatch and `terapool --list`.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table3", "routing quality vs crossbar complexity (GF12)"),
+    ("table4", "hierarchical interconnect analysis (AMAT, complexity)"),
+    ("fig8", "L1 access latency per hierarchy level"),
+    ("fig9", "HBML bandwidth vs cluster frequency x DDR rate"),
+    ("fig11", "EDA implementation-time breakdown"),
+    ("fig12", "hierarchical area breakdown"),
+    ("fig13", "instruction energy + EDP per operating point"),
+    ("fig14a", "kernel IPC / stall fractions (batched workload sweep)"),
+    ("fig14b", "double-buffered kernels with HBM2E transfers"),
+    ("table5", "state-of-the-art cluster comparison"),
+    ("table6", "main-memory Byte/FLOP vs IPC across cluster scales"),
+    ("scaling", "Sec. 2 Kung balance under scale-up"),
+    ("headline", "headline numbers vs paper"),
+    ("all", "every experiment above, in order"),
+    ("validate", "kernels vs host references + AOT goldens"),
+    ("ablate-txtable", "LSU transaction-table depth ablation"),
+    ("ablate-addrmap", "sequential-region size ablation"),
+    ("ablate-spill", "spill-register latency vs frequency ablation"),
+];

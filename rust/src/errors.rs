@@ -5,15 +5,62 @@
 
 use std::fmt;
 
-/// A boxed, human-readable error.
+/// Machine-inspectable error classes. The simulation-facing API
+/// (`Session`, the workload registry) promises *typed* failures — callers
+/// match on [`Error::kind`] instead of scraping the message string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Anything without a dedicated class (I/O, parse, harness plumbing).
+    Generic,
+    /// A workload name not present in the registry
+    /// (`kernels::lookup`) — a typed error, never a panic.
+    UnknownWorkload,
+    /// The cluster hit `max_cycles` before `done()`: the run did not
+    /// finish, so its output image is garbage and must not be compared.
+    MaxCyclesExceeded,
+}
+
+/// A human-readable error with a machine-matchable [`ErrorKind`].
 #[derive(Debug)]
 pub struct Error {
+    kind: ErrorKind,
     msg: String,
 }
 
 impl Error {
     pub fn msg(msg: impl Into<String>) -> Self {
-        Error { msg: msg.into() }
+        Error { kind: ErrorKind::Generic, msg: msg.into() }
+    }
+
+    /// Construct with an explicit kind.
+    pub fn with_kind(kind: ErrorKind, msg: impl Into<String>) -> Self {
+        Error { kind, msg: msg.into() }
+    }
+
+    /// `UnknownWorkload` for `name`, listing what the registry offers.
+    pub fn unknown_workload(name: &str, known: &[&str]) -> Self {
+        Error::with_kind(
+            ErrorKind::UnknownWorkload,
+            format!("unknown workload {name:?} (registered: {})", known.join(", ")),
+        )
+    }
+
+    /// `MaxCyclesExceeded` after simulating `max_cycles` of `what`.
+    pub fn max_cycles(what: &str, max_cycles: u64) -> Self {
+        Error::with_kind(
+            ErrorKind::MaxCyclesExceeded,
+            format!("{what}: did not finish within {max_cycles} cycles (possible deadlock)"),
+        )
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Prepend context to the message, keeping the kind (unlike the
+    /// generic [`Context`] adapters, which can only produce `Generic`).
+    pub fn prefixed(self, prefix: &str) -> Self {
+        Error { kind: self.kind, msg: format!("{prefix}: {}", self.msg) }
     }
 }
 
@@ -119,6 +166,16 @@ mod tests {
         }
         assert_eq!(check(3).unwrap(), 3);
         assert!(check(30).is_err());
+    }
+
+    #[test]
+    fn kinds_survive_prefixing() {
+        let e = Error::max_cycles("gemm", 100).prefixed("session");
+        assert_eq!(e.kind(), ErrorKind::MaxCyclesExceeded);
+        assert!(e.to_string().starts_with("session: gemm:"));
+        let e = Error::unknown_workload("nope", &["axpy", "gemm"]);
+        assert_eq!(e.kind(), ErrorKind::UnknownWorkload);
+        assert_eq!(fails().unwrap_err().kind(), ErrorKind::Generic);
     }
 
     #[test]

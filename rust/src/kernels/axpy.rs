@@ -11,10 +11,12 @@
 //! code): 8 non-blocking loads, 4 FMAs against the α register, 4 stores,
 //! 2 address ALU ops, 1 branch.
 
-use crate::config::ClusterConfig;
-use crate::isa::Program;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
+use crate::report::Verdict;
 
-use super::{Alloc, KernelSetup};
+use super::{allclose_verdict, Alloc, Staged, StagedIo, Workload};
+use crate::isa::Program;
 
 /// α register.
 const R_ALPHA: u8 = 1;
@@ -22,6 +24,7 @@ const R_ALPHA: u8 = 1;
 const R_X: u8 = 2;
 const R_Y: u8 = 6;
 
+#[derive(Debug, Clone)]
 pub struct AxpyParams {
     /// Elements; must be a multiple of `num_banks`.
     pub n: usize,
@@ -43,7 +46,50 @@ pub fn input_y(n: usize) -> Vec<f32> {
     (0..n).map(|i| ((i % 31) as f32) * 0.5 - 7.75).collect()
 }
 
-pub fn build(cfg: &ClusterConfig, p: &AxpyParams) -> KernelSetup {
+/// [`Workload`] registration: AXPY with pinned ([`Axpy::with`]) or
+/// scale-resolved problem size (64/16 bank sweeps per array — the
+/// Fig. 14a full/fast sizes on TeraPool).
+#[derive(Default)]
+pub struct Axpy(pub Option<AxpyParams>);
+
+impl Axpy {
+    pub fn with(p: AxpyParams) -> Self {
+        Axpy(Some(p))
+    }
+    fn resolve(&self, cfg: &ClusterConfig, scale: Scale) -> AxpyParams {
+        self.0.clone().unwrap_or(AxpyParams {
+            n: cfg.num_banks() * scale.pick(64, 16),
+            alpha: 2.0,
+        })
+    }
+}
+
+impl Workload for Axpy {
+    fn kind(&self) -> &'static str {
+        "axpy"
+    }
+    fn describe(&self) -> &'static str {
+        "local-access BLAS-1 z = a*x + y (Fig. 14a, Table 6)"
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        build(cfg, &self.resolve(cfg, scale))
+    }
+    fn check(
+        &self,
+        cfg: &ClusterConfig,
+        scale: Scale,
+        cl: &Cluster,
+        io: &StagedIo,
+    ) -> Verdict {
+        let p = self.resolve(cfg, scale);
+        match io.read_output(cl) {
+            Ok(got) => allclose_verdict(&got, &reference(&p), 1e-5, "axpy vs host reference"),
+            Err(e) => Verdict::Failed { reason: e.to_string() },
+        }
+    }
+}
+
+pub fn build(cfg: &ClusterConfig, p: &AxpyParams) -> Staged {
     let nb = cfg.num_banks();
     let bf = cfg.banking_factor;
     let npes = cfg.num_pes();
@@ -86,13 +132,14 @@ pub fn build(cfg: &ClusterConfig, p: &AxpyParams) -> KernelSetup {
         programs.push(t);
     }
 
-    KernelSetup {
+    Staged {
         name: format!("axpy-n{}", p.n),
         programs,
         inputs: vec![(xb, input_x(p.n)), (yb, input_y(p.n))],
         output_base: zb,
         output_len: p.n,
         flops: 2 * p.n as u64,
+        dma: None,
     }
 }
 
@@ -118,7 +165,7 @@ mod tests {
         let want = reference(&p);
         let (mut cl, io) = setup.into_cluster(cfg);
         let stats = cl.run(1_000_000);
-        assert_eq!(io.read_output(&cl), want);
+        assert_eq!(io.read_output(&cl).unwrap(), want);
         assert_eq!(stats.flops, 2 * p.n as u64);
     }
 

@@ -8,16 +8,19 @@
 //! This two-level software tree is why DOTP shows more AMAT +
 //! synchronization overhead than AXPY in Fig. 14a (IPC 0.83 vs 0.85).
 
-use crate::config::ClusterConfig;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
 use crate::isa::Program;
+use crate::report::Verdict;
 
-use super::{Alloc, KernelSetup};
+use super::{Alloc, Staged, StagedIo, Workload};
 
 const R_X: u8 = 2; // r2..r5
 const R_Y: u8 = 6; // r6..r9
 const R_ACC: u8 = 10; // r10..r13
 const R_T: u8 = 14;
 
+#[derive(Debug, Clone)]
 pub struct DotpParams {
     pub n: usize,
 }
@@ -35,7 +38,56 @@ pub fn input_y(n: usize) -> Vec<f32> {
     (0..n).map(|i| ((i % 7) as f32) * 0.5 - 1.0).collect()
 }
 
-pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> KernelSetup {
+/// [`Workload`] registration: DOTP with pinned or scale-resolved size.
+#[derive(Default)]
+pub struct Dotp(pub Option<DotpParams>);
+
+impl Dotp {
+    pub fn with(p: DotpParams) -> Self {
+        Dotp(Some(p))
+    }
+    fn resolve(&self, cfg: &ClusterConfig, scale: Scale) -> DotpParams {
+        self.0
+            .clone()
+            .unwrap_or(DotpParams { n: cfg.num_banks() * scale.pick(64, 16) })
+    }
+}
+
+impl Workload for Dotp {
+    fn kind(&self) -> &'static str {
+        "dotp"
+    }
+    fn describe(&self) -> &'static str {
+        "local-access BLAS-1 s = sum(x*y), two-level atomic reduction (Fig. 14a)"
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        build(cfg, &self.resolve(cfg, scale))
+    }
+    fn check(
+        &self,
+        cfg: &ClusterConfig,
+        scale: Scale,
+        cl: &Cluster,
+        io: &StagedIo,
+    ) -> Verdict {
+        let p = self.resolve(cfg, scale);
+        let got = match io.read_output(cl) {
+            Ok(v) => v[0],
+            Err(e) => return Verdict::Failed { reason: e.to_string() },
+        };
+        let want = reference(&p);
+        // Relative tolerance: the cluster reduces in a different
+        // association order than the host fold.
+        let tol = want.abs().max(1.0) * 2e-4;
+        if (got - want).abs() < tol {
+            Verdict::Passed { detail: format!("dotp {got:.3} matches host reference {want:.3}") }
+        } else {
+            Verdict::Failed { reason: format!("dotp {got} vs host reference {want} (tol {tol})") }
+        }
+    }
+}
+
+pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> Staged {
     let nb = cfg.num_banks();
     let bf = cfg.banking_factor;
     let npes = cfg.num_pes();
@@ -90,13 +142,14 @@ pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> KernelSetup {
         programs.push(t);
     }
 
-    KernelSetup {
+    Staged {
         name: format!("dotp-n{}", p.n),
         programs,
         inputs: vec![(xb, input_x(p.n)), (yb, input_y(p.n))],
         output_base: out,
         output_len: 1,
         flops: 2 * p.n as u64,
+        dma: None,
     }
 }
 
@@ -119,7 +172,7 @@ mod tests {
         let want = reference(&p);
         let (mut cl, io) = build(&cfg, &p).into_cluster(cfg);
         cl.run(1_000_000);
-        let got = io.read_output(&cl)[0];
+        let got = io.read_output(&cl).unwrap()[0];
         assert!(
             (got - want).abs() < 1e-2 * want.abs().max(1.0),
             "got {got}, want {want}"

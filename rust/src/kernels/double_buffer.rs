@@ -8,12 +8,11 @@
 //! output is a scalar so only inputs stream (≈ 82 %); compute-bound GEMM
 //! hides HBM2E entirely.
 
-use crate::cluster::Cluster;
-use crate::config::ClusterConfig;
-use crate::dma::{hbm_image_stage, DmaDescriptor};
+use crate::config::{ClusterConfig, Scale};
+use crate::dma::DmaDescriptor;
 use crate::isa::{Op, Program};
 
-use super::Alloc;
+use super::{Alloc, DmaPlan, Staged, Workload};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DbKernel {
@@ -32,11 +31,59 @@ impl DbKernel {
     }
 }
 
+#[derive(Debug, Clone)]
 pub struct DbParams {
     pub kernel: DbKernel,
     /// Words per input chunk (per operand); must be a bank-count multiple.
     pub chunk: usize,
     pub rounds: usize,
+}
+
+/// [`Workload`] registration: one entry per double-buffered kernel
+/// (`db-axpy`/`db-dotp`/`db-gemm`), with pinned ([`Db::with`]) or
+/// scale-resolved chunk/rounds (the Fig. 14b sizes: 32/16 bank sweeps
+/// per chunk, 8/4 rounds). These workloads carry a [`DmaPlan`], so the
+/// run path attaches the HBML and stages the main-memory image.
+pub struct Db {
+    kernel: DbKernel,
+    size: Option<(usize, usize)>, // (chunk, rounds)
+}
+
+impl Db {
+    pub fn new(kernel: DbKernel) -> Self {
+        Db { kernel, size: None }
+    }
+    pub fn with(kernel: DbKernel, chunk: usize, rounds: usize) -> Self {
+        Db { kernel, size: Some((chunk, rounds)) }
+    }
+    fn resolve(&self, cfg: &ClusterConfig, scale: Scale) -> DbParams {
+        let (chunk, rounds) = self
+            .size
+            .unwrap_or((cfg.num_banks() * scale.pick(32, 16), scale.pick(8, 4)));
+        DbParams { kernel: self.kernel, chunk, rounds }
+    }
+}
+
+impl Workload for Db {
+    fn kind(&self) -> &'static str {
+        match self.kernel {
+            DbKernel::Axpy => "db-axpy",
+            DbKernel::Dotp => "db-dotp",
+            DbKernel::Gemm => "db-gemm",
+        }
+    }
+    fn describe(&self) -> &'static str {
+        match self.kernel {
+            DbKernel::Axpy => "double-buffered AXPY via HBM2E, memory-bound (Fig. 14b)",
+            DbKernel::Dotp => "double-buffered DOTP via HBM2E, scalar writeback (Fig. 14b)",
+            DbKernel::Gemm => "double-buffered GEMM proxy via HBM2E, compute-bound (Fig. 14b)",
+        }
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        stage(cfg, &self.resolve(cfg, scale))
+    }
+    // No host reference: the Fig. 14b quantity of interest is the timing
+    // split, which RunStats carries — check stays NotChecked.
 }
 
 /// Result of a double-buffered run. `PartialEq` backs the
@@ -60,6 +107,27 @@ pub fn run(cfg: &ClusterConfig, p: &DbParams) -> DbResult {
 /// executes the cluster on the deterministic tile-parallel engine
 /// (identical simulated results, less wall clock).
 pub fn run_threads(cfg: &ClusterConfig, p: &DbParams, threads: usize) -> DbResult {
+    let npes = cfg.num_pes();
+    let (mut cl, _io) = stage(cfg, p).into_cluster(cfg.clone());
+    let stats = cl.run_threads(200_000_000, threads);
+    let total_pe_cycles = stats.cycles as f64 * npes as f64;
+    // Compute fraction: cycles not stalled on synchronization (DMA wait +
+    // barrier) — the Fig. 14b split.
+    let compute = 1.0 - stats.stall_synch as f64 / total_pe_cycles;
+    DbResult {
+        cycles: stats.cycles,
+        compute_fraction: compute,
+        bytes_transferred: cl.dma.as_ref().unwrap().total_bytes(),
+        ipc: stats.ipc(),
+    }
+}
+
+/// Stage the double-buffered pipeline: per-PE traces over the two L1
+/// buffer sets, plus the [`DmaPlan`] (3 descriptors per round: in-x,
+/// in-y, out-z, and the input image regions). `Staged::into_cluster`
+/// applies the plan on the running thread — the HBM image is
+/// thread-local, which is what makes these workloads batch-safe.
+pub fn stage(cfg: &ClusterConfig, p: &DbParams) -> Staged {
     let nb = cfg.num_banks();
     let bf = cfg.banking_factor;
     let npes = cfg.num_pes();
@@ -194,57 +262,56 @@ pub fn run_threads(cfg: &ClusterConfig, p: &DbParams, threads: usize) -> DbResul
         programs.push(t);
     }
 
-    let mut cl = Cluster::new(cfg.clone(), programs).with_dma();
-    {
-        let dma = cl.dma.as_mut().unwrap();
-        for r in 0..p.rounds {
-            let [xb, yb, zb] = bufs[r % 2];
-            let id = dma.register(DmaDescriptor {
-                l1_word: xb,
-                mem_byte: x_base + r as u64 * ch_b,
-                words: p.chunk as u32,
-                to_l1: true,
-            });
-            assert_eq!(id as usize, 3 * r);
-            dma.register(DmaDescriptor {
-                l1_word: yb,
-                mem_byte: y_base + r as u64 * ch_b,
-                words: p.chunk as u32,
-                to_l1: true,
-            });
-            // DOTP's result is a scalar per PE (per-round partials), so
-            // only a single burst flows back; AXPY/GEMM write full/partial
-            // result buffers.
-            let out_words = match p.kernel {
-                DbKernel::Axpy => p.chunk as u32,
-                DbKernel::Dotp => crate::dma::BURST_WORDS,
-                DbKernel::Gemm => (p.chunk as u32 / 8).max(crate::dma::BURST_WORDS),
-            };
-            dma.register(DmaDescriptor {
-                l1_word: zb,
-                mem_byte: z_base + r as u64 * ch_b,
-                words: out_words,
-                to_l1: false,
-            });
-        }
-    }
-    // Stage input images.
-    let data: Vec<f32> = (0..p.chunk).map(|i| (i % 23) as f32 * 0.125).collect();
+    // The DMA plan: descriptor ids are assigned in registration order, so
+    // round r's (in-x, in-y, out-z) land on ids (3r, 3r+1, 3r+2) — the ids
+    // the traces above wait on.
+    let mut descriptors = Vec::with_capacity(3 * p.rounds);
     for r in 0..p.rounds {
-        hbm_image_stage(x_base + r as u64 * ch_b, &data);
-        hbm_image_stage(y_base + r as u64 * ch_b, &data);
+        let [xb, yb, zb] = bufs[r % 2];
+        descriptors.push(DmaDescriptor {
+            l1_word: xb,
+            mem_byte: x_base + r as u64 * ch_b,
+            words: p.chunk as u32,
+            to_l1: true,
+        });
+        descriptors.push(DmaDescriptor {
+            l1_word: yb,
+            mem_byte: y_base + r as u64 * ch_b,
+            words: p.chunk as u32,
+            to_l1: true,
+        });
+        // DOTP's result is a scalar per PE (per-round partials), so
+        // only a single burst flows back; AXPY/GEMM write full/partial
+        // result buffers.
+        let out_words = match p.kernel {
+            DbKernel::Axpy => p.chunk as u32,
+            DbKernel::Dotp => crate::dma::BURST_WORDS,
+            DbKernel::Gemm => (p.chunk as u32 / 8).max(crate::dma::BURST_WORDS),
+        };
+        descriptors.push(DmaDescriptor {
+            l1_word: zb,
+            mem_byte: z_base + r as u64 * ch_b,
+            words: out_words,
+            to_l1: false,
+        });
+    }
+    let data: Vec<f32> = (0..p.chunk).map(|i| (i % 23) as f32 * 0.125).collect();
+    let mut image = Vec::with_capacity(2 * p.rounds);
+    for r in 0..p.rounds {
+        image.push((x_base + r as u64 * ch_b, data.clone()));
+        image.push((y_base + r as u64 * ch_b, data.clone()));
     }
 
-    let stats = cl.run_threads(200_000_000, threads);
-    let total_pe_cycles = stats.cycles as f64 * npes as f64;
-    // Compute fraction: cycles not stalled on synchronization (DMA wait +
-    // barrier) — the Fig. 14b split.
-    let compute = 1.0 - stats.stall_synch as f64 / total_pe_cycles;
-    DbResult {
-        cycles: stats.cycles,
-        compute_fraction: compute,
-        bytes_transferred: cl.dma.as_ref().unwrap().total_bytes(),
-        ipc: stats.ipc(),
+    Staged {
+        name: format!("db-{}-c{}-r{}", p.kernel.name(), p.chunk, p.rounds),
+        programs,
+        inputs: Vec::new(),
+        // The results leave through the HBML, not the L1 image; expose
+        // the last round's z buffer for ad-hoc inspection.
+        output_base: bufs[(p.rounds + 1) % 2][2],
+        output_len: 0,
+        flops: 0,
+        dma: Some(DmaPlan { descriptors, image }),
     }
 }
 

@@ -11,10 +11,12 @@
 //! reversal is an involution) restores natural order, so the L1 image is
 //! directly comparable against the `fft.hlo.txt` golden artifact.
 
-use crate::config::ClusterConfig;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
 use crate::isa::Program;
+use crate::report::Verdict;
 
-use super::{chunk_range, Alloc, KernelSetup};
+use super::{chunk_range, Alloc, Staged, StagedIo, Workload};
 
 #[derive(Debug, Clone, Copy)]
 pub struct FftParams {
@@ -62,7 +64,62 @@ const RY: u8 = 23;
 /// Twiddle-table replicas (breaks the shared-table bank hotspot).
 pub const TW_COPIES: usize = 16;
 
-pub fn build(cfg: &ClusterConfig, p: &FftParams) -> KernelSetup {
+/// [`Workload`] registration: batched radix-4 FFT with pinned or
+/// scale-resolved shape (64×4096 full / 16×1024 fast).
+#[derive(Default)]
+pub struct Fft(pub Option<FftParams>);
+
+impl Fft {
+    pub fn with(p: FftParams) -> Self {
+        Fft(Some(p))
+    }
+    fn resolve(&self, _cfg: &ClusterConfig, scale: Scale) -> FftParams {
+        self.0.unwrap_or(FftParams {
+            batch: scale.pick(64, 16),
+            n: scale.pick(4096, 1024),
+        })
+    }
+}
+
+impl Workload for Fft {
+    fn kind(&self) -> &'static str {
+        "fft"
+    }
+    fn describe(&self) -> &'static str {
+        "batched radix-4 DIF Cooley-Tukey, all-hierarchy strides (Fig. 14a)"
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        build(cfg, &self.resolve(cfg, scale))
+    }
+    fn check(
+        &self,
+        cfg: &ClusterConfig,
+        scale: Scale,
+        cl: &Cluster,
+        io: &StagedIo,
+    ) -> Verdict {
+        let p = self.resolve(cfg, scale);
+        // The host reference is a naive O(n²) DFT — refuse shapes where
+        // it would take longer than the simulation itself.
+        if p.batch * p.n * p.n > 1usize << 29 {
+            return Verdict::NotChecked;
+        }
+        let got_re = match io.read_output(cl) {
+            Ok(v) => v,
+            Err(e) => return Verdict::Failed { reason: e.to_string() },
+        };
+        let got_im = cl.l1.read_slice(io.output_base + im_plane_offset(cfg, &p), p.batch * p.n);
+        let (want_re, want_im) = reference(&p);
+        match super::allclose_verdict(&got_re, &want_re, 5e-2, "fft re-plane vs host DFT") {
+            Verdict::Passed { .. } => {
+                super::allclose_verdict(&got_im, &want_im, 5e-2, "fft re+im planes vs host DFT")
+            }
+            failed => failed,
+        }
+    }
+}
+
+pub fn build(cfg: &ClusterConfig, p: &FftParams) -> Staged {
     let n = p.n;
     let mut m = 0;
     while 1usize << (2 * m) < n {
@@ -228,7 +285,7 @@ pub fn build(cfg: &ClusterConfig, p: &FftParams) -> KernelSetup {
     // convention scaled to real ops.
     let flops = (p.batch * m * bpf) as u64 * 34;
 
-    KernelSetup {
+    Staged {
         name: format!("fft-{}x{}", p.batch, n),
         programs,
         inputs: vec![
@@ -240,6 +297,7 @@ pub fn build(cfg: &ClusterConfig, p: &FftParams) -> KernelSetup {
         output_base: xr,
         output_len: p.batch * n, // re plane; im plane follows at xi
         flops,
+        dma: None,
     }
 }
 
@@ -296,7 +354,7 @@ mod tests {
         let im_off = im_plane_offset(&cfg, &p);
         let (mut cl, io) = setup.into_cluster(cfg);
         cl.run(10_000_000);
-        let got_r = io.read_output(&cl);
+        let got_r = io.read_output(&cl).unwrap();
         let got_i = cl.l1.read_slice(io.output_base + im_off, p.batch * p.n);
         for i in 0..p.batch * p.n {
             assert!(
@@ -328,7 +386,7 @@ mod tests {
         let im_off = im_plane_offset(&cfg, &p);
         let (mut cl, io) = setup.into_cluster(cfg);
         cl.run(1_000_000);
-        let got_r = io.read_output(&cl);
+        let got_r = io.read_output(&cl).unwrap();
         let got_i = cl.l1.read_slice(io.output_base + im_off, p.n);
         for k in 0..p.n {
             assert!((got_r[k] - 1.0).abs() < 1e-4, "re[{k}]={}", got_r[k]);

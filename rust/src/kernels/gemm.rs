@@ -10,10 +10,12 @@
 //! and makes the measured AMAT line up with the Sec. 3 random-traffic
 //! model.
 
-use crate::config::ClusterConfig;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
 use crate::isa::Program;
+use crate::report::Verdict;
 
-use super::{chunk_range, Alloc, KernelSetup};
+use super::{allclose_verdict, chunk_range, Alloc, Staged, StagedIo, Workload};
 
 const BM: usize = 4;
 const BN: usize = 4;
@@ -44,7 +46,50 @@ pub fn input_b(p: &GemmParams) -> Vec<f32> {
     (0..p.k * p.n).map(|i| ((i % 9) as f32) * 0.125 - 0.5).collect()
 }
 
-pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> KernelSetup {
+/// [`Workload`] registration: GEMM with pinned or scale-resolved edge
+/// (256³ full / 128³ fast — the Fig. 14a sizes).
+#[derive(Default)]
+pub struct Gemm(pub Option<GemmParams>);
+
+impl Gemm {
+    pub fn with(p: GemmParams) -> Self {
+        Gemm(Some(p))
+    }
+    fn resolve(&self, _cfg: &ClusterConfig, scale: Scale) -> GemmParams {
+        self.0.unwrap_or({
+            let e = scale.pick(256, 128);
+            GemmParams { m: e, n: e, k: e }
+        })
+    }
+}
+
+impl Workload for Gemm {
+    fn kind(&self) -> &'static str {
+        "gemm"
+    }
+    fn describe(&self) -> &'static str {
+        "global-access 4x4-register-blocked MatMul (Fig. 14a, Table 6)"
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        build(cfg, &self.resolve(cfg, scale))
+    }
+    fn check(
+        &self,
+        cfg: &ClusterConfig,
+        scale: Scale,
+        cl: &Cluster,
+        io: &StagedIo,
+    ) -> Verdict {
+        let p = self.resolve(cfg, scale);
+        match io.read_output(cl) {
+            // 2e-2: K-loop phase staggering changes accumulation order.
+            Ok(got) => allclose_verdict(&got, &reference(&p), 2e-2, "gemm vs host reference"),
+            Err(e) => Verdict::Failed { reason: e.to_string() },
+        }
+    }
+}
+
+pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> Staged {
     assert!(p.m % BM == 0 && p.n % BN == 0, "4x4 blocking requires 4|M, 4|N");
     let npes = cfg.num_pes();
 
@@ -104,13 +149,14 @@ pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> KernelSetup {
         programs.push(t);
     }
 
-    KernelSetup {
+    Staged {
         name: format!("gemm-{}x{}x{}", p.m, p.n, p.k),
         programs,
         inputs: vec![(ab, input_a(p)), (bb, input_b(p))],
         output_base: cb,
         output_len: p.m * p.n,
         flops: 2 * (p.m * p.n * p.k) as u64,
+        dma: None,
     }
 }
 
@@ -141,7 +187,7 @@ mod tests {
         let want = reference(&p);
         let (mut cl, io) = build(&cfg, &p).into_cluster(cfg);
         cl.run(10_000_000);
-        let got = io.read_output(&cl);
+        let got = io.read_output(&cl).unwrap();
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((g - w).abs() < 1e-3, "C[{i}] = {g}, want {w}");
         }

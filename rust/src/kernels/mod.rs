@@ -1,4 +1,8 @@
-//! Benchmark kernels as per-PE instruction-trace builders (Sec. 7).
+//! Benchmark kernels as per-PE instruction-trace builders (Sec. 7), plus
+//! the **Workload API**: every kernel registers a [`Workload`]
+//! implementation in the static [`registry`], and the `Session` run path
+//! (`crate::session`) is the only consumer — no stringly-typed dispatch
+//! outside [`lookup`].
 //!
 //! Each builder lays the working set out in the shared L1 (hybrid map,
 //! interleaved region), emits one trace per PE with the same instruction
@@ -13,7 +17,9 @@
 //! * [`fft`] — radix-4 DIF Cooley-Tukey, 64 independent 4096-point
 //!   transforms, stage strides exercising every hierarchy level;
 //! * [`spmmadd`] — CSR sparse matrix-matrix addition (GraphBLAS):
-//!   irregular, branch-heavy, data-dependent accesses.
+//!   irregular, branch-heavy, data-dependent accesses;
+//! * [`double_buffer`] — the Fig. 14b double-buffered variants
+//!   (`db-axpy`/`db-dotp`/`db-gemm`) streaming through the HBML.
 
 pub mod axpy;
 pub mod dotp;
@@ -22,11 +28,28 @@ pub mod fft;
 pub mod gemm;
 pub mod spmmadd;
 
-use crate::config::ClusterConfig;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
+use crate::dma::DmaDescriptor;
+use crate::errors::{Error, Result};
 use crate::isa::Program;
+use crate::report::Verdict;
 
-/// A fully-staged kernel: traces + data placement.
-pub struct KernelSetup {
+/// HBML staging plan of a double-buffered workload: descriptors to
+/// register with the iDMA frontend plus the functional main-memory image
+/// regions to stage before the run. Applied by [`Staged::into_cluster`]
+/// on the thread that will run the cluster (the HBM image is
+/// thread-local), which is what makes batched DMA jobs safe.
+pub struct DmaPlan {
+    pub descriptors: Vec<DmaDescriptor>,
+    /// (byte address, contents) regions staged into the HBM image.
+    pub image: Vec<(u64, Vec<f32>)>,
+}
+
+/// A fully-staged workload: traces + data placement (+ optional HBML
+/// plan). Produced by [`Workload::build`] and by the per-kernel `build`
+/// functions for harness code that wants the raw pieces.
+pub struct Staged {
     pub name: String,
     /// One program per PE.
     pub programs: Vec<Program>,
@@ -37,18 +60,34 @@ pub struct KernelSetup {
     pub output_len: usize,
     /// Useful FLOP of the kernel (for GFLOP/s; MAC = 2).
     pub flops: u64,
+    /// HBML transfers (double-buffered workloads); None for L1-resident
+    /// kernels.
+    pub dma: Option<DmaPlan>,
 }
 
-impl KernelSetup {
-    /// Build a cluster, stage the inputs, and return it ready to run.
-    pub fn into_cluster(self, cfg: ClusterConfig) -> (crate::cluster::Cluster, KernelIo) {
-        let mut cl = crate::cluster::Cluster::new(cfg, self.programs);
+impl Staged {
+    /// Build a cluster, stage the L1 inputs (and the HBML plan, when
+    /// present: attach the DMA subsystem, reset + stage the thread-local
+    /// HBM image, register the descriptors), and return it ready to run.
+    pub fn into_cluster(self, cfg: ClusterConfig) -> (Cluster, StagedIo) {
+        let mut cl = Cluster::new(cfg, self.programs);
         for (base, data) in &self.inputs {
             cl.l1.write_slice(*base, data);
         }
+        if let Some(plan) = &self.dma {
+            cl = cl.with_dma();
+            crate::dma::hbm_image_clear();
+            for (addr, data) in &plan.image {
+                crate::dma::hbm_image_stage(*addr, data);
+            }
+            let dma = cl.dma.as_mut().unwrap();
+            for d in &plan.descriptors {
+                dma.register(*d);
+            }
+        }
         (
             cl,
-            KernelIo {
+            StagedIo {
                 name: self.name,
                 output_base: self.output_base,
                 output_len: self.output_len,
@@ -58,17 +97,130 @@ impl KernelSetup {
     }
 }
 
-/// What remains of a [`KernelSetup`] after the cluster took ownership.
-pub struct KernelIo {
+/// What remains of a [`Staged`] workload after the cluster took
+/// ownership: where to find the output and how much useful work it
+/// represents.
+pub struct StagedIo {
     pub name: String,
     pub output_base: u32,
     pub output_len: usize,
     pub flops: u64,
 }
 
-impl KernelIo {
-    pub fn read_output(&self, cl: &crate::cluster::Cluster) -> Vec<f32> {
+impl StagedIo {
+    /// Read the output region — **only valid after the run finished**.
+    /// Returns a typed `MaxCyclesExceeded` error when the cluster is not
+    /// done (the image would be garbage mid-run); the old silent read is
+    /// available as [`StagedIo::read_output_unchecked`] for engine
+    /// differential tests that deliberately inspect partial state.
+    pub fn read_output(&self, cl: &Cluster) -> Result<Vec<f32>> {
+        if !cl.done() {
+            return Err(Error::with_kind(
+                crate::errors::ErrorKind::MaxCyclesExceeded,
+                format!(
+                    "read_output: {}: cluster not done at cycle {} — the output \
+                     image is not final",
+                    self.name, cl.cycle
+                ),
+            ));
+        }
+        Ok(self.read_output_unchecked(cl))
+    }
+
+    /// Read the output region without the done() guard.
+    pub fn read_output_unchecked(&self, cl: &Cluster) -> Vec<f32> {
         cl.l1.read_slice(self.output_base, self.output_len)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The Workload trait + static registry.
+// ---------------------------------------------------------------------
+
+/// A runnable workload: the unit the `Session` API schedules. One
+/// registration here replaces a bespoke `run_<kernel>` entry point:
+/// implementors provide the registry key, the staging (problem sizes
+/// resolved from config × scale when not pinned explicitly), and the
+/// host-reference check.
+pub trait Workload: Send + Sync {
+    /// Registry key, e.g. `"axpy"` — stable, lowercase, unique.
+    fn kind(&self) -> &'static str;
+
+    /// One-line description for `terapool --list`.
+    fn describe(&self) -> &'static str;
+
+    /// Stage programs + data. Implementations resolve their default
+    /// problem size from `(cfg, scale)` unless constructed with pinned
+    /// parameters.
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged;
+
+    /// Verdict of the finished run against the kernel's host reference.
+    /// Only called once the cluster is `done()`. The default says the
+    /// workload ships no reference.
+    fn check(&self, cfg: &ClusterConfig, scale: Scale, cl: &Cluster, io: &StagedIo) -> Verdict {
+        let _ = (cfg, scale, cl, io);
+        Verdict::NotChecked
+    }
+}
+
+/// The static workload registry: every kernel the simulator ships, in
+/// the canonical reporting order (Fig. 14a compute kernels first, then
+/// the Fig. 14b double-buffered variants). This is the single place a
+/// kernel name maps to code.
+pub fn registry() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(axpy::Axpy::default()),
+        Box::new(dotp::Dotp::default()),
+        Box::new(gemm::Gemm::default()),
+        Box::new(fft::Fft::default()),
+        Box::new(spmmadd::Spmmadd::default()),
+        Box::new(double_buffer::Db::new(double_buffer::DbKernel::Gemm)),
+        Box::new(double_buffer::Db::new(double_buffer::DbKernel::Dotp)),
+        Box::new(double_buffer::Db::new(double_buffer::DbKernel::Axpy)),
+    ]
+}
+
+/// Registry keys, in registry order.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|w| w.kind()).collect()
+}
+
+/// Resolve a registry key to its workload — a typed
+/// [`crate::errors::ErrorKind::UnknownWorkload`] error (never a panic)
+/// when the name is not registered.
+pub fn lookup(name: &str) -> Result<Box<dyn Workload>> {
+    registry()
+        .into_iter()
+        .find(|w| w.kind() == name)
+        .ok_or_else(|| Error::unknown_workload(name, &names()))
+}
+
+/// Shared helper for element-wise reference checks: max |got - want|
+/// against a tolerance, rendered into a [`Verdict`]. Non-finite
+/// differences (NaN/inf anywhere in the output) fail outright —
+/// `f32::max` would silently skip NaN.
+pub fn allclose_verdict(got: &[f32], want: &[f32], tol: f32, what: &str) -> Verdict {
+    if got.len() != want.len() {
+        return Verdict::Failed {
+            reason: format!("{what}: length {} vs reference {}", got.len(), want.len()),
+        };
+    }
+    let mut max_d = 0.0f32;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let d = (g - w).abs();
+        if !d.is_finite() {
+            return Verdict::Failed {
+                reason: format!("{what}: non-finite at [{i}]: got {g}, want {w}"),
+            };
+        }
+        max_d = max_d.max(d);
+    }
+    if max_d <= tol {
+        Verdict::Passed {
+            detail: format!("{what}: {} elements, max |d| {max_d:.2e} ≤ {tol:.0e}", got.len()),
+        }
+    } else {
+        Verdict::Failed { reason: format!("{what}: max |d| {max_d:.3e} > {tol:.0e}") }
     }
 }
 
@@ -118,6 +270,7 @@ pub fn chunk_range(n: usize, pe: usize, npes: usize) -> std::ops::Range<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::errors::ErrorKind;
 
     #[test]
     fn alloc_rounds_to_bank_sweeps() {
@@ -151,5 +304,28 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn registry_keys_are_unique_and_lookup_is_typed() {
+        let names = names();
+        for (i, a) in names.iter().enumerate() {
+            assert!(!names[i + 1..].contains(a), "duplicate registry key {a}");
+        }
+        assert_eq!(lookup("axpy").unwrap().kind(), "axpy");
+        let e = lookup("definitely-not-a-kernel").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::UnknownWorkload);
+    }
+
+    #[test]
+    fn read_output_is_gated_on_done() {
+        let cfg = ClusterConfig::tiny();
+        let staged = axpy::build(&cfg, &axpy::AxpyParams { n: cfg.num_banks(), alpha: 1.0 });
+        let (mut cl, io) = staged.into_cluster(cfg);
+        // Before (and mid-) run: typed refusal, not garbage.
+        let e = io.read_output(&cl).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::MaxCyclesExceeded);
+        cl.run(1_000_000);
+        assert!(io.read_output(&cl).is_ok());
     }
 }

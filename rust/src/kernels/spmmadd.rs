@@ -11,11 +11,13 @@
 //! indices, so the RAW stalls the paper attributes to short dependence
 //! chains + limited unrolling appear naturally, landing IPC near 0.53.
 
-use crate::config::ClusterConfig;
-use crate::rng::Rng;
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, Scale};
 use crate::isa::Program;
+use crate::report::Verdict;
+use crate::rng::Rng;
 
-use super::{Alloc, KernelSetup};
+use super::{allclose_verdict, Alloc, Staged, StagedIo, Workload};
 
 /// A host-side CSR matrix (indices stored as exactly-representable f32 in
 /// L1 — all indices < 2^24).
@@ -129,6 +131,7 @@ pub fn canonical_dense_sum(rows: usize, cols: usize) -> Vec<f32> {
     sum
 }
 
+#[derive(Debug, Clone)]
 pub struct SpmmaddParams {
     pub rows: usize,
     pub cols: usize,
@@ -142,13 +145,45 @@ impl Default for SpmmaddParams {
     }
 }
 
-/// CSR array layout in L1 (word bases).
+/// CSR array layout in L1 (word bases), plus the host-side matrices —
+/// computable without emitting any per-PE programs ([`layout_for`]), so
+/// reference checks don't pay the trace-generation cost twice.
 pub struct SpmmaddLayout {
     pub a: Csr,
     pub b: Csr,
     pub c_ref: Csr,
-    pub c_val_base: u32,
+    pub a_col_base: u32,
+    pub a_val_base: u32,
+    pub b_col_base: u32,
+    pub b_val_base: u32,
     pub c_col_base: u32,
+    pub c_val_base: u32,
+}
+
+/// Deterministic matrices + L1 word bases for `p` — the staging layout
+/// [`build_with_layout`] uses, without building the instruction traces.
+pub fn layout_for(cfg: &ClusterConfig, p: &SpmmaddParams) -> SpmmaddLayout {
+    let a = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed);
+    let b = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed ^ SEED_B_XOR);
+    let c = a.add(&b);
+    let mut alloc = Alloc::new(cfg);
+    let a_col_base = alloc.alloc(a.nnz() as u32);
+    let a_val_base = alloc.alloc(a.nnz() as u32);
+    let b_col_base = alloc.alloc(b.nnz() as u32);
+    let b_val_base = alloc.alloc(b.nnz() as u32);
+    let c_col_base = alloc.alloc(c.nnz() as u32);
+    let c_val_base = alloc.alloc(c.nnz() as u32);
+    SpmmaddLayout {
+        a,
+        b,
+        c_ref: c,
+        a_col_base,
+        a_val_base,
+        b_col_base,
+        b_val_base,
+        c_col_base,
+        c_val_base,
+    }
 }
 
 // Registers: r1 = A col, r2 = B col, r3 = cmp, r4 = A val, r5 = B val,
@@ -160,19 +195,73 @@ const RA_VAL: u8 = 4;
 const RB_VAL: u8 = 5;
 const R_OUT: u8 = 6;
 
-pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (KernelSetup, SpmmaddLayout) {
-    let a = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed);
-    let b = Csr::random(p.rows, p.cols, p.nnz_per_row, p.seed ^ SEED_B_XOR);
-    let c = a.add(&b);
-    let npes = cfg.num_pes();
+/// [`Workload`] registration: CSR SpMMadd with pinned or scale-resolved
+/// shape (4096²/nnz 16 full, 2048² fast — the Fig. 14a sizes).
+#[derive(Default)]
+pub struct Spmmadd(pub Option<SpmmaddParams>);
 
-    let mut alloc = Alloc::new(cfg);
-    let a_col = alloc.alloc(a.nnz() as u32);
-    let a_val = alloc.alloc(a.nnz() as u32);
-    let b_col = alloc.alloc(b.nnz() as u32);
-    let b_val = alloc.alloc(b.nnz() as u32);
-    let c_col = alloc.alloc(c.nnz() as u32);
-    let c_val = alloc.alloc(c.nnz() as u32);
+impl Spmmadd {
+    pub fn with(p: SpmmaddParams) -> Self {
+        Spmmadd(Some(p))
+    }
+    fn resolve(&self, _cfg: &ClusterConfig, scale: Scale) -> SpmmaddParams {
+        self.0.clone().unwrap_or(SpmmaddParams {
+            rows: scale.pick(4096, 2048),
+            cols: scale.pick(4096, 2048),
+            nnz_per_row: 16,
+            seed: CANONICAL_SEED,
+        })
+    }
+}
+
+impl Workload for Spmmadd {
+    fn kind(&self) -> &'static str {
+        "spmmadd"
+    }
+    fn describe(&self) -> &'static str {
+        "CSR sparse matrix add C = A (+) B, irregular/branch-heavy (Fig. 14a)"
+    }
+    fn build(&self, cfg: &ClusterConfig, scale: Scale) -> Staged {
+        build(cfg, &self.resolve(cfg, scale))
+    }
+    fn check(
+        &self,
+        cfg: &ClusterConfig,
+        scale: Scale,
+        cl: &Cluster,
+        io: &StagedIo,
+    ) -> Verdict {
+        // Regenerate the deterministic layout (same params → same
+        // matrices → same bases) to locate C's value/column arrays —
+        // matrices + bases only, no per-PE trace generation.
+        let p = self.resolve(cfg, scale);
+        let layout = layout_for(cfg, &p);
+        let vals = match io.read_output(cl) {
+            Ok(v) => v,
+            Err(e) => return Verdict::Failed { reason: e.to_string() },
+        };
+        let cols = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
+        let want_cols: Vec<f32> = layout.c_ref.col_idx.iter().map(|&c| c as f32).collect();
+        match allclose_verdict(&vals, &layout.c_ref.values, 1e-5, "spmmadd C values vs host merge")
+        {
+            Verdict::Passed { .. } => allclose_verdict(
+                &cols,
+                &want_cols,
+                0.0,
+                "spmmadd C values+columns vs host merge",
+            ),
+            failed => failed,
+        }
+    }
+}
+
+pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (Staged, SpmmaddLayout) {
+    let layout = layout_for(cfg, p);
+    let (a, b, c) = (&layout.a, &layout.b, &layout.c_ref);
+    let npes = cfg.num_pes();
+    let (a_col, a_val) = (layout.a_col_base, layout.a_val_base);
+    let (b_col, b_val) = (layout.b_col_base, layout.b_val_base);
+    let (c_col, c_val) = (layout.c_col_base, layout.c_val_base);
 
     // Balance rows over PEs by merge work (nnz_a + nnz_b): greedy
     // longest-processing-time assignment. A naive contiguous split leaves
@@ -257,7 +346,7 @@ pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (KernelSetup
     }
 
     let as_f32 = |v: &[u32]| v.iter().map(|&x| x as f32).collect::<Vec<_>>();
-    let setup = KernelSetup {
+    let setup = Staged {
         name: format!("spmmadd-{}x{}-nnz{}", p.rows, p.cols, a.nnz() + b.nnz()),
         programs,
         inputs: vec![
@@ -269,14 +358,12 @@ pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (KernelSetup
         output_base: c_val,
         output_len: c.nnz(),
         flops: c.nnz() as u64, // one add (or move) per output element
+        dma: None,
     };
-    (
-        setup,
-        SpmmaddLayout { a, b, c_ref: c, c_val_base: c_val, c_col_base: c_col },
-    )
+    (setup, layout)
 }
 
-pub fn build(cfg: &ClusterConfig, p: &SpmmaddParams) -> KernelSetup {
+pub fn build(cfg: &ClusterConfig, p: &SpmmaddParams) -> Staged {
     build_with_layout(cfg, p).0
 }
 
@@ -303,7 +390,7 @@ mod tests {
         let (setup, layout) = build_with_layout(&cfg, &p);
         let (mut cl, io) = setup.into_cluster(cfg);
         cl.run(10_000_000);
-        let vals = io.read_output(&cl);
+        let vals = io.read_output(&cl).unwrap();
         let cols = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
         for (i, (&v, &want)) in vals.iter().zip(&layout.c_ref.values).enumerate() {
             assert!((v - want).abs() < 1e-5, "val[{i}] = {v}, want {want}");

@@ -27,6 +27,13 @@
 //! * **benchmark kernels** as per-PE instruction trace builders: AXPY,
 //!   DOTP, tiled GEMM, radix-4 FFT, CSR SpMMadd ([`kernels`]) —
 //!   regenerates Fig. 14a and Table 6;
+//! * the **Workload/Session API** ([`kernels::Workload`] + the static
+//!   registry, [`session::Session`]): the single run path — every kernel
+//!   is a registry entry, every run returns a structured
+//!   [`report::RunReport`] (config fingerprint, stats, per-class
+//!   interconnect numbers, validation verdict, JSON-serializable), and
+//!   batches of workload×config jobs fan out across host threads with
+//!   bit-identical-to-sequential results;
 //! * **physical-design models** calibrated on the paper's GF12 data:
 //!   routing congestion, GE area, per-instruction energy + EDP, EDA effort
 //!   ([`physical`]) — regenerates Table 3/Fig. 3 and Figs. 11–13;
@@ -61,6 +68,10 @@ pub mod physical;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod session;
 pub mod stats;
 
-pub use config::ClusterConfig;
+pub use config::{ClusterConfig, Scale};
+pub use kernels::Workload;
+pub use report::RunReport;
+pub use session::{Job, Session};

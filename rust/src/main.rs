@@ -3,48 +3,100 @@
 //! ```text
 //! terapool table4                 # hierarchical interconnect analysis
 //! terapool fig14a --fast          # kernel IPC/stalls at reduced scale
-//! terapool fig14a --threads 8     # same numbers, tile-parallel engine
+//! terapool fig14a --threads 8     # same numbers, batched across 8 host threads
 //! terapool all --fast             # everything (reduced scale)
 //! terapool validate               # kernels vs references + AOT goldens
+//! terapool validate --json r.json # ... and dump structured RunReports
+//! terapool --list                 # registered workloads + experiments
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap in the offline build), and
 //! error plumbing uses the crate's own [`terapool::errors`] (no anyhow).
 //!
-//! `--threads N` selects the deterministic tile-parallel engine for every
-//! cluster-simulator experiment. Simulated results are bit-identical to
-//! the serial engine (N ≤ 1); only host wall clock changes.
+//! Every cluster-simulator experiment goes through one [`Session`] — the
+//! single run path. `--threads N` sets the session's host-thread budget
+//! (kernel batches fan out across jobs; single runs use the
+//! deterministic tile-parallel engine). Simulated results are
+//! bit-identical at any thread count; only host wall clock changes.
+//! `--json <path>` writes every `RunReport` the invocation produced.
 
 use terapool::config::ClusterConfig;
 use terapool::coordinator::{self, Scale};
 use terapool::errors::Result;
-use terapool::kernels;
-use terapool::runtime::{assert_allclose, max_abs_diff, Runtime};
+use terapool::kernels::{self, fft, gemm, spmmadd};
+use terapool::report::{reports_to_json, RunReport, Verdict};
+use terapool::runtime::{assert_allclose, Runtime};
+use terapool::session::{Job, Session};
 use terapool::{bail, ensure};
 
-const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N]
+const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N] [--json PATH]
+       terapool --list
 experiments:
   table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
   table5 table6 scaling headline all validate
   ablate-txtable ablate-addrmap ablate-spill
 options:
   --fast        reduced problem sizes (smoke runs, CI)
-  --threads N   tile-parallel engine with N host threads (default 1 =
-                serial reference engine; results are identical)";
+  --threads N   host-thread budget for the Session run path: kernel
+                batches fan out across jobs, single runs use the
+                tile-parallel engine (default 1; simulated results are
+                identical at any N)
+  --json PATH   write every RunReport of this invocation (config
+                fingerprint, stats, per-class interconnect numbers,
+                validation verdict) as terapool-runreport-v1 JSON
+  --list        enumerate registered workloads and experiments";
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let fast = args.iter().any(|a| a == "--fast");
     let scale = if fast { Scale::Fast } else { Scale::Full };
-    let threads = parse_threads(&args)?;
+    let threads = parse_value(&args, "--threads")?
+        .map(|v| match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(terapool::err!("--threads wants a positive integer, got {v}")),
+        })
+        .transpose()?
+        .unwrap_or(1);
+    let json_path = parse_value(&args, "--json")?;
+
+    if args.iter().any(|a| a == "--list") {
+        print_list();
+        return Ok(());
+    }
+
     let cmd = args
         .iter()
         .enumerate()
-        .filter(|(i, a)| !a.starts_with("--") && !is_threads_value(&args, *i))
+        .filter(|(i, a)| !a.starts_with("--") && !is_option_value(&args, *i))
         .map(|(_, a)| a.clone())
         .next();
     let Some(cmd) = cmd else { bail!("{USAGE}") };
-    match cmd.as_str() {
+
+    // The single Session every cluster-simulator experiment runs
+    // through; its accumulated RunReports become the --json document.
+    let session = Session::new(ClusterConfig::terapool(9)).scale(scale).threads(threads);
+    let mut reports: Vec<RunReport> = Vec::new();
+
+    // Dispatch, but write the --json document even when the command
+    // fails: a failing `validate` is exactly when CI needs the report
+    // (the Failed verdicts are in it).
+    let outcome = dispatch(&cmd, scale, threads, &session, &mut reports);
+    reports.extend(session.take_reports());
+    if let Some(path) = json_path {
+        std::fs::write(&path, reports_to_json(&reports))?;
+        println!("\nwrote {} RunReport(s) to {path}", reports.len());
+    }
+    outcome
+}
+
+fn dispatch(
+    cmd: &str,
+    scale: Scale,
+    threads: usize,
+    session: &Session,
+    reports: &mut Vec<RunReport>,
+) -> Result<()> {
+    match cmd {
         "table3" => coordinator::table3().print(),
         "table4" => coordinator::table4(scale).print(),
         "fig8" => coordinator::fig8(scale).print(),
@@ -52,12 +104,12 @@ fn main() -> Result<()> {
         "fig11" => coordinator::fig11().print(),
         "fig12" => coordinator::fig12().print(),
         "fig13" => coordinator::fig13().print(),
-        "fig14a" => coordinator::fig14a_threads(scale, threads).print(),
-        "fig14b" => coordinator::fig14b_threads(scale, threads).print(),
+        "fig14a" => coordinator::fig14a(session).print(),
+        "fig14b" => coordinator::fig14b(session).print(),
         "table5" => coordinator::table5().print(),
-        "table6" => coordinator::table6_threads(scale, threads).print(),
+        "table6" => coordinator::table6(session).print(),
         "scaling" => coordinator::scaling_analysis().print(),
-        "headline" => coordinator::headline_threads(scale, threads).print(),
+        "headline" => coordinator::headline(session).print(),
         "all" => {
             coordinator::table3().print();
             coordinator::table4(scale).print();
@@ -66,143 +118,124 @@ fn main() -> Result<()> {
             coordinator::fig11().print();
             coordinator::fig12().print();
             coordinator::fig13().print();
-            coordinator::fig14a_threads(scale, threads).print();
-            coordinator::fig14b_threads(scale, threads).print();
+            coordinator::fig14a(session).print();
+            coordinator::fig14b(session).print();
             coordinator::table5().print();
-            coordinator::table6_threads(scale, threads).print();
+            coordinator::table6(session).print();
             coordinator::scaling_analysis().print();
-            coordinator::headline_threads(scale, threads).print();
+            coordinator::headline(session).print();
         }
-        "validate" => validate(scale, threads)?,
-        "ablate-txtable" => ablate_txtable(scale, threads),
-        "ablate-addrmap" => ablate_addrmap(scale, threads),
-        "ablate-spill" => ablate_spill(scale, threads),
+        "validate" => validate(scale, threads, reports)?,
+        "ablate-txtable" => ablate_txtable(session),
+        "ablate-addrmap" => ablate_addrmap(session),
+        "ablate-spill" => ablate_spill(session),
         other => bail!("unknown experiment {other}\n{USAGE}"),
     }
     Ok(())
 }
 
-/// Extract `--threads N` (defaults to 1: the serial reference engine).
-fn parse_threads(args: &[String]) -> Result<usize> {
+/// Extract the value of `--flag V` or `--flag=V` (None when absent).
+fn parse_value(args: &[String], flag: &str) -> Result<Option<String>> {
     for (i, a) in args.iter().enumerate() {
-        if a == "--threads" {
+        if a == flag {
             let Some(v) = args.get(i + 1) else {
-                bail!("--threads requires a value\n{USAGE}");
+                bail!("{flag} requires a value\n{USAGE}");
             };
-            return match v.parse::<usize>() {
-                Ok(n) if n >= 1 => Ok(n),
-                _ => bail!("--threads wants a positive integer, got {v}"),
-            };
+            return Ok(Some(v.clone()));
         }
-        if let Some(v) = a.strip_prefix("--threads=") {
-            return match v.parse::<usize>() {
-                Ok(n) if n >= 1 => Ok(n),
-                _ => bail!("--threads wants a positive integer, got {v}"),
-            };
+        if let Some(v) = a.strip_prefix(&format!("{flag}=")) {
+            return Ok(Some(v.to_string()));
         }
     }
-    Ok(1)
+    Ok(None)
 }
 
-/// Is `args[i]` the value operand of a preceding `--threads`?
-fn is_threads_value(args: &[String], i: usize) -> bool {
-    i > 0 && args[i - 1] == "--threads"
+/// Is `args[i]` the value operand of a preceding value-taking option?
+fn is_option_value(args: &[String], i: usize) -> bool {
+    i > 0 && (args[i - 1] == "--threads" || args[i - 1] == "--json")
 }
 
-/// Run a kernel setup on the selected engine.
-fn run_setup(
-    setup: kernels::KernelSetup,
-    cfg: &ClusterConfig,
-    threads: usize,
-) -> (terapool::cluster::Cluster, kernels::KernelIo, terapool::cluster::RunStats) {
-    let (mut cl, io) = setup.into_cluster(cfg.clone());
-    let stats = cl.run_threads(2_000_000_000, threads);
-    (cl, io, stats)
+/// `--list`: everything the registry and the experiment index know.
+fn print_list() {
+    println!("registered workloads (run via `validate`, figs, or the Session API):");
+    for w in kernels::registry() {
+        println!("  {:10} {}", w.kind(), w.describe());
+    }
+    println!("\nexperiments:");
+    for (name, what) in coordinator::EXPERIMENTS {
+        println!("  {name:16} {what}");
+    }
 }
 
 /// Functional validation, two layers:
 ///
-/// 1. **pure-Rust references** (always available): every kernel's final
-///    L1 image vs its host `reference()` implementation;
-/// 2. **AOT goldens** (when `make artifacts` has run): the same results
-///    vs the JAX-evaluated `artifacts/<name>.golden.bin` files.
-fn validate(scale: Scale, threads: usize) -> Result<()> {
+/// 1. **pure-Rust references** (always available): every registered
+///    kernel runs through a checking [`Session`] and must come back
+///    `Verdict::Passed`. A run that hits the cycle budget surfaces as a
+///    typed `MaxCyclesExceeded` error — reported as a failure, never
+///    compared as garbage output.
+/// 2. **AOT goldens** (when `make artifacts` has run): the same host
+///    references vs the JAX-evaluated `artifacts/<name>.golden.bin`.
+///
+/// Reports accumulate into `reports` *before* any failure propagates, so
+/// `--json` always carries the verdicts (including `Failed` ones).
+fn validate(scale: Scale, threads: usize, reports: &mut Vec<RunReport>) -> Result<()> {
     let cfg = ClusterConfig::terapool(9);
 
     // ---- layer 1: host references ---------------------------------
-    let n = scale.pick(256 * 1024, cfg.num_banks() * 16);
-    let p = kernels::axpy::AxpyParams { n, alpha: 2.0 };
-    let (cl, io, stats) = run_setup(kernels::axpy::build(&cfg, &p), &cfg, threads);
-    assert_allclose(
-        &io.read_output(&cl),
-        &kernels::axpy::reference(&p),
-        1e-5,
-        "axpy vs host reference",
-    );
-    println!(
-        "axpy     OK: {} elements match the host reference (IPC {:.2}, {} cycles)",
-        n,
-        stats.ipc(),
-        stats.cycles
-    );
-
-    let p = kernels::dotp::DotpParams { n };
-    let (cl, io, _) = run_setup(kernels::dotp::build(&cfg, &p), &cfg, threads);
-    let got = io.read_output(&cl)[0];
-    let want = kernels::dotp::reference(&p);
-    let tol = want.abs().max(1.0) * 2e-4;
-    ensure!((got - want).abs() < tol, "dotp mismatch: {got} vs reference {want}");
-    println!("dotp     OK: {got:.3} matches host reference {want:.3}");
-
-    let edge = scale.pick(256, 64);
-    let gp = kernels::gemm::GemmParams { m: edge, n: edge, k: edge };
-    let (cl, io, stats) = run_setup(kernels::gemm::build(&cfg, &gp), &cfg, threads);
-    assert_allclose(
-        &io.read_output(&cl),
-        &kernels::gemm::reference(&gp),
-        2e-2,
-        "gemm vs host reference",
-    );
-    println!(
-        "gemm     OK: {}x{} result matches the host reference (IPC {:.2})",
-        gp.m,
-        gp.n,
-        stats.ipc()
-    );
-
-    let fp = kernels::fft::FftParams { batch: 4, n: 256 };
-    let (cl, io, _) = run_setup(kernels::fft::build(&cfg, &fp), &cfg, threads);
-    let im_off = kernels::fft::im_plane_offset(&cfg, &fp);
-    let (want_re, want_im) = kernels::fft::reference(&fp);
-    let got_re = io.read_output(&cl);
-    let got_im = cl.l1.read_slice(io.output_base + im_off, fp.batch * fp.n);
-    ensure!(max_abs_diff(&got_re, &want_re) < 5e-2, "fft re-plane mismatch");
-    ensure!(max_abs_diff(&got_im, &want_im) < 5e-2, "fft im-plane mismatch");
-    println!("fft      OK: {}x{} transform matches the host DFT", fp.batch, fp.n);
-
-    let sp = kernels::spmmadd::SpmmaddParams {
-        rows: 512,
-        cols: 512,
-        nnz_per_row: kernels::spmmadd::CANONICAL_NNZ_PER_ROW,
-        seed: kernels::spmmadd::CANONICAL_SEED,
-    };
-    let (setup, layout) = kernels::spmmadd::build_with_layout(&cfg, &sp);
-    let (mut cl, _io) = setup.into_cluster(cfg.clone());
-    cl.run_threads(2_000_000_000, threads);
-    let vals = cl.l1.read_slice(layout.c_val_base, layout.c_ref.nnz());
-    let cols = cl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
-    let mut dense = vec![0.0f32; sp.rows * sp.cols];
-    for r in 0..sp.rows {
-        for i in layout.c_ref.row_ptr[r] as usize..layout.c_ref.row_ptr[r + 1] as usize {
-            dense[r * sp.cols + cols[i] as usize] += vals[i];
+    let session = Session::new(cfg.clone()).scale(scale).threads(threads).check(true);
+    // Validation problem sizes: registry defaults where the reference
+    // is cheap, pinned smaller shapes where it is quadratic/cubic.
+    let jobs = vec![
+        Job::new(cfg.clone(), kernels::lookup("axpy")?),
+        Job::new(cfg.clone(), kernels::lookup("dotp")?),
+        Job::new(
+            cfg.clone(),
+            Box::new(gemm::Gemm::with({
+                let e = scale.pick(256, 64);
+                gemm::GemmParams { m: e, n: e, k: e }
+            })),
+        ),
+        Job::new(cfg.clone(), Box::new(fft::Fft::with(fft::FftParams { batch: 4, n: 256 }))),
+        Job::new(
+            cfg.clone(),
+            Box::new(spmmadd::Spmmadd::with(spmmadd::SpmmaddParams {
+                rows: 512,
+                cols: 512,
+                nnz_per_row: spmmadd::CANONICAL_NNZ_PER_ROW,
+                seed: spmmadd::CANONICAL_SEED,
+            })),
+        ),
+    ];
+    let mut failures = 0usize;
+    for (job, r) in jobs.iter().zip(session.run_batch(&jobs)) {
+        let kind = job.workload.kind();
+        match r {
+            Err(e) => {
+                failures += 1;
+                println!("{kind:8} FAILED: {e}");
+            }
+            Ok(rep) => match &rep.verdict {
+                Verdict::Passed { detail } => println!(
+                    "{kind:8} OK: {detail} (IPC {:.2}, {} cycles)",
+                    rep.stats.ipc(),
+                    rep.stats.cycles
+                ),
+                Verdict::Failed { reason } => {
+                    failures += 1;
+                    println!("{kind:8} FAILED: {reason}");
+                }
+                Verdict::NotChecked => {
+                    failures += 1;
+                    println!("{kind:8} FAILED: workload ships no host-reference check");
+                }
+            },
         }
     }
-    let mut want = layout.a.to_dense();
-    for (w, b) in want.iter_mut().zip(layout.b.to_dense()) {
-        *w += b;
-    }
-    assert_allclose(&dense, &want, 1e-5, "spmmadd densified vs dense add");
-    println!("spmmadd  OK: densified CSR sum matches the dense reference");
+    // Hand the verdict-bearing reports to the caller before any bail:
+    // --json must carry the failures, not vanish with them.
+    reports.extend(session.take_reports());
+    ensure!(failures == 0, "validate: {failures} kernel(s) failed their host reference");
 
     // ---- layer 2: AOT goldens -------------------------------------
     // The simulator was already validated against the host references
@@ -233,9 +266,9 @@ fn validate(scale: Scale, threads: usize) -> Result<()> {
             println!("dotp     OK: host reference matches the JAX golden");
 
             let shape = rt.entry("gemm")?.inputs[0].shape.clone();
-            let gp = kernels::gemm::GemmParams { m: shape[0], n: shape[1], k: shape[0] };
+            let gp = gemm::GemmParams { m: shape[0], n: shape[1], k: shape[0] };
             let golden = rt.golden_f32("gemm")?;
-            assert_allclose(&kernels::gemm::reference(&gp), &golden, 1e-2, "gemm ref vs golden");
+            assert_allclose(&gemm::reference(&gp), &golden, 1e-2, "gemm ref vs golden");
             println!("gemm     OK: {}x{} host reference matches the JAX golden", gp.m, gp.n);
 
             // spmmadd's golden was evaluated on CSR inputs regenerated by
@@ -244,7 +277,7 @@ fn validate(scale: Scale, threads: usize) -> Result<()> {
             let shape = rt.entry("spmmadd")?.inputs[0].shape.clone();
             let (rows, cols) = (shape[0], shape[1]);
             let golden = rt.golden_f32("spmmadd")?;
-            let want = kernels::spmmadd::canonical_dense_sum(rows, cols);
+            let want = spmmadd::canonical_dense_sum(rows, cols);
             ensure!(golden == want, "spmmadd golden diverges from the Rust CSR generator");
             println!("spmmadd  OK: {rows}x{cols} CSR dense sum matches the JAX golden");
         }
@@ -254,7 +287,7 @@ fn validate(scale: Scale, threads: usize) -> Result<()> {
     Ok(())
 }
 
-fn ablate_txtable(scale: Scale, threads: usize) {
+fn ablate_txtable(s: &Session) {
     use terapool::report::{f2, int, Table};
     let mut t = Table::new(
         "Ablation — LSU transaction-table depth (GEMM)",
@@ -263,18 +296,19 @@ fn ablate_txtable(scale: Scale, threads: usize) {
     for entries in [1usize, 2, 4, 8, 16] {
         let mut cfg = ClusterConfig::terapool(9);
         cfg.tx_table_entries = entries;
-        let (s, _) = coordinator::run_kernel_threads(&cfg, "gemm", scale, threads);
+        let r = s.run_on(&cfg, &gemm::Gemm::default()).expect("ablation gemm run");
+        let st = &r.stats;
         t.row(vec![
             int(entries as u64),
-            f2(s.ipc()),
-            terapool::report::pct(s.fraction(s.stall_lsu)),
-            int(s.cycles),
+            f2(st.ipc()),
+            terapool::report::pct(st.fraction(st.stall_lsu)),
+            int(st.cycles),
         ]);
     }
     t.print();
 }
 
-fn ablate_addrmap(scale: Scale, threads: usize) {
+fn ablate_addrmap(s: &Session) {
     use terapool::report::{f2, Table};
     let mut t = Table::new(
         "Ablation — sequential-region size (AXPY AMAT, barrier traffic local vs remote)",
@@ -283,19 +317,20 @@ fn ablate_addrmap(scale: Scale, threads: usize) {
     for seq in [256usize, 1024, 4096] {
         let mut cfg = ClusterConfig::terapool(9);
         cfg.seq_words_per_tile = seq;
-        let (s, _) = coordinator::run_kernel_threads(&cfg, "axpy", scale, threads);
-        let total: u64 = s.reqs_per_class.iter().sum();
+        let r = s.run_on(&cfg, &kernels::axpy::Axpy::default()).expect("ablation axpy run");
+        let st = &r.stats;
+        let total: u64 = st.reqs_per_class.iter().sum();
         t.row(vec![
             terapool::report::int(seq as u64),
-            f2(s.ipc()),
-            f2(s.amat),
-            terapool::report::pct(s.reqs_per_class[0] as f64 / total as f64),
+            f2(st.ipc()),
+            f2(st.amat),
+            terapool::report::pct(st.reqs_per_class[0] as f64 / total as f64),
         ]);
     }
     t.print();
 }
 
-fn ablate_spill(scale: Scale, threads: usize) {
+fn ablate_spill(s: &Session) {
     use terapool::report::{f1, f2, Table};
     let mut t = Table::new(
         "Ablation — spill-register configs: latency vs frequency (GEMM)",
@@ -303,15 +338,16 @@ fn ablate_spill(scale: Scale, threads: usize) {
     );
     for rg in [7u32, 9, 11] {
         let cfg = ClusterConfig::terapool(rg);
-        let (s, _) = coordinator::run_kernel_threads(&cfg, "gemm", scale, threads);
-        let us = s.cycles as f64 / cfg.freq_mhz;
+        let r = s.run_on(&cfg, &gemm::Gemm::default()).expect("ablation gemm run");
+        let st = &r.stats;
+        let us = st.cycles as f64 / cfg.freq_mhz;
         t.row(vec![
             cfg.name.clone(),
             f1(cfg.freq_mhz),
-            f2(s.ipc()),
-            terapool::report::int(s.cycles),
+            f2(st.ipc()),
+            terapool::report::int(st.cycles),
             f1(us),
-            f1(s.gflops()),
+            f1(st.gflops()),
         ]);
     }
     t.print();

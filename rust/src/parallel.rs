@@ -319,6 +319,43 @@ pub fn worker_loop(
     }
 }
 
+/// Job-level fan-out for the `Session` batch path: run `n` independent
+/// jobs on up to `threads` host workers and return the results **in job
+/// order** regardless of which worker ran what. Scheduling is dynamic
+/// (an atomic work cursor), but because every job is independent and the
+/// result lands in its own indexed slot, the output is deterministic —
+/// batched runs are bit-identical to a sequential loop. A panicking job
+/// propagates out of the scope (same contract as running it inline).
+pub fn scatter<R: Send>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let workers = threads.min(n);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    return;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("scatter: job slot unfilled"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,5 +391,16 @@ mod tests {
         for _ in 0..10 {
             b.wait();
         }
+    }
+
+    #[test]
+    fn scatter_preserves_job_order_at_any_width() {
+        let jobs = 23usize;
+        let want: Vec<usize> = (0..jobs).map(|i| i * i).collect();
+        for threads in [1usize, 2, 4, 8, 64] {
+            let got = scatter(jobs, threads, |i| i * i);
+            assert_eq!(got, want, "{threads} threads");
+        }
+        assert_eq!(scatter(0, 4, |i| i), Vec::<usize>::new());
     }
 }

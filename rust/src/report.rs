@@ -1,6 +1,14 @@
-//! Plain-text table/series rendering shared by the CLI (`terapool <exp>`)
-//! and the criterion benches, so every paper table/figure regenerates with
-//! identical formatting in both paths.
+//! Reporting: plain-text table rendering shared by the CLI and the
+//! benches, plus the structured [`RunReport`] every `Session` run returns
+//! — one object carrying the config fingerprint, `RunStats`, per-class
+//! interconnect numbers and the validation [`Verdict`], serialized
+//! through the hand-rolled [`Json`] writer/parser (the offline build has
+//! no serde). `main.rs --json`, the benches, goldens and CI all consume
+//! this object instead of re-deriving tables.
+
+use crate::cluster::RunStats;
+use crate::errors::Result;
+use crate::{bail, ensure, err};
 
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
@@ -57,6 +65,461 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------
+// Minimal JSON value — writer and parser. Just enough for RunReport and
+// the bench trend files: null/bool/finite numbers/strings (with escape
+// handling)/arrays/objects. Non-finite floats serialize as null and
+// parse back as NaN, keeping emit → parse total.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s, 0);
+        s
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) if !x.is_finite() => out.push_str("null"),
+            // Rust's shortest-roundtrip float Display: parse() recovers
+            // the exact bits, which the report round-trip test relies on.
+            Json::Num(x) => out.push_str(&format!("{x}")),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    it.render_into(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push_str("{\n");
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    out.push_str(&pad);
+                    render_str(k, out);
+                    out.push_str(": ");
+                    v.render_into(out, indent + 1);
+                    out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes: Vec<char> = text.chars().collect();
+        let mut pos = 0usize;
+        let v = parse_value(&bytes, &mut pos)?;
+        skip_ws(&bytes, &mut pos);
+        ensure!(pos == bytes.len(), "trailing junk at char {pos}");
+        Ok(v)
+    }
+
+    /// Object field access (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Null => Some(f64::NAN), // non-finite round-trip
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed field lookups with path-bearing errors (for from_json).
+    pub fn field_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| err!("missing/ill-typed string field {key:?}"))
+    }
+    pub fn field_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| err!("missing/ill-typed integer field {key:?}"))
+    }
+    pub fn field_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err!("missing/ill-typed number field {key:?}"))
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[char], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else { bail!("unexpected end of JSON") };
+    match c {
+        'n' => parse_lit(b, pos, "null", Json::Null),
+        't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        '"' => parse_str(b, pos).map(Json::Str),
+        '[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            loop {
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&']') {
+                    *pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                if !items.is_empty() {
+                    ensure!(b.get(*pos) == Some(&','), "expected ',' in array at {pos}");
+                    *pos += 1;
+                }
+                items.push(parse_value(b, pos)?);
+            }
+        }
+        '{' => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            loop {
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&'}') {
+                    *pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                if !pairs.is_empty() {
+                    ensure!(b.get(*pos) == Some(&','), "expected ',' in object at {pos}");
+                    *pos += 1;
+                    skip_ws(b, pos);
+                }
+                let k = parse_str(b, pos)?;
+                skip_ws(b, pos);
+                ensure!(b.get(*pos) == Some(&':'), "expected ':' after key {k:?}");
+                *pos += 1;
+                pairs.push((k, parse_value(b, pos)?));
+            }
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len() && "+-.eE0123456789".contains(b[*pos]) {
+                *pos += 1;
+            }
+            let tok: String = b[start..*pos].iter().collect();
+            tok.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| err!("invalid JSON number {tok:?} at char {start}"))
+        }
+    }
+}
+
+fn parse_lit(b: &[char], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    let end = *pos + lit.len();
+    ensure!(
+        end <= b.len() && b[*pos..end].iter().collect::<String>() == lit,
+        "invalid JSON literal at char {pos}"
+    );
+    *pos = end;
+    Ok(v)
+}
+
+fn parse_str(b: &[char], pos: &mut usize) -> Result<String> {
+    ensure!(b.get(*pos) == Some(&'"'), "expected string at char {pos}");
+    *pos += 1;
+    let mut s = String::new();
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            '"' => return Ok(s),
+            '\\' => {
+                let Some(&e) = b.get(*pos) else { bail!("dangling escape") };
+                *pos += 1;
+                match e {
+                    '"' => s.push('"'),
+                    '\\' => s.push('\\'),
+                    '/' => s.push('/'),
+                    'n' => s.push('\n'),
+                    't' => s.push('\t'),
+                    'r' => s.push('\r'),
+                    'u' => {
+                        ensure!(*pos + 4 <= b.len(), "truncated \\u escape");
+                        let hex: String = b[*pos..*pos + 4].iter().collect();
+                        *pos += 4;
+                        let code = u32::from_str_radix(&hex, 16)
+                            .map_err(|_| err!("bad \\u escape {hex:?}"))?;
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    other => bail!("unsupported escape \\{other}"),
+                }
+            }
+            c => s.push(c),
+        }
+    }
+    bail!("unterminated string")
+}
+
+// ---------------------------------------------------------------------
+// Verdict + RunReport: the structured result of one Session run.
+// ---------------------------------------------------------------------
+
+/// Functional-validation outcome of a run, produced by
+/// `Workload::check` against the kernel's host reference.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Output matched the host reference; `detail` records what/how.
+    Passed { detail: String },
+    /// Output diverged (or could not be read); the run is wrong.
+    Failed { reason: String },
+    /// No check ran (checking disabled, or no reference at this size).
+    NotChecked,
+}
+
+impl Verdict {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, Verdict::Failed { .. })
+    }
+
+    pub fn status(&self) -> &'static str {
+        match self {
+            Verdict::Passed { .. } => "passed",
+            Verdict::Failed { .. } => "failed",
+            Verdict::NotChecked => "not_checked",
+        }
+    }
+
+    pub fn detail(&self) -> &str {
+        match self {
+            Verdict::Passed { detail } => detail,
+            Verdict::Failed { reason } => reason,
+            Verdict::NotChecked => "",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("status".into(), Json::Str(self.status().into())),
+            ("detail".into(), Json::Str(self.detail().into())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Verdict> {
+        let detail = j.field_str("detail")?;
+        Ok(match j.field_str("status")?.as_str() {
+            "passed" => Verdict::Passed { detail },
+            "failed" => Verdict::Failed { reason: detail },
+            "not_checked" => Verdict::NotChecked,
+            other => bail!("unknown verdict status {other:?}"),
+        })
+    }
+}
+
+/// Everything one `Session` run produces: identity (workload instance +
+/// registry kind + config name + config fingerprint + scale), engine
+/// choice, the full [`RunStats`] (including per-class AMAT / request
+/// histograms), HBML traffic, and the validation verdict. `PartialEq`
+/// backs the batch-vs-sequential bit-identity tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReport {
+    /// Staged instance name, e.g. `axpy-n262144`.
+    pub workload: String,
+    /// Registry kind, e.g. `axpy`.
+    pub kind: String,
+    /// Cluster config name, e.g. `terapool-1-3-5-9`.
+    pub config: String,
+    /// `ClusterConfig::fingerprint()` of the exact config simulated.
+    pub fingerprint: String,
+    /// `full` or `fast`.
+    pub scale: String,
+    /// Engine threads the cluster sim ran with (1 = serial reference).
+    pub engine_threads: usize,
+    pub max_cycles: u64,
+    pub stats: RunStats,
+    /// HBML bytes moved (None when the run had no DMA subsystem).
+    pub dma_bytes: Option<u64>,
+    pub verdict: Verdict,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let s = &self.stats;
+        let stats = Json::Obj(vec![
+            ("cycles".into(), Json::Num(s.cycles as f64)),
+            ("instructions".into(), Json::Num(s.instructions as f64)),
+            ("flops".into(), Json::Num(s.flops as f64)),
+            ("num_pes".into(), Json::Num(s.num_pes as f64)),
+            ("freq_mhz".into(), Json::Num(s.freq_mhz)),
+            ("stall_raw".into(), Json::Num(s.stall_raw as f64)),
+            ("stall_lsu".into(), Json::Num(s.stall_lsu as f64)),
+            ("stall_ctrl".into(), Json::Num(s.stall_ctrl as f64)),
+            ("stall_synch".into(), Json::Num(s.stall_synch as f64)),
+            ("loads".into(), Json::Num(s.loads as f64)),
+            ("stores".into(), Json::Num(s.stores as f64)),
+            ("atomics".into(), Json::Num(s.atomics as f64)),
+            ("amat".into(), Json::Num(s.amat)),
+            (
+                "amat_per_class".into(),
+                Json::Arr(s.amat_per_class.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "reqs_per_class".into(),
+                Json::Arr(s.reqs_per_class.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+            ("ipc".into(), Json::Num(s.ipc())),
+            ("gflops".into(), Json::Num(s.gflops())),
+        ]);
+        Json::Obj(vec![
+            ("workload".into(), Json::Str(self.workload.clone())),
+            ("kind".into(), Json::Str(self.kind.clone())),
+            ("config".into(), Json::Str(self.config.clone())),
+            ("fingerprint".into(), Json::Str(self.fingerprint.clone())),
+            ("scale".into(), Json::Str(self.scale.clone())),
+            ("engine_threads".into(), Json::Num(self.engine_threads as f64)),
+            ("max_cycles".into(), Json::Num(self.max_cycles as f64)),
+            ("stats".into(), stats),
+            (
+                "dma_bytes".into(),
+                match self.dma_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("verdict".into(), self.verdict.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        let sj = j.get("stats").ok_or_else(|| err!("missing stats object"))?;
+        let arr4 = |key: &str| -> Result<[f64; 4]> {
+            let a = sj
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("missing/ill-typed array field {key:?}"))?;
+            ensure!(a.len() == 4, "{key} must have 4 entries, got {}", a.len());
+            let mut out = [0.0; 4];
+            for (o, v) in out.iter_mut().zip(a) {
+                *o = v.as_f64().ok_or_else(|| err!("non-number in {key}"))?;
+            }
+            Ok(out)
+        };
+        let amat_per_class = arr4("amat_per_class")?;
+        let rq = arr4("reqs_per_class")?;
+        let stats = RunStats {
+            cycles: sj.field_u64("cycles")?,
+            instructions: sj.field_u64("instructions")?,
+            flops: sj.field_u64("flops")?,
+            num_pes: sj.field_u64("num_pes")? as usize,
+            freq_mhz: sj.field_f64("freq_mhz")?,
+            stall_raw: sj.field_u64("stall_raw")?,
+            stall_lsu: sj.field_u64("stall_lsu")?,
+            stall_ctrl: sj.field_u64("stall_ctrl")?,
+            stall_synch: sj.field_u64("stall_synch")?,
+            loads: sj.field_u64("loads")?,
+            stores: sj.field_u64("stores")?,
+            atomics: sj.field_u64("atomics")?,
+            amat: sj.field_f64("amat")?,
+            amat_per_class,
+            reqs_per_class: [rq[0] as u64, rq[1] as u64, rq[2] as u64, rq[3] as u64],
+        };
+        Ok(RunReport {
+            workload: j.field_str("workload")?,
+            kind: j.field_str("kind")?,
+            config: j.field_str("config")?,
+            fingerprint: j.field_str("fingerprint")?,
+            scale: j.field_str("scale")?,
+            engine_threads: j.field_u64("engine_threads")? as usize,
+            max_cycles: j.field_u64("max_cycles")?,
+            stats,
+            dma_bytes: match j.get("dma_bytes") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| err!("ill-typed dma_bytes"))?),
+            },
+            verdict: Verdict::from_json(
+                j.get("verdict").ok_or_else(|| err!("missing verdict"))?,
+            )?,
+        })
+    }
+}
+
+/// Serialize a report batch as the `terapool-runreport-v1` document the
+/// CLI's `--json` flag writes and CI uploads.
+pub fn reports_to_json(reports: &[RunReport]) -> String {
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("terapool-runreport-v1".into())),
+        ("reports".into(), Json::Arr(reports.iter().map(RunReport::to_json).collect())),
+    ]);
+    let mut s = doc.render();
+    s.push('\n');
+    s
+}
+
+/// Parse a `terapool-runreport-v1` document back into reports.
+pub fn reports_from_json(text: &str) -> Result<Vec<RunReport>> {
+    let doc = Json::parse(text)?;
+    ensure!(
+        doc.get("schema").and_then(Json::as_str) == Some("terapool-runreport-v1"),
+        "not a terapool-runreport-v1 document"
+    );
+    doc.get("reports")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("missing reports array"))?
+        .iter()
+        .map(RunReport::from_json)
+        .collect()
+}
+
 /// Format helpers.
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
@@ -95,5 +558,42 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn json_value_round_trips() {
+        let v = Json::Obj(vec![
+            ("s".into(), Json::Str("he \"llo\"\nworld \\".into())),
+            ("n".into(), Json::Num(1.25e-3)),
+            ("big".into(), Json::Num(2_000_000_000.0)),
+            ("nan".into(), Json::Num(f64::NAN)),
+            ("b".into(), Json::Bool(true)),
+            ("a".into(), Json::Arr(vec![Json::Null, Json::Num(-7.0)])),
+        ]);
+        let r = Json::parse(&v.render()).unwrap();
+        assert_eq!(r.field_str("s").unwrap(), "he \"llo\"\nworld \\");
+        assert_eq!(r.field_f64("n").unwrap(), 1.25e-3);
+        assert_eq!(r.field_u64("big").unwrap(), 2_000_000_000);
+        assert!(r.field_f64("nan").unwrap().is_nan()); // null ↔ NaN
+        assert_eq!(r.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn json_parser_rejects_junk() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2,]").is_err()); // trailing comma → value error
+        assert!(Json::parse("{\"a\": 1} x").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn verdict_json_round_trips() {
+        for v in [
+            Verdict::Passed { detail: "256 elems, tol 1e-5".into() },
+            Verdict::Failed { reason: "max |d| 0.3".into() },
+            Verdict::NotChecked,
+        ] {
+            assert_eq!(Verdict::from_json(&v.to_json()).unwrap(), v);
+        }
     }
 }

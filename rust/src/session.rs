@@ -1,0 +1,251 @@
+//! The `Session` API — the **single run path** of the simulator.
+//!
+//! A [`Session`] is built once from a [`ClusterConfig`] plus knobs
+//! (`Session::new(cfg).scale(..).threads(..).dma(..)`) and then runs
+//! [`Workload`]s: one at a time ([`Session::run`]), by registry name
+//! ([`Session::run_named`]), or as a **batch** of independent
+//! workload×config jobs ([`Session::run_batch`]) fanned out across host
+//! threads. Every run produces a structured [`RunReport`] (config
+//! fingerprint, `RunStats`, per-class interconnect numbers, validation
+//! verdict), and the session accumulates all of them so the CLI's
+//! `--json` flag can dump one document per invocation.
+//!
+//! ## Thread budget
+//!
+//! `threads(n)` is the session's host-thread budget, spent where it
+//! helps most:
+//!
+//! * a **single** run gives all `n` threads to the deterministic
+//!   tile-parallel engine (PR 3) — same numbers, less wall clock;
+//! * a **batch** schedules whole jobs across the `n` threads, each
+//!   job simulated on the serial reference engine — job-level
+//!   parallelism dominates cycle-level parallelism when there is more
+//!   than one job.
+//!
+//! Either way the simulated results are bit-identical to a sequential
+//! one-thread run: the engines are deterministic, jobs are independent
+//! (the HBM functional image is thread-local and re-staged per job), and
+//! batch results are returned in job order. `rust/tests/session_api.rs`
+//! enforces this.
+//!
+//! ## Timeouts are typed
+//!
+//! A run that hits `max_cycles` before the cluster is done returns an
+//! [`ErrorKind::MaxCyclesExceeded`](crate::errors::ErrorKind) error —
+//! the output image is never read, reported, or compared.
+
+use std::sync::Mutex;
+
+use crate::config::{ClusterConfig, Scale};
+use crate::errors::Result;
+use crate::kernels::{self, Workload};
+use crate::report::{RunReport, Verdict};
+
+/// One batch entry: a workload and the config to run it on.
+pub struct Job {
+    pub cfg: ClusterConfig,
+    pub workload: Box<dyn Workload>,
+}
+
+impl Job {
+    pub fn new(cfg: ClusterConfig, workload: Box<dyn Workload>) -> Self {
+        Job { cfg, workload }
+    }
+}
+
+/// See the module docs. Construct with [`Session::new`], configure with
+/// the chained builder methods, then `run` / `run_named` / `run_batch`.
+pub struct Session {
+    cfg: ClusterConfig,
+    scale: Scale,
+    threads: usize,
+    max_cycles: u64,
+    force_dma: bool,
+    checking: bool,
+    reports: Mutex<Vec<RunReport>>,
+}
+
+impl Session {
+    /// A session over `cfg` with the defaults harness code wants:
+    /// full scale, one host thread, 2 G max cycles, no forced HBML, no
+    /// reference checking.
+    pub fn new(cfg: ClusterConfig) -> Self {
+        Session {
+            cfg,
+            scale: Scale::Full,
+            threads: 1,
+            max_cycles: 2_000_000_000,
+            force_dma: false,
+            checking: false,
+            reports: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Problem-size scale workloads resolve their defaults from.
+    pub fn scale(mut self, s: Scale) -> Self {
+        self.scale = s;
+        self
+    }
+
+    /// Host-thread budget (see the module docs; clamped to ≥ 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Attach the HBML (DMA + HBM2E) subsystem even for workloads whose
+    /// staging doesn't carry a `DmaPlan`.
+    pub fn dma(mut self, on: bool) -> Self {
+        self.force_dma = on;
+        self
+    }
+
+    /// Run each workload's host-reference check and record the verdict.
+    pub fn check(mut self, on: bool) -> Self {
+        self.checking = on;
+        self
+    }
+
+    /// Simulated-cycle budget per run.
+    pub fn max_cycles(mut self, c: u64) -> Self {
+        self.max_cycles = c.max(1);
+        self
+    }
+
+    pub fn current_scale(&self) -> Scale {
+        self.scale
+    }
+
+    pub fn host_threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Run one workload on the session config, with the full thread
+    /// budget on the tile-parallel engine.
+    pub fn run(&self, w: &dyn Workload) -> Result<RunReport> {
+        let cfg = self.cfg.clone();
+        self.run_on(&cfg, w)
+    }
+
+    /// Run one workload on an explicit config (ablations sweep config
+    /// knobs without rebuilding the session).
+    pub fn run_on(&self, cfg: &ClusterConfig, w: &dyn Workload) -> Result<RunReport> {
+        let r = self.run_inner(cfg, w, self.threads);
+        if let Ok(rep) = &r {
+            self.reports.lock().unwrap().push(rep.clone());
+        }
+        r
+    }
+
+    /// Run a workload by registry name — unknown names are a typed
+    /// `UnknownWorkload` error, not a panic.
+    pub fn run_named(&self, name: &str) -> Result<RunReport> {
+        self.run(&*kernels::lookup(name)?)
+    }
+
+    /// Run a batch of independent jobs across the host-thread budget.
+    /// Results come back in job order and are bit-identical to running
+    /// the same jobs sequentially (each job simulates on the serial
+    /// reference engine; see the module docs).
+    pub fn run_batch(&self, jobs: &[Job]) -> Vec<Result<RunReport>> {
+        let results = crate::parallel::scatter(jobs.len(), self.threads, |i| {
+            self.run_inner(&jobs[i].cfg, &*jobs[i].workload, 1)
+        });
+        let mut acc = self.reports.lock().unwrap();
+        for r in results.iter().flatten() {
+            acc.push(r.clone());
+        }
+        results
+    }
+
+    /// Everything this session has run so far, in completion order
+    /// (single runs) / job order (batches).
+    pub fn reports(&self) -> Vec<RunReport> {
+        self.reports.lock().unwrap().clone()
+    }
+
+    /// Drain the accumulated reports (the CLI aggregates multiple
+    /// sessions into one `--json` document).
+    pub fn take_reports(&self) -> Vec<RunReport> {
+        std::mem::take(&mut *self.reports.lock().unwrap())
+    }
+
+    /// The run path every public entry above funnels into: build, stage,
+    /// simulate, (optionally) check, report.
+    fn run_inner(
+        &self,
+        cfg: &ClusterConfig,
+        w: &dyn Workload,
+        engine_threads: usize,
+    ) -> Result<RunReport> {
+        let staged = w.build(cfg, self.scale);
+        let (mut cl, io) = staged.into_cluster(cfg.clone());
+        if self.force_dma && cl.dma.is_none() {
+            cl = cl.with_dma();
+        }
+        let stats = cl
+            .try_run_threads(self.max_cycles, engine_threads)
+            .map_err(|e| e.prefixed(&io.name))?;
+        let verdict = if self.checking {
+            w.check(cfg, self.scale, &cl, &io)
+        } else {
+            Verdict::NotChecked
+        };
+        Ok(RunReport {
+            workload: io.name.clone(),
+            kind: w.kind().to_string(),
+            config: cfg.name.clone(),
+            fingerprint: cfg.fingerprint(),
+            scale: self.scale.tag().to_string(),
+            engine_threads,
+            max_cycles: self.max_cycles,
+            stats,
+            dma_bytes: cl.dma.as_ref().map(|d| d.total_bytes()),
+            verdict,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errors::ErrorKind;
+    use crate::kernels::axpy::{Axpy, AxpyParams};
+
+    #[test]
+    fn single_run_produces_a_checked_report() {
+        let cfg = ClusterConfig::tiny();
+        let s = Session::new(cfg.clone()).scale(Scale::Fast).check(true);
+        let r = s
+            .run(&Axpy::with(AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 }))
+            .unwrap();
+        assert_eq!(r.kind, "axpy");
+        assert_eq!(r.config, cfg.name);
+        assert_eq!(r.fingerprint, cfg.fingerprint());
+        assert!(matches!(r.verdict, Verdict::Passed { .. }), "{:?}", r.verdict);
+        assert!(r.stats.cycles > 0);
+        assert_eq!(s.reports().len(), 1);
+    }
+
+    #[test]
+    fn timeout_is_a_typed_error_and_unreported() {
+        let cfg = ClusterConfig::tiny();
+        let s = Session::new(cfg).scale(Scale::Fast).max_cycles(10);
+        let e = s.run_named("axpy").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::MaxCyclesExceeded);
+        assert!(s.reports().is_empty(), "failed runs must not be reported");
+    }
+
+    #[test]
+    fn unknown_name_is_typed() {
+        let s = Session::new(ClusterConfig::tiny());
+        assert_eq!(
+            s.run_named("nope").unwrap_err().kind(),
+            ErrorKind::UnknownWorkload
+        );
+    }
+}

@@ -3,11 +3,11 @@
 //! configurations, plus failure injection.
 
 use terapool::cluster::Cluster;
-use terapool::config::ClusterConfig;
-use terapool::coordinator::{run_kernel, Scale};
+use terapool::config::{ClusterConfig, Scale};
 use terapool::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
 use terapool::isa::{Op, Program};
 use terapool::kernels::axpy;
+use terapool::session::Session;
 
 #[test]
 fn axpy_runs_on_all_three_table6_clusters() {
@@ -21,39 +21,41 @@ fn axpy_runs_on_all_three_table6_clusters() {
         let want = axpy::reference(&p);
         let (mut cl, io) = axpy::build(&cfg, &p).into_cluster(cfg.clone());
         let stats = cl.run(100_000_000);
-        assert_eq!(io.read_output(&cl), want, "{}", cfg.name);
+        assert_eq!(io.read_output(&cl).unwrap(), want, "{}", cfg.name);
         assert!(stats.ipc() > 0.5, "{}: ipc {}", cfg.name, stats.ipc());
     }
 }
 
 #[test]
 fn kernel_suite_runs_on_full_terapool_fast_scale() {
-    let cfg = ClusterConfig::terapool(9);
+    let session = Session::new(ClusterConfig::terapool(9)).scale(Scale::Fast);
     for k in ["axpy", "dotp"] {
-        let (s, name) = run_kernel(&cfg, k, Scale::Fast);
-        assert!(s.ipc() > 0.2, "{name}: ipc {}", s.ipc());
-        assert!(s.instructions > 0);
+        let r = session.run_named(k).expect("registered kernel runs");
+        assert!(r.stats.ipc() > 0.2, "{}: ipc {}", r.workload, r.stats.ipc());
+        assert!(r.stats.instructions > 0);
     }
 }
 
 #[test]
 fn parallel_engine_reproduces_serial_on_full_terapool_fast_scale() {
-    use terapool::coordinator::run_kernel_threads;
     let cfg = ClusterConfig::terapool(9);
-    let (serial, _) = run_kernel(&cfg, "axpy", Scale::Fast);
+    let serial = Session::new(cfg.clone()).scale(Scale::Fast);
     let threads = terapool::parallel::default_threads();
-    let (parallel, _) = run_kernel_threads(&cfg, "axpy", Scale::Fast, threads);
-    assert_eq!(serial, parallel, "1024-PE axpy diverges at {threads} threads");
+    let parallel = Session::new(cfg).scale(Scale::Fast).threads(threads);
+    let s = serial.run_named("axpy").expect("serial run");
+    let p = parallel.run_named("axpy").expect("parallel run");
+    assert_eq!(s.stats, p.stats, "1024-PE axpy diverges at {threads} threads");
 }
 
 #[test]
 fn spill_register_tradeoff_latency_vs_frequency() {
     // More spill registers (11-cycle remote) cost cycles but buy MHz —
     // wall-clock for a remote-heavy workload must stay within ~20 %.
+    let session = Session::new(ClusterConfig::terapool(9)).scale(Scale::Fast);
     let mut res = Vec::new();
     for rg in [7u32, 11] {
         let cfg = ClusterConfig::terapool(rg);
-        let (s, _) = run_kernel(&cfg, "axpy", Scale::Fast);
+        let s = session.run_on(&cfg, &axpy::Axpy::default()).expect("axpy run").stats;
         res.push((s.cycles, cfg.freq_mhz, s.cycles as f64 / cfg.freq_mhz));
     }
     let (c7, _, us7) = res[0];
@@ -155,12 +157,11 @@ fn dma_roundtrip_preserves_data_through_hbm_image() {
 
 #[test]
 fn stats_fractions_are_consistent() {
-    let cfg = ClusterConfig::tiny();
-    let (s, _) = run_kernel(
-        &ClusterConfig::terapool(9),
-        "axpy",
-        Scale::Fast,
-    );
+    let s = Session::new(ClusterConfig::terapool(9))
+        .scale(Scale::Fast)
+        .run_named("axpy")
+        .expect("axpy run")
+        .stats;
     let total = s.fraction(s.instructions)
         + s.fraction(s.stall_lsu)
         + s.fraction(s.stall_raw)
@@ -168,5 +169,4 @@ fn stats_fractions_are_consistent() {
         + s.fraction(s.stall_synch);
     assert!(total <= 1.0 + 1e-9, "fractions sum {total}");
     assert!(total > 0.5, "fractions sum {total} suspiciously low");
-    let _ = cfg;
 }

@@ -61,7 +61,7 @@ fn axpy_cluster_matches_host_reference() {
     let p = axpy::AxpyParams { n: cfg.num_banks() * 8, alpha: 2.0 };
     let (mut cl, io) = axpy::build(&cfg, &p).into_cluster(cfg.clone());
     cl.run(10_000_000);
-    assert_allclose(&io.read_output(&cl), &axpy::reference(&p), 1e-6, "axpy vs host ref");
+    assert_allclose(&io.read_output(&cl).unwrap(), &axpy::reference(&p), 1e-6, "axpy vs host ref");
 }
 
 #[test]
@@ -70,7 +70,7 @@ fn dotp_cluster_matches_host_reference() {
     let p = dotp::DotpParams { n: cfg.num_banks() * 8 };
     let (mut cl, io) = dotp::build(&cfg, &p).into_cluster(cfg.clone());
     cl.run(10_000_000);
-    let (got, want) = (io.read_output(&cl)[0], dotp::reference(&p));
+    let (got, want) = (io.read_output(&cl).unwrap()[0], dotp::reference(&p));
     let tol = want.abs().max(1.0) * 2e-4; // reduction-order differences
     assert!((got - want).abs() < tol, "dotp {got} vs host ref {want}");
 }
@@ -82,7 +82,7 @@ fn gemm_cluster_matches_host_reference() {
     let want = gemm::reference(&p);
     let (mut cl, io) = setup.into_cluster(cfg());
     cl.run(500_000_000);
-    assert_allclose(&io.read_output(&cl), &want, 1e-2, "gemm 64^3 vs host ref");
+    assert_allclose(&io.read_output(&cl).unwrap(), &want, 1e-2, "gemm 64^3 vs host ref");
 }
 
 #[test]
@@ -93,7 +93,7 @@ fn fft_cluster_matches_host_reference() {
     let (want_re, want_im) = fft::reference(&p);
     let (mut cl, io) = setup.into_cluster(cfg());
     cl.run(500_000_000);
-    let got_re = io.read_output(&cl);
+    let got_re = io.read_output(&cl).unwrap();
     let got_im = cl.l1.read_slice(io.output_base + im_off, p.batch * p.n);
     assert!(max_abs_diff(&got_re, &want_re) < 5e-2);
     assert!(max_abs_diff(&got_im, &want_im) < 5e-2);
@@ -271,7 +271,7 @@ fn axpy_cluster_matches_jax_golden_end_to_end() {
     let (mut cl, io) = axpy::build(&full, &p).into_cluster(full);
     cl.run_parallel(500_000_000, threads());
     let golden = rt.golden_f32("axpy").unwrap();
-    assert_allclose(&io.read_output(&cl), &golden, 1e-5, "axpy cluster vs JAX golden");
+    assert_allclose(&io.read_output(&cl).unwrap(), &golden, 1e-5, "axpy cluster vs JAX golden");
 }
 
 #[test]
@@ -283,7 +283,7 @@ fn dotp_cluster_matches_jax_golden_end_to_end() {
     let (mut cl, io) = dotp::build(&full, &p).into_cluster(full);
     cl.run_parallel(500_000_000, threads());
     let golden = rt.golden_f32("dotp").unwrap();
-    let (got, want) = (io.read_output(&cl)[0], golden[0]);
+    let (got, want) = (io.read_output(&cl).unwrap()[0], golden[0]);
     let tol = want.abs().max(1.0) * 2e-4;
     assert!((got - want).abs() < tol, "dotp {got} vs JAX golden {want}");
 }

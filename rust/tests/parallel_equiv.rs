@@ -13,11 +13,12 @@
 //! double-buffer pipeline.
 
 use terapool::cluster::{Cluster, RunStats};
-use terapool::config::ClusterConfig;
+use terapool::config::{ClusterConfig, Scale};
 use terapool::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
 use terapool::isa::{Op, Program};
-use terapool::kernels::{axpy, dotp, double_buffer, fft, gemm, spmmadd, KernelSetup};
+use terapool::kernels::{axpy, dotp, double_buffer, fft, gemm, spmmadd, Workload};
 use terapool::memory::L1Memory;
+use terapool::session::Session;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
 
@@ -34,93 +35,89 @@ fn table6_configs() -> Vec<ClusterConfig> {
     ]
 }
 
-/// Cluster-size-scaled kernel problems, small enough that the full
-/// matrix (6 configs × 5 kernels × 5 engine runs) stays fast in debug.
-fn build_kernel(cfg: &ClusterConfig, which: &str) -> KernelSetup {
-    match which {
-        "axpy" => axpy::build(cfg, &axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 }),
-        "dotp" => dotp::build(cfg, &dotp::DotpParams { n: cfg.num_banks() * 4 }),
-        "gemm" => gemm::build(cfg, &gemm::GemmParams { m: 32, n: 32, k: 32 }),
-        // Barrier-heavy, all-hierarchy strides (radix-4, 3 stages).
-        "fft" => fft::build(cfg, &fft::FftParams { batch: 2, n: 64 }),
-        // Irregular, branch-heavy CSR merges with data-dependent loads.
-        "spmmadd" => spmmadd::build(
-            cfg,
-            &spmmadd::SpmmaddParams {
-                rows: cfg.num_pes().min(512),
-                cols: 256,
-                nnz_per_row: 4,
-                seed: 0xD1FF,
-            },
-        ),
-        other => panic!("unknown kernel {other}"),
-    }
-}
-
 fn run_engine(
     cfg: &ClusterConfig,
-    which: &str,
+    w: &dyn Workload,
     threads: Option<usize>,
 ) -> (RunStats, Vec<f32>) {
-    let setup = build_kernel(cfg, which);
+    let setup = w.build(cfg, Scale::Fast);
     let (mut cl, io) = setup.into_cluster(cfg.clone());
     let stats = match threads {
         None => cl.run(50_000_000),
         Some(t) => cl.run_parallel(50_000_000, t),
     };
-    let out = io.read_output(&cl);
+    let out = io.read_output(&cl).expect("engine run finished");
     (stats, out)
 }
 
-fn assert_engines_agree(cfg: &ClusterConfig, which: &str) {
-    let (serial_stats, serial_out) = run_engine(cfg, which, None);
+fn assert_engines_agree(cfg: &ClusterConfig, w: &dyn Workload) {
+    let (serial_stats, serial_out) = run_engine(cfg, w, None);
     for &threads in &THREADS {
-        let (par_stats, par_out) = run_engine(cfg, which, Some(threads));
+        let (par_stats, par_out) = run_engine(cfg, w, Some(threads));
         assert_eq!(
-            serial_stats, par_stats,
-            "{} / {which}: stats diverge at {threads} threads",
-            cfg.name
+            serial_stats,
+            par_stats,
+            "{} / {}: stats diverge at {threads} threads",
+            cfg.name,
+            w.kind()
         );
         assert_eq!(
-            serial_out, par_out,
-            "{} / {which}: memory image diverges at {threads} threads",
-            cfg.name
+            serial_out,
+            par_out,
+            "{} / {}: memory image diverges at {threads} threads",
+            cfg.name,
+            w.kind()
         );
     }
 }
 
+// Cluster-size-scaled kernel problems, small enough that the full
+// matrix (6 configs × 5 kernels × 5 engine runs) stays fast in debug.
+
 #[test]
 fn axpy_identical_on_all_table6_configs() {
     for cfg in table6_configs() {
-        assert_engines_agree(&cfg, "axpy");
+        let w = axpy::Axpy::with(axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 });
+        assert_engines_agree(&cfg, &w);
     }
 }
 
 #[test]
 fn dotp_identical_on_all_table6_configs() {
     for cfg in table6_configs() {
-        assert_engines_agree(&cfg, "dotp");
+        let w = dotp::Dotp::with(dotp::DotpParams { n: cfg.num_banks() * 4 });
+        assert_engines_agree(&cfg, &w);
     }
 }
 
 #[test]
 fn gemm_identical_on_all_table6_configs() {
     for cfg in table6_configs() {
-        assert_engines_agree(&cfg, "gemm");
+        let w = gemm::Gemm::with(gemm::GemmParams { m: 32, n: 32, k: 32 });
+        assert_engines_agree(&cfg, &w);
     }
 }
 
 #[test]
 fn fft_identical_on_all_table6_configs() {
+    // Barrier-heavy, all-hierarchy strides (radix-4, 3 stages).
     for cfg in table6_configs() {
-        assert_engines_agree(&cfg, "fft");
+        let w = fft::Fft::with(fft::FftParams { batch: 2, n: 64 });
+        assert_engines_agree(&cfg, &w);
     }
 }
 
 #[test]
 fn spmmadd_identical_on_all_table6_configs() {
+    // Irregular, branch-heavy CSR merges with data-dependent loads.
     for cfg in table6_configs() {
-        assert_engines_agree(&cfg, "spmmadd");
+        let w = spmmadd::Spmmadd::with(spmmadd::SpmmaddParams {
+            rows: cfg.num_pes().min(512),
+            cols: 256,
+            nnz_per_row: 4,
+            seed: 0xD1FF,
+        });
+        assert_engines_agree(&cfg, &w);
     }
 }
 
@@ -257,9 +254,10 @@ fn dma_trace_identical_across_engines() {
 #[test]
 fn thread_clamping_preserves_results() {
     let cfg = ClusterConfig::occamy();
-    let (serial_stats, serial_out) = run_engine(&cfg, "axpy", None);
+    let w = axpy::Axpy::with(axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 });
+    let (serial_stats, serial_out) = run_engine(&cfg, &w, None);
     for threads in [1usize, 3, 64, 1024] {
-        let (p_stats, p_out) = run_engine(&cfg, "axpy", Some(threads));
+        let (p_stats, p_out) = run_engine(&cfg, &w, Some(threads));
         assert_eq!(serial_stats, p_stats, "{threads} threads");
         assert_eq!(serial_out, p_out, "{threads} threads");
     }
@@ -271,19 +269,29 @@ fn thread_clamping_preserves_results() {
 #[test]
 fn parallel_engine_is_reproducible() {
     let cfg = ClusterConfig::tiny();
-    let (a_stats, a_out) = run_engine(&cfg, "gemm", Some(4));
-    let (b_stats, b_out) = run_engine(&cfg, "gemm", Some(4));
+    let w = gemm::Gemm::with(gemm::GemmParams { m: 32, n: 32, k: 32 });
+    let (a_stats, a_out) = run_engine(&cfg, &w, Some(4));
+    let (b_stats, b_out) = run_engine(&cfg, &w, Some(4));
     assert_eq!(a_stats, b_stats);
     assert_eq!(a_out, b_out);
 }
 
-/// run_kernel_threads must route through the same engines (guards the
-/// coordinator plumbing used by the CLI's --threads flag).
+/// The Session run path must route through the same engines (guards the
+/// plumbing behind the CLI's --threads flag): a single run with a
+/// thread budget > 1 executes on the tile-parallel engine and must
+/// report identical stats to a serial session.
 #[test]
-fn coordinator_threading_matches_serial() {
-    use terapool::coordinator::{run_kernel, run_kernel_threads, Scale};
+fn session_threading_matches_serial() {
     let cfg = ClusterConfig::tiny();
-    let (s, _) = run_kernel(&cfg, "axpy", Scale::Fast);
-    let (p, _) = run_kernel_threads(&cfg, "axpy", Scale::Fast, 4);
-    assert_eq!(s, p);
+    let serial = Session::new(cfg.clone())
+        .scale(Scale::Fast)
+        .run_named("axpy")
+        .expect("serial session run");
+    let parallel = Session::new(cfg)
+        .scale(Scale::Fast)
+        .threads(4)
+        .run_named("axpy")
+        .expect("parallel session run");
+    assert_eq!(serial.stats, parallel.stats);
+    assert_eq!(serial.fingerprint, parallel.fingerprint);
 }

@@ -1,0 +1,177 @@
+//! Integration suite for the Workload/Session API (the ISSUE-4
+//! acceptance tests):
+//!
+//! * **registry completeness** — every kernel the simulator ships is
+//!   listed; unknown names are a typed error, never a panic;
+//! * **JSON report round-trip** — emit → parse → field equality for the
+//!   `terapool-runreport-v1` document `--json` writes;
+//! * **batch-vs-sequential bit-identity** — a mixed workload×config
+//!   batch (including a DMA-carrying double-buffered job) produces
+//!   byte-identical `RunReport`s at 1/2/4/8 host threads;
+//! * **typed timeouts** — a run that hits `max_cycles` surfaces
+//!   `ErrorKind::MaxCyclesExceeded` instead of comparing garbage.
+
+use terapool::config::{ClusterConfig, Scale};
+use terapool::errors::ErrorKind;
+use terapool::kernels::{self, axpy, dotp, double_buffer, gemm};
+use terapool::report::{reports_from_json, reports_to_json, Verdict};
+use terapool::session::{Job, Session};
+
+// ------------------------------------------------------------------
+// Registry
+// ------------------------------------------------------------------
+
+#[test]
+fn registry_lists_every_kernel() {
+    let names = kernels::names();
+    for want in ["axpy", "dotp", "gemm", "fft", "spmmadd", "db-axpy", "db-dotp", "db-gemm"] {
+        assert!(names.contains(&want), "{want} missing from registry {names:?}");
+    }
+    // The Fig. 14a sweep is resolved through the registry too.
+    for k in terapool::coordinator::FIG14A_KERNELS {
+        assert!(names.contains(&k), "{k} missing from registry");
+    }
+    // Every entry resolves to itself.
+    for name in &names {
+        assert_eq!(kernels::lookup(name).unwrap().kind(), *name);
+        assert!(!kernels::lookup(name).unwrap().describe().is_empty());
+    }
+}
+
+#[test]
+fn unknown_workload_is_a_typed_error_not_a_panic() {
+    let e = kernels::lookup("axpyy").unwrap_err();
+    assert_eq!(e.kind(), ErrorKind::UnknownWorkload);
+    assert!(e.to_string().contains("axpyy"), "{e}");
+    assert!(e.to_string().contains("axpy"), "error should list known names: {e}");
+
+    let s = Session::new(ClusterConfig::tiny()).scale(Scale::Fast);
+    assert_eq!(s.run_named("gemmm").unwrap_err().kind(), ErrorKind::UnknownWorkload);
+}
+
+// ------------------------------------------------------------------
+// JSON round-trip
+// ------------------------------------------------------------------
+
+#[test]
+fn run_report_round_trips_through_json() {
+    let cfg = ClusterConfig::tiny();
+    let s = Session::new(cfg.clone()).scale(Scale::Fast).check(true);
+    let jobs = vec![
+        Job::new(cfg.clone(), kernels::lookup("axpy").unwrap()),
+        Job::new(cfg.clone(), kernels::lookup("dotp").unwrap()),
+        // A DMA-carrying report: exercises the dma_bytes field.
+        Job::new(
+            cfg.clone(),
+            Box::new(double_buffer::Db::with(
+                double_buffer::DbKernel::Axpy,
+                cfg.num_banks() * 4,
+                3,
+            )),
+        ),
+    ];
+    let reports: Vec<_> = s
+        .run_batch(&jobs)
+        .into_iter()
+        .map(|r| r.expect("batch job runs"))
+        .collect();
+    assert!(reports[2].dma_bytes.is_some(), "db job must report HBML traffic");
+    assert!(matches!(reports[0].verdict, Verdict::Passed { .. }), "{:?}", reports[0].verdict);
+
+    let text = reports_to_json(&reports);
+    let parsed = reports_from_json(&text).expect("document parses");
+    assert_eq!(parsed, reports, "emit → parse must preserve every field");
+
+    // And the session accumulated the same reports for --json.
+    assert_eq!(s.reports(), reports);
+}
+
+#[test]
+fn malformed_report_documents_are_rejected() {
+    assert!(reports_from_json("{}").is_err());
+    assert!(reports_from_json("{\"schema\": \"other\", \"reports\": []}").is_err());
+    assert!(reports_from_json("not json").is_err());
+}
+
+// ------------------------------------------------------------------
+// Batch vs sequential bit-identity
+// ------------------------------------------------------------------
+
+/// A mixed batch over two Table-6 configs: local-access, global-access,
+/// reduction, and DMA-carrying double-buffered jobs.
+fn mixed_jobs() -> Vec<Job> {
+    let a = ClusterConfig::tiny();
+    let b = ClusterConfig::mempool();
+    vec![
+        Job::new(a.clone(), Box::new(axpy::Axpy::with(axpy::AxpyParams { n: a.num_banks() * 4, alpha: 2.0 }))),
+        Job::new(b.clone(), Box::new(axpy::Axpy::with(axpy::AxpyParams { n: b.num_banks() * 4, alpha: 2.0 }))),
+        Job::new(a.clone(), Box::new(gemm::Gemm::with(gemm::GemmParams { m: 16, n: 16, k: 16 }))),
+        Job::new(b.clone(), Box::new(dotp::Dotp::with(dotp::DotpParams { n: b.num_banks() * 4 }))),
+        Job::new(
+            a.clone(),
+            Box::new(double_buffer::Db::with(double_buffer::DbKernel::Axpy, a.num_banks() * 4, 3)),
+        ),
+        Job::new(
+            b.clone(),
+            Box::new(double_buffer::Db::with(double_buffer::DbKernel::Gemm, b.num_banks() * 4, 3)),
+        ),
+    ]
+}
+
+#[test]
+fn batch_is_bit_identical_to_sequential_at_any_thread_count() {
+    let run_at = |threads: usize| {
+        let s = Session::new(ClusterConfig::tiny()).scale(Scale::Fast).threads(threads).check(true);
+        s.run_batch(&mixed_jobs())
+            .into_iter()
+            .map(|r| r.expect("batch job runs"))
+            .collect::<Vec<_>>()
+    };
+    let sequential = run_at(1);
+    assert_eq!(sequential.len(), 6);
+    for &threads in &[2usize, 4, 8] {
+        let batched = run_at(threads);
+        // RunReport: PartialEq covers identity, fingerprint, the full
+        // RunStats, dma_bytes and the verdict — bit equality, no
+        // tolerances.
+        assert_eq!(sequential, batched, "batch diverges at {threads} host threads");
+    }
+}
+
+#[test]
+fn batch_reports_arrive_in_job_order() {
+    let s = Session::new(ClusterConfig::tiny()).scale(Scale::Fast).threads(4);
+    let jobs = mixed_jobs();
+    let want_kinds: Vec<&str> = jobs.iter().map(|j| j.workload.kind()).collect();
+    let got: Vec<String> = s
+        .run_batch(&jobs)
+        .into_iter()
+        .map(|r| r.expect("batch job runs").kind)
+        .collect();
+    assert_eq!(got, want_kinds);
+}
+
+// ------------------------------------------------------------------
+// Typed timeouts
+// ------------------------------------------------------------------
+
+#[test]
+fn max_cycles_is_surfaced_not_compared() {
+    let cfg = ClusterConfig::tiny();
+    let s = Session::new(cfg.clone()).scale(Scale::Fast).max_cycles(50).check(true);
+    // Single run: typed error.
+    let e = s.run_named("gemm").unwrap_err();
+    assert_eq!(e.kind(), ErrorKind::MaxCyclesExceeded);
+    // Batch: the timed-out job errs, healthy jobs still report.
+    let jobs = vec![
+        Job::new(cfg.clone(), kernels::lookup("gemm").unwrap()),
+        Job::new(cfg.clone(), kernels::lookup("axpy").unwrap()),
+    ];
+    let quick = Session::new(cfg).scale(Scale::Fast).max_cycles(50);
+    let rs = quick.run_batch(&jobs);
+    assert_eq!(rs[0].as_ref().unwrap_err().kind(), ErrorKind::MaxCyclesExceeded);
+    // (axpy at 50 cycles also cannot finish — both must be typed, and
+    // nothing may land in the report log.)
+    assert_eq!(rs[1].as_ref().unwrap_err().kind(), ErrorKind::MaxCyclesExceeded);
+    assert!(quick.reports().is_empty());
+}

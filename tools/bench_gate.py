@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Bench regression gate (ROADMAP open item): compare a freshly written
+``BENCH_simspeed.json`` against the committed baseline and fail when the
+simulator got more than ``--max-regress`` slower on any matched row.
+
+Rows are matched on ``(bench, engine)`` and compared on
+``mcycles_per_s`` (simulated PE-Mcycles per host second — higher is
+better). The gate is *advisory* in CI (hosted-runner numbers are noisy;
+the step uses continue-on-error), but locally ``make bench-check`` makes
+a perf regression impossible to miss.
+
+Usage:
+    python3 tools/bench_gate.py                       # HEAD vs ./BENCH_simspeed.json
+    python3 tools/bench_gate.py --baseline old.json --fresh new.json
+    python3 tools/bench_gate.py --max-regress 0.10    # stricter gate
+
+Exit codes: 0 ok / nothing to compare, 1 regression, 2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCHEMA = "terapool-simspeed-v1"
+
+
+def load_rows(text: str, origin: str) -> dict[tuple[str, str], dict]:
+    doc = json.loads(text)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{origin}: schema {doc.get('schema')!r}, want {SCHEMA!r}")
+    rows = {}
+    for row in doc["rows"]:
+        rows[(row["bench"], row["engine"])] = row
+    return rows
+
+
+def baseline_from_git(path: str) -> str | None:
+    """The committed version of `path` at HEAD, or None when absent."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True,
+            text=True,
+            cwd=Path(__file__).resolve().parent.parent,
+        )
+    except OSError:
+        return None
+    return out.stdout if out.returncode == 0 else None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_simspeed.json",
+                    help="freshly generated bench file (default: %(default)s)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: HEAD's committed copy of --fresh)")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="tolerated fractional sim-speed drop (default: %(default)s)")
+    args = ap.parse_args()
+
+    fresh_path = Path(args.fresh)
+    if not fresh_path.exists():
+        print(f"bench-gate: {fresh_path} missing — run `cargo bench --bench simspeed` first")
+        return 2
+    fresh = load_rows(fresh_path.read_text(), str(fresh_path))
+
+    if args.baseline is not None:
+        base_path = Path(args.baseline)
+        if not base_path.exists():
+            print(f"bench-gate: baseline {base_path} missing")
+            return 2
+        base_text = base_path.read_text()
+        origin = str(base_path)
+    else:
+        base_text = baseline_from_git(args.fresh)
+        origin = f"git:HEAD:{args.fresh}"
+        if base_text is None:
+            print(f"bench-gate: no committed {args.fresh} at HEAD yet — "
+                  "nothing to compare (commit one to arm the gate)")
+            return 0
+    base = load_rows(base_text, origin)
+
+    regressions = []
+    compared = 0
+    for key, brow in sorted(base.items()):
+        frow = fresh.get(key)
+        if frow is None:
+            print(f"bench-gate: note: row {key} in baseline only (renamed/removed?)")
+            continue
+        compared += 1
+        old, new = brow["mcycles_per_s"], frow["mcycles_per_s"]
+        drop = 0.0 if old <= 0 else (old - new) / old
+        status = "REGRESSED" if drop > args.max_regress else "ok"
+        print(f"  {key[0]:>10} / {key[1]:<12} {old:10.2f} -> {new:10.2f} Mcyc/s "
+              f"({-drop:+7.1%})  {status}")
+        if drop > args.max_regress:
+            regressions.append((key, old, new, drop))
+    for key in sorted(set(fresh) - set(base)):
+        print(f"bench-gate: note: new row {key} (no baseline yet)")
+
+    if not compared:
+        print("bench-gate: no comparable rows — treating as pass")
+        return 0
+    if regressions:
+        print(f"\nbench-gate: FAIL — {len(regressions)} row(s) regressed more than "
+              f"{args.max_regress:.0%}:")
+        for key, old, new, drop in regressions:
+            print(f"  {key[0]} / {key[1]}: {old:.2f} -> {new:.2f} Mcyc/s ({drop:.1%} slower)")
+        return 1
+    print(f"\nbench-gate: OK — {compared} row(s) within {args.max_regress:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
