@@ -1,7 +1,7 @@
 # Build-time entry points. The Rust crate is self-contained; Python (JAX)
 # runs only for `make artifacts`.
 
-.PHONY: artifacts build test bench bench-check pytest
+.PHONY: artifacts build test bench bench-check report-diff pytest
 
 # AOT-lower the JAX entries and evaluate the golden outputs into
 # artifacts/ (needs jax + numpy; see python/compile/aot.py).
@@ -25,6 +25,12 @@ bench:
 bench-check:
 	cargo bench --bench simspeed
 	python3 tools/bench_gate.py
+
+# Field-by-field diff of two RunReport documents (terapool-runreport-v1)
+# with tolerances — paper-vs-measured drift tracking. Usage:
+#   make report-diff OLD=baseline.json NEW=report.json [RTOL=0.02]
+report-diff:
+	python3 tools/report_diff.py $(OLD) $(NEW) --rtol $(or $(RTOL),0.0)
 
 pytest:
 	python3 -m pytest python/tests -q

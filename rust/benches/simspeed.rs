@@ -1,16 +1,19 @@
 //! Bench (§Perf): raw simulator speed — simulated PE-cycles per host
 //! second on the 1024-PE cluster, serial engine vs the deterministic
-//! three-phase sharded engine. The EXPERIMENTS.md §Perf targets: ≥ 20 M
+//! fully sharded engine. The EXPERIMENTS.md §Perf targets: ≥ 20 M
 //! PE-cycles/s serial on the compute trace so Fig. 14a regenerates in
-//! seconds, ≥ 3× over serial at 8 threads on the compute trace, and —
-//! now that phase 2 (bank arbitration) is sharded by destination Tile —
+//! seconds, ≥ 3× over serial at 8 threads on the compute trace, and
 //! ≥ 2.5× over serial at 8 threads on the memory-bound AXPY row (hosts
-//! with ≥ 8 cores).
+//! with ≥ 8 cores). The AXPY rows are the acceptance bar for the sharded
+//! pre-phase (owner-computes response delivery scales with the workers);
+//! the double-buffer rows pressure what remains serial of the DMA path
+//! (channel arbitration) against the worker-partitioned word movement.
 //!
 //! Besides the human-readable report, every run rewrites
 //! `BENCH_simspeed.json` at the repository root (one row per
 //! engine/thread-count configuration) so the perf trajectory is tracked
-//! across PRs; CI uploads it as an advisory artifact.
+//! across PRs; CI uploads it as an advisory artifact and
+//! `tools/bench_gate.py` compares it against the committed baseline.
 //!
 //! `cargo bench --bench simspeed`
 
@@ -19,8 +22,10 @@ mod util;
 
 use terapool::cluster::Cluster;
 use terapool::config::ClusterConfig;
+use terapool::dma::hbm_image_clear;
 use terapool::isa::Program;
 use terapool::kernels::axpy::{build, AxpyParams};
+use terapool::kernels::double_buffer::{self, DbKernel, DbParams};
 
 /// One benchmark configuration's outcome, destined for the JSON report.
 struct Row {
@@ -119,7 +124,7 @@ fn main() {
     util::report_rate("PE-cycles", pe_mcycles, "M", serial.median_ms);
     rows.push(Row::new("compute", 1, &serial, pe_mcycles, serial.median_ms));
 
-    for threads in [2usize, 4, 8] {
+    for threads in [2usize, 4, 8, 16] {
         let r = util::bench(
             &format!("compute 1024 PEs × 2k instrs ({threads} threads)"),
             5,
@@ -136,10 +141,12 @@ fn main() {
         rows.push(Row::new("compute", threads, &r, pe_mcycles, serial.median_ms));
     }
 
-    // Memory-bound traffic: AXPY (1 request per ~2 instrs). With phase 2
-    // sharded per destination Tile, the bank arbitration now scales with
-    // the workers; this row is the acceptance bar for the sharded engine
-    // (≥ 2.5× at 8 threads on an ≥ 8-core host).
+    // Memory-bound traffic: AXPY (1 request per ~2 instrs). Bank
+    // arbitration is sharded per destination Tile and — with the fully
+    // sharded pre-phase — response delivery, barrier bookkeeping and the
+    // transfer merge scale with the workers too; these rows are the
+    // acceptance bar for the sharded pre-phase (not slower at any thread
+    // count, faster at ≥ 8 threads on an ≥ 8-core host).
     let p = AxpyParams { n: 256 * 1024, alpha: 2.0 };
     let mut cycles = 0u64;
     let serial = util::bench("axpy 256Ki on 1024 PEs (serial)", 3, || {
@@ -151,7 +158,7 @@ fn main() {
     util::report_rate("PE-cycles", axpy_mcycles, "M", serial.median_ms);
     rows.push(Row::new("axpy-1024", 1, &serial, axpy_mcycles, serial.median_ms));
 
-    for threads in [2usize, 4, 8] {
+    for threads in [2usize, 4, 8, 16] {
         let r = util::bench(&format!("axpy 256Ki on 1024 PEs ({threads} threads)"), 3, || {
             let (mut cl, _) = build(&cfg, &p).into_cluster(cfg.clone());
             cl.run_parallel(100_000_000, threads).cycles
@@ -162,6 +169,39 @@ fn main() {
             serial.median_ms / r.median_ms
         );
         rows.push(Row::new("axpy-1024", threads, &r, axpy_mcycles, serial.median_ms));
+    }
+
+    // Double-buffered AXPY through the HBML: the longest pre-phase in
+    // the engine (DMA control + channel arbitration + burst movement +
+    // distributed barriers every round). The sharded engine partitions
+    // the burst word movement and the waiter bookkeeping across the
+    // workers; only channel arbitration stays serial.
+    let dbp = DbParams { kernel: DbKernel::Axpy, chunk: cfg.num_banks() * 4, rounds: 3 };
+    let mut db_cycles = 0u64;
+    let serial = util::bench("db-axpy 16Ki×3 rounds on 1024 PEs (serial)", 3, || {
+        hbm_image_clear();
+        db_cycles = double_buffer::run(&cfg, &dbp).cycles;
+        db_cycles
+    });
+    let db_mcycles = (db_cycles * 1024) as f64 / 1e6;
+    util::report_rate("PE-cycles", db_mcycles, "M", serial.median_ms);
+    rows.push(Row::new("db-axpy-1024", 1, &serial, db_mcycles, serial.median_ms));
+
+    for threads in [2usize, 4, 8, 16] {
+        let r = util::bench(
+            &format!("db-axpy 16Ki×3 rounds on 1024 PEs ({threads} threads)"),
+            3,
+            || {
+                hbm_image_clear();
+                double_buffer::run_threads(&cfg, &dbp, threads).cycles
+            },
+        );
+        util::report_rate("PE-cycles", db_mcycles, "M", r.median_ms);
+        println!(
+            "  ↳ speedup vs serial: {:.2}x ({threads} threads, {host_cores} host cores)",
+            serial.median_ms / r.median_ms
+        );
+        rows.push(Row::new("db-axpy-1024", threads, &r, db_mcycles, serial.median_ms));
     }
 
     write_json(&rows, host_cores);

@@ -14,16 +14,20 @@
 //! * [`Cluster::run`] — the serial reference engine: one host thread
 //!   steps every PE and every per-Tile memory domain in a fixed order
 //!   each cycle.
-//! * [`Cluster::run_parallel`] — the deterministic **three-phase sharded
-//!   engine** (see DESIGN.md): a serial pre-phase (responses, barriers,
-//!   DMA, cross-shard transfer merge) on the coordinator, then
-//!   tile-parallel PE issue with destination bucketing (phase 1) and
-//!   per-shard arbitration + bank access (phase 2) on a pool of host
-//!   worker threads, each owning a contiguous Tile range (Tile →
-//!   SubGroup → Group, the paper's physical hierarchy) — its PEs *and*
-//!   its Tiles' memory domains and L1 slices. Results, cycle counts and
-//!   statistics are bit-identical to the serial engine for any thread
-//!   count (`rust/tests/parallel_equiv.rs`).
+//! * [`Cluster::run_parallel`] — the deterministic **fully sharded
+//!   engine** (see DESIGN.md): response/wake delivery, barrier waiting
+//!   lists, DMA waiters and the cross-shard transfer merge all live in
+//!   the workers (owner-computes, per-(source, destination) mailboxes,
+//!   a binary summary-reduction tree), each worker owning a contiguous
+//!   Tile range (Tile → SubGroup → Group, the paper's physical
+//!   hierarchy) — its PEs *and* its Tiles' memory domains and L1
+//!   slices. The coordinator's per-cycle work is O(threads): global
+//!   barrier counters, release scheduling, and the DMA
+//!   channel-arbitration decisions (whose functional word movement is
+//!   again partitioned across the workers by destination Tile).
+//!   Results, cycle counts and statistics are bit-identical to the
+//!   serial engine for any thread count
+//!   (`rust/tests/parallel_equiv.rs`, 1–16 threads).
 
 use std::collections::HashMap;
 
@@ -128,13 +132,18 @@ impl Cluster {
         self
     }
 
-    /// Barrier-arrival bookkeeping for an acked atomic (shared by both
-    /// engines; the per-PE part of a response lives in
-    /// [`Pe::apply_response`]).
+    /// Barrier-arrival bookkeeping for an acked atomic (serial engine;
+    /// the per-PE part of a response lives in [`Pe::apply_response`]).
+    /// The sharded engine splits the same bookkeeping in two halves that
+    /// land on the same simulated cycles: arrival *counts* are tallied at
+    /// drain time by the destination domain's worker (via the same
+    /// [`Response::barrier_id`] classifier) and summed on the
+    /// coordinator, while the *waiting list* is registered by the
+    /// PE-owning worker when it applies the response.
     fn bookkeep_barrier(barriers: &mut HashMap<u16, BarrierSlot>, r: &Response) {
-        if matches!(r.kind, ReqKind::Amo) && r.tag != 0 {
+        if let Some(id) = r.barrier_id() {
             // Barrier arrival atomic acked → count it.
-            let slot = barriers.entry((r.tag - 1) as u16).or_default();
+            let slot = barriers.entry(id).or_default();
             slot.arrived += 1;
             slot.waiting.push(r.core);
         }
@@ -142,23 +151,24 @@ impl Cluster {
 
     /// Barrier release check (step 2 of the cycle): all arrived →
     /// broadcast wake after the aggregation/WFI latency. Shared by both
-    /// engines; `wake` is a direct PE wake in the serial engine and a
-    /// wake-buffer push in the parallel coordinator.
+    /// engines: `release` receives the releasing barrier id and its
+    /// waiting list — the serial engine wakes the listed PEs directly,
+    /// the sharded coordinator broadcasts the id through the control
+    /// block (its waiting lists live with the PE-owning workers, so the
+    /// list here is empty).
     fn release_barriers(
         barriers: &mut HashMap<u16, BarrierSlot>,
         now: u64,
         expected: u32,
         wakeup: u64,
-        mut wake: impl FnMut(u32),
+        mut release: impl FnMut(u16, &[u32]),
     ) {
-        for slot in barriers.values_mut() {
+        for (&id, slot) in barriers.iter_mut() {
             if slot.arrived == expected && slot.release_at.is_none() {
                 slot.release_at = Some(now + wakeup);
             }
             if slot.release_at == Some(now) {
-                for &pe in &slot.waiting {
-                    wake(pe);
-                }
+                release(id, &slot.waiting);
                 slot.waiting.clear();
                 slot.arrived = 0;
                 slot.release_at = None;
@@ -166,11 +176,15 @@ impl Cluster {
         }
     }
 
-    /// DMA/HBM progress + DmaWait-parked wake-ups (step 3 of the cycle),
-    /// shared by both engines like [`Cluster::release_barriers`]. The L1
-    /// goes in by shared reference: the DMA's functional word movement
-    /// uses the per-Tile slice locks, which are free here (the engines
-    /// only run DMA while no memory domain is being stepped).
+    /// DMA/HBM progress + DmaWait-parked wake-ups (step 3 of the cycle)
+    /// — the serial engine's inline form. The sharded engine runs the
+    /// same timing core ([`crate::dma::DmaSubsystem::step_events`]) on
+    /// its coordinator but partitions the functional word movement
+    /// across the workers by destination Tile and shards the waiter
+    /// lists per worker (woken the same cycle via the control block's
+    /// retirement broadcast). The L1 goes in by shared reference: the
+    /// word movement uses the per-Tile slice locks, which are free here
+    /// (no memory domain is being stepped during DMA progress).
     fn dma_progress(
         dma: &mut Option<DmaSubsystem>,
         dma_waiters: &mut Vec<(u32, u16)>,
@@ -191,13 +205,14 @@ impl Cluster {
         }
     }
 
-    /// Route one DMA control op into the engine-shared DMA state
-    /// (shared by both engines like [`Cluster::dma_progress`]):
-    /// `DmaStart` programs the frontend stamped with the op's issue
-    /// cycle; `DmaWait` wakes the PE when the descriptor already retired
-    /// (`wake` is an immediate PE wake in the serial engine, a
-    /// wake-buffer push in the parallel coordinator — observationally
-    /// identical) or parks it among the waiters otherwise.
+    /// Route one DMA control op (serial engine): `DmaStart` programs the
+    /// frontend stamped with the op's issue cycle; `DmaWait` wakes the PE
+    /// in-cycle when the descriptor already retired or parks it among the
+    /// waiters otherwise. The sharded engine mirrors both halves exactly:
+    /// workers resolve `DmaWait` against their descriptor done-mirrors
+    /// (same state, same point in the cycle) and park waiters locally,
+    /// while `DmaStart` travels up the summary tree and is applied by the
+    /// coordinator with the same issue-cycle stamp.
     fn dma_control(
         dma: &mut Option<DmaSubsystem>,
         dma_waiters: &mut Vec<(u32, u16)>,
@@ -246,7 +261,11 @@ impl Cluster {
             now,
             expected,
             self.cfg.barrier_wakeup as u64,
-            |pe| pes[pe as usize].wake(),
+            |_id, waiting| {
+                for &pe in waiting {
+                    pes[pe as usize].wake();
+                }
+            },
         );
 
         // 3. DMA / HBM progress; wake DmaWait-parked PEs.
@@ -346,8 +365,8 @@ impl Cluster {
         }
     }
 
-    /// Run to completion on the deterministic three-phase sharded engine
-    /// with `threads` host worker threads (clamped to `[1, num_tiles]`).
+    /// Run to completion on the deterministic fully sharded engine with
+    /// `threads` host worker threads (clamped to `[1, num_tiles]`).
     /// Cycle counts, memory image and statistics are bit-identical to
     /// [`Cluster::run`] for every thread count; see the module docs and
     /// DESIGN.md for the determinism argument. Panics on a timeout, like
@@ -363,30 +382,31 @@ impl Cluster {
         threads: usize,
     ) -> crate::errors::Result<RunStats> {
         use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::{Mutex, RwLock};
 
-        use crate::parallel::{worker_loop, PoolShutdown, SpinBarrier, WorkerChannel, WorkerCtx};
+        use crate::dma::{hbm_image_read, hbm_image_write, DmaEvent};
+        use crate::parallel::{
+            worker_loop, ControlBlock, CycleSummary, DmaJob, PoolShutdown, SpinBarrier,
+            WorkerChannel, WorkerCtx,
+        };
 
         let num_tiles = self.cfg.num_tiles();
         let ppt = self.cfg.hierarchy.pes_per_tile;
         let workers = threads.clamp(1, num_tiles);
         // Contiguous Tile ranges per worker: a worker owns a Tile's PEs
         // *and* its memory domain + L1 slice, so phase-1 buckets never
-        // cross workers, and concatenating per-worker outputs in worker
-        // order reproduces the serial engine's Tile-ascending order.
+        // cross workers, and draining per-(source, destination) mailboxes
+        // in ascending source order reproduces the serial engine's
+        // Tile-ascending order.
         let tiles_per_worker = num_tiles.div_ceil(workers);
         let pes_per_worker = tiles_per_worker * ppt;
         let expected = self.pes.len() as u32;
         let wakeup = self.cfg.barrier_wakeup as u64;
+        let has_dma = self.dma.is_some();
 
         let channels: Vec<WorkerChannel> = (0..workers)
-            .map(|w| WorkerChannel::new((w * pes_per_worker) as u32))
+            .map(|w| WorkerChannel::new((w * pes_per_worker) as u32, workers))
             .collect();
-        for (w, ch) in channels.iter().enumerate() {
-            let lo = (w * pes_per_worker).min(self.pes.len());
-            let hi = ((w + 1) * pes_per_worker).min(self.pes.len());
-            let busy = self.pes[lo..hi].iter().any(|p| !p.done());
-            ch.busy.store(busy, Ordering::SeqCst);
-        }
         let barrier = SpinBarrier::new(workers + 1);
         let stop = AtomicBool::new(false);
         let failed = AtomicBool::new(false);
@@ -395,8 +415,9 @@ impl Cluster {
         // Split the cluster into disjoint field borrows: the PE array is
         // handed to the workers for the whole run; the memory system is
         // shared (workers lock their own Tiles during their phase, the
-        // coordinator between phases); DMA and barrier state stay with
-        // the coordinator (this thread).
+        // coordinator never touches it); the DMA timing model and the
+        // global barrier counters stay with the coordinator (this
+        // thread), everything else about barriers/DMA is sharded.
         let Cluster {
             cfg: _,
             l1,
@@ -408,31 +429,76 @@ impl Cluster {
             cycle,
         } = self;
 
+        let init_busy = pes.iter().any(|p| !p.done());
+
         // Carry-over from earlier serial stepping on the same cluster:
-        // requests alive in the memory system, plus already-drained
-        // responses and unmerged transfer events.
+        // requests alive in the memory system, already-drained responses,
+        // unmerged transfer events, parked PEs and retired descriptors —
+        // all seeded into the first cycle's control block for the owning
+        // workers to pick up.
         let carry_inflight = icn.inflight() as i64;
-        let pending_resp: Vec<Response> = icn.take_pending_responses();
-        let pending_xfer: Vec<XferEvent> = icn.take_pending_xfers();
+        let mut seed_events = 0u64;
+        let mut cb0 = ControlBlock {
+            seed_resp: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            seed_xfer: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            ..ControlBlock::default()
+        };
+        for r in icn.take_pending_responses() {
+            // Arrival counts land here (the cycle the response is
+            // delivered — exactly when the serial engine would bookkeep
+            // it); the waiting-list half is registered by the owning
+            // worker when it applies the seeded response.
+            if let Some(id) = r.barrier_id() {
+                barriers.entry(id).or_default().arrived += 1;
+            }
+            seed_events += 1;
+            cb0.seed_resp[r.core as usize / pes_per_worker]
+                .get_mut()
+                .unwrap()
+                .push(r);
+        }
+        for ev in icn.take_pending_xfers() {
+            seed_events += 1;
+            cb0.seed_xfer[ev.dst_tile as usize / tiles_per_worker]
+                .get_mut()
+                .unwrap()
+                .push(ev);
+        }
+        for (&id, slot) in barriers.iter_mut() {
+            for pe in slot.waiting.drain(..) {
+                cb0.seed_waiting.push((id, pe));
+            }
+        }
+        cb0.seed_dma_waiters = std::mem::take(dma_waiters);
+        if let Some(d) = dma.as_ref() {
+            // Descriptors already retired seed the workers' done-mirrors.
+            cb0.dma_done = d.done_ids();
+        }
+        let ctrl = RwLock::new(cb0);
 
         let l1_ref: &L1Memory = l1;
         let icn_ref: &Interconnect = icn;
 
         std::thread::scope(|s| {
             let mut rest: &mut [Pe] = pes;
-            for (w, ch) in channels.iter().enumerate() {
+            for w in 0..workers {
                 let take = pes_per_worker.min(rest.len());
                 // mem::take detaches the slice from `rest` so the chunk
                 // borrows 'scope-long, not loop-iteration-long.
                 let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
                 rest = tail;
                 let ctx = WorkerCtx {
-                    ch,
+                    idx: w,
+                    channels: &channels,
+                    ctrl: &ctrl,
                     icn: icn_ref,
                     l1: l1_ref,
                     tile_lo: (w * tiles_per_worker).min(num_tiles),
                     tile_hi: ((w + 1) * tiles_per_worker).min(num_tiles),
                     pes_per_tile: ppt,
+                    tiles_per_worker,
+                    pes_per_worker,
+                    has_dma,
                     now: &now_shared,
                 };
                 let barrier = &barrier;
@@ -444,101 +510,151 @@ impl Cluster {
             // this closure — by `break` or by unwinding from a panic.
             let _shutdown = PoolShutdown::new(&stop, &barrier);
 
-            let mut resp_buf: Vec<Vec<Response>> = (0..workers).map(|_| Vec::new()).collect();
-            let mut wake_buf: Vec<Vec<u32>> = (0..workers).map(|_| Vec::new()).collect();
-            let mut xfer_buf: Vec<Vec<XferEvent>> = (0..workers).map(|_| Vec::new()).collect();
-            let mut drained: Vec<Response> = pending_resp;
-            let mut xfer_all: Vec<XferEvent> = pending_xfer;
-            let mut actions: Vec<(u32, Action)> = Vec::new();
+            // Root of the summary tree; the first check runs on the
+            // pre-spawn state (workers have produced nothing yet).
+            let mut root = CycleSummary {
+                busy: init_busy,
+                events: seed_events,
+                ..CycleSummary::default()
+            };
+            let mut first = true;
+            let mut seeds_cleared = false;
+            // Recycled staging buffer for outbound burst words.
+            let mut out_words: Vec<f32> = Vec::new();
 
             loop {
                 let now = *cycle;
 
-                // --- serial pre-phase ---------------------------------
-                // (a) Responses the workers drained during the previous
-                // cycle, already concatenating to the global Tile order;
-                // barrier bookkeeping happens here, the PE write-backs in
-                // the owners' phase 1.
-                for ch in &channels {
-                    let mut out = ch.resp_out.lock().unwrap();
-                    drained.append(&mut out);
+                // --- serial pre-phase: O(threads) + DMA decisions -----
+                // (a) Collect the tree-merged cycle summary (a single
+                // root swap — the workers did the merging).
+                if !first {
+                    let mut slot = channels[0].summary.lock().unwrap();
+                    std::mem::swap(&mut *slot, &mut root);
                 }
-                for r in &drained {
-                    Self::bookkeep_barrier(barriers, r);
-                    resp_buf[r.core as usize / pes_per_worker].push(*r);
-                }
-                drained.clear();
 
-                // (b) Barrier releases.
-                Self::release_barriers(barriers, now, expected, wakeup, |pe| {
-                    wake_buf[pe as usize / pes_per_worker].push(pe)
-                });
-
-                // (c) DMA control ops issued during the previous cycle,
-                // in global PE order (worker order = PE order). `start`
-                // is stamped with the issue cycle, so frontend occupancy
-                // chains exactly as in the serial engine.
+                // (b) DmaStart ops issued during the previous cycle, in
+                // global PE order (the summary tree concatenated them in
+                // worker order). `start` is stamped with the issue cycle,
+                // so frontend occupancy chains exactly as in the serial
+                // engine — which also programmed the frontend *during*
+                // cycle `now - 1`, which is why this happens before the
+                // termination check: a timeout must leave the frontend in
+                // the serial engine's state. DmaWait never crosses to the
+                // coordinator — the workers resolve it against their
+                // done-mirrors.
                 let issued_at = now.saturating_sub(1);
-                for ch in &channels {
-                    {
-                        let mut outbox = ch.outbox.lock().unwrap();
-                        std::mem::swap(&mut *outbox, &mut actions);
+                for (_pe, op) in root.dma_ops.drain(..) {
+                    match op {
+                        Action::DmaStart { id } => dma
+                            .as_mut()
+                            .expect("trace uses DMA but cluster built without with_dma()")
+                            .start(id, issued_at),
+                        _ => unreachable!("only DmaStart crosses to the coordinator"),
                     }
-                    for &(pe, action) in &actions {
-                        Self::dma_control(dma, dma_waiters, issued_at, pe, action, |p| {
-                            wake_buf[p as usize / pes_per_worker].push(p)
-                        });
-                    }
-                    actions.clear();
                 }
 
-                // (d) DMA/HBM progress.
-                Self::dma_progress(dma, dma_waiters, now, l1_ref, |pe| {
-                    wake_buf[pe as usize / pes_per_worker].push(pe)
-                });
-
-                // (e) Cross-shard transfer merge: per-worker winner lists
-                // concatenate to the global Tile-ascending order; stable
-                // bucketing by destination preserves it per worker.
-                for ch in &channels {
-                    let mut out = ch.xfer_out.lock().unwrap();
-                    xfer_all.append(&mut out);
-                }
-
+                // (c) Termination — decided *before* the rest of the
+                // pre-phase mutates anything, exactly like the serial
+                // loop's `while !done() && cycle < max` guard. On a
+                // timeout, the summary's unconsumed arrival tallies
+                // belong to the never-executed cycle `now` and are
+                // dropped — their responses sit undelivered in the
+                // mailboxes and are restored to the interconnect's
+                // pending queues after the scope, just as the serial
+                // engine would still hold them for redelivery. On the
+                // `done` path nothing is dropped: drained arrivals imply
+                // `events > 0`.
                 let inflight: i64 = carry_inflight
                     + channels
                         .iter()
                         .map(|c| c.inflight.load(Ordering::SeqCst))
                         .sum::<i64>();
-                let all_idle = channels.iter().all(|c| !c.busy.load(Ordering::SeqCst));
-                let done = all_idle
+                let done = !root.busy
                     && inflight == 0
-                    && xfer_all.is_empty()
-                    && resp_buf.iter().all(|b| b.is_empty())
-                    && wake_buf.iter().all(|b| b.is_empty())
+                    && root.events == 0
                     && dma.as_ref().map(|d| d.idle()).unwrap_or(true);
                 if done || now >= max_cycles {
                     break; // _shutdown releases the workers
                 }
 
-                for ev in xfer_all.drain(..) {
-                    xfer_buf[ev.dst_tile as usize / tiles_per_worker].push(ev);
+                // (d) Barrier arrivals the workers counted at drain time
+                // last cycle — delivered to the PEs this cycle, so the
+                // global counters advance exactly when the serial
+                // engine's bookkeeping would.
+                for (id, n) in root.arrivals.iter() {
+                    barriers.entry(id).or_default().arrived += n;
                 }
+                root.arrivals.clear();
 
-                // (f) Hand this cycle's inputs to the workers.
-                for (w, ch) in channels.iter().enumerate() {
-                    if !resp_buf[w].is_empty() || !wake_buf[w].is_empty() {
-                        let mut inbox = ch.inbox.lock().unwrap();
-                        inbox.responses.append(&mut resp_buf[w]);
-                        inbox.wakes.append(&mut wake_buf[w]);
-                    }
-                    if !xfer_buf[w].is_empty() {
-                        let mut xin = ch.xfer_in.lock().unwrap();
-                        xin.append(&mut xfer_buf[w]);
-                    }
+                // (e) Publish this cycle's control block: barrier
+                // releases, DMA retirements and inbound data-movement
+                // jobs.
+                let mut cbw = ctrl.write().unwrap();
+                let cb = &mut *cbw;
+                if !first {
+                    // Last cycle's retirement broadcast was consumed at
+                    // the workers' cycle top (first cycle: the broadcast
+                    // carries the pre-retired-descriptor seed instead).
+                    cb.dma_done.clear();
                 }
+                cb.dma_jobs.clear();
+                cb.releases.clear();
+                if let Some(d) = dma.as_mut() {
+                    // DMA timing step: channel arbitration and burst
+                    // issue stay serial. Inbound bursts become jobs whose
+                    // L1-side writes the workers partition across their
+                    // Tile ranges this cycle (same cycle the serial
+                    // engine moves the words). Outbound bursts move
+                    // inline right here — L1 reads (slice locks are free:
+                    // the workers are parked) and image writes at the
+                    // exact serial point in burst order, so the image is
+                    // bit-identical even when an inbound burst reads
+                    // bytes an outbound burst wrote the same cycle.
+                    d.step_events(now, |ev| match ev {
+                        DmaEvent::Issue { l1_word, words, mem_byte, to_l1 } => {
+                            if to_l1 {
+                                let mut data = Vec::with_capacity(words as usize);
+                                data.extend(
+                                    (0..words)
+                                        .map(|w| hbm_image_read(mem_byte + w as u64 * 4)),
+                                );
+                                cb.dma_jobs.push(DmaJob { l1_word, data });
+                            } else {
+                                // The serial engine moves every burst at
+                                // its event, in burst order — so an
+                                // inbound burst issued *earlier this
+                                // cycle* whose L1 run overlaps must land
+                                // before this read. Flushing the job here
+                                // is idempotent with the workers'
+                                // cycle-top re-apply (same words, and
+                                // nothing reads L1 in between).
+                                let (b0, b1) =
+                                    (l1_word as u64, l1_word as u64 + words as u64);
+                                for job in cb.dma_jobs.iter() {
+                                    let a0 = job.l1_word as u64;
+                                    let a1 = a0 + job.data.len() as u64;
+                                    if a0 < b1 && b0 < a1 {
+                                        l1_ref.write_run_shared(job.l1_word, &job.data);
+                                    }
+                                }
+                                l1_ref.read_run_shared(l1_word, words as usize, &mut out_words);
+                                for (w, &v) in out_words.iter().enumerate() {
+                                    hbm_image_write(mem_byte + w as u64 * 4, v);
+                                }
+                            }
+                        }
+                        DmaEvent::Retired { id } => cb.dma_done.push(id),
+                    });
+                }
+                Self::release_barriers(barriers, now, expected, wakeup, |id, _waiting| {
+                    cb.releases.push(id);
+                });
+                first = false;
+                drop(cbw);
 
-                // --- phases 1+2: parallel issue + sharded memory step -
+                // --- the sharded cycle: cycle-top delivery + phase 1 +
+                // phase 2 + summary reduction, all inside the workers ---
                 now_shared.store(now, Ordering::SeqCst);
                 barrier.wait();
                 barrier.wait();
@@ -547,8 +663,65 @@ impl Cluster {
                     panic!("parallel engine: a worker thread panicked");
                 }
                 *cycle += 1;
+
+                // The parked-PE seeds were *copied* (not drained) by
+                // their owning workers during the phase that just
+                // completed: clear them now — not in a later pre-phase,
+                // which a termination break could skip, leaving the
+                // post-scope restore to double-count waiters the workers
+                // already own (and re-add ones already woken).
+                if !seeds_cleared {
+                    seeds_cleared = true;
+                    let mut cbw = ctrl.write().unwrap();
+                    cbw.seed_waiting.clear();
+                    cbw.seed_dma_waiters.clear();
+                }
             }
         });
+
+        // Collect the workers' parked state back into the cluster so
+        // mixed-engine continuation (or error reporting) sees consistent
+        // barrier/DMA bookkeeping.
+        for ch in &channels {
+            let mut parked = ch.parked.lock().unwrap();
+            for (id, pe) in parked.barrier_waiting.drain(..) {
+                barriers.entry(id).or_default().waiting.push(pe);
+            }
+            dma_waiters.append(&mut parked.dma_waiters);
+        }
+        // Undelivered events and unconsumed seeds survive only a timeout
+        // exit (on the `done` path everything was consumed: parked PEs
+        // imply `busy`, published events imply `events > 0`). Restore
+        // them — parked-PE halves into the barrier/DMA bookkeeping,
+        // response/transfer streams into the interconnect's pending
+        // queues — so continuation redelivers them exactly as the serial
+        // engine, which still holds such events at its own timeout,
+        // would. Per-(source, destination) stream order is preserved,
+        // the only order redelivery observes.
+        let cb_rest = ctrl.into_inner().unwrap();
+        for (id, pe) in cb_rest.seed_waiting {
+            barriers.entry(id).or_default().waiting.push(pe);
+        }
+        dma_waiters.extend(cb_rest.seed_dma_waiters);
+        let mut rest_resp: Vec<Response> = Vec::new();
+        let mut rest_xfer: Vec<XferEvent> = Vec::new();
+        for cell in &cb_rest.seed_resp {
+            rest_resp.append(&mut cell.lock().unwrap());
+        }
+        for cell in &cb_rest.seed_xfer {
+            rest_xfer.append(&mut cell.lock().unwrap());
+        }
+        for parity in 0..2 {
+            for dst in 0..workers {
+                for src in &channels {
+                    src.resp_to(parity, dst).consume(|r| rest_resp.push(r));
+                    src.xfer_to(parity, dst).consume(|ev| rest_xfer.push(ev));
+                }
+            }
+        }
+        if !rest_resp.is_empty() || !rest_xfer.is_empty() {
+            icn.restore_pending(rest_resp, rest_xfer);
+        }
 
         let inflight: i64 = carry_inflight
             + channels
@@ -632,10 +805,12 @@ pub(crate) enum RoutedAction {
     /// A memory request for the issuing Tile's domain (see
     /// [`Topology::make_request`] for the `master_port` contract).
     Mem { req: Request, master_port: Option<u8> },
-    /// DMA control (`Action::DmaStart`/`DmaWait`), handled by whoever
-    /// owns the DMA engine — the serial issue loop via
-    /// [`Cluster::dma_control`] directly, the parallel workers via the
-    /// coordinator outbox (same helper, one cycle-top later).
+    /// DMA control (`Action::DmaStart`/`DmaWait`): the serial issue loop
+    /// routes both through [`Cluster::dma_control`] directly; the sharded
+    /// engine's workers resolve `DmaWait` locally against their
+    /// descriptor done-mirrors (bit-identical timing) and send `DmaStart`
+    /// up the summary tree to the coordinator, which applies it with the
+    /// same issue-cycle stamp.
     Dma(Action),
 }
 

@@ -61,6 +61,24 @@ enum DescState {
     Done { at: u64 },
 }
 
+/// A timing decision of one DMA cycle, reported by
+/// [`DmaSubsystem::step_events`] for the engine to act on. Splitting the
+/// *decisions* (channel arbitration, burst issue, completions — serial
+/// by nature) from the *functional word movement* (embarrassingly
+/// parallel per destination Tile) is what lets the sharded engine keep
+/// only the former on its coordinator.
+#[derive(Debug, Clone, Copy)]
+pub enum DmaEvent {
+    /// A burst left its backend this cycle. The functional word movement
+    /// is the caller's job: the serial engine moves the words inline
+    /// ([`DmaSubsystem::step`]), the sharded engine partitions the run
+    /// across its workers by destination Tile.
+    Issue { l1_word: u32, words: u32, mem_byte: u64, to_l1: bool },
+    /// A descriptor's last burst completed: `DmaWait`-parked PEs may
+    /// wake from this cycle on.
+    Retired { id: u16 },
+}
+
 struct Backend {
     port: AxiPort,
     queue: VecDeque<Burst>,
@@ -177,14 +195,14 @@ impl DmaSubsystem {
             .all(|(_, s)| matches!(s, DescState::Registered | DescState::Done { .. }))
     }
 
-    /// Advance one cycle: retire HBM completions into L1 and issue new
-    /// bursts from the backend queues.
-    ///
-    /// Takes `&L1Memory` (word access through the per-Tile slice locks):
-    /// the parallel engine's coordinator runs DMA progress while the
-    /// worker threads hold the shared L1 view, and `&mut L1Memory`
-    /// call sites coerce.
-    pub fn step(&mut self, now: u64, l1: &L1Memory) {
+    /// Advance the timing model one cycle: retire HBM completions and
+    /// issue new bursts from the backend queues, reporting every decision
+    /// through `sink` ([`DmaEvent`]). This is the **serial core** of a DMA
+    /// cycle — frontend state, backend arbitration, AXI occupancy and the
+    /// HBM channel model; the functional word movement of issued bursts is
+    /// delegated to the caller, at the exact point in the cycle the serial
+    /// engine has always moved data.
+    pub fn step_events(&mut self, now: u64, mut sink: impl FnMut(DmaEvent)) {
         // 1. Completions coming back from the memory controller.
         let mut done_ids: Vec<u64> = Vec::new();
         self.hbm.take_completed(now, |bid| done_ids.push(bid));
@@ -193,13 +211,11 @@ impl DmaSubsystem {
             self.free_inflight.push(bid as u32);
             self.backends[b.backend as usize].port.retire();
             self.completed_bursts += 1;
-            if let DescState::Running { remaining, ready_at } =
-                &mut self.descs[b.desc as usize].1
-            {
+            if let DescState::Running { remaining, .. } = &mut self.descs[b.desc as usize].1 {
                 *remaining -= 1;
                 if *remaining == 0 {
-                    let _ = ready_at;
                     self.descs[b.desc as usize].1 = DescState::Done { at: now };
+                    sink(DmaEvent::Retired { id: b.desc });
                 }
             }
         }
@@ -224,25 +240,12 @@ impl DmaSubsystem {
             let b = self.backends[be_idx].queue.pop_front().unwrap();
             let bytes = b.words as u64 * 4;
             self.backends[be_idx].port.issue(now, bytes);
-            // Functional data movement happens at issue (outbound) /
-            // completion (inbound); we move it here in one shot — the
-            // timing of visibility is guarded by DmaWait in the traces.
-            // Whole-burst staging through `word_buf` lets the L1 side use
-            // run-grouped Tile locking instead of per-word locks.
-            let mut words = std::mem::take(&mut self.word_buf);
-            if b.to_l1 {
-                words.clear();
-                words.extend(
-                    (0..b.words).map(|w| hbm_image_read(b.mem_byte + w as u64 * 4)),
-                );
-                l1.write_run_shared(b.l1_word, &words);
-            } else {
-                l1.read_run_shared(b.l1_word, b.words as usize, &mut words);
-                for (w, &v) in words.iter().enumerate() {
-                    hbm_image_write(b.mem_byte + w as u64 * 4, v);
-                }
-            }
-            self.word_buf = words;
+            sink(DmaEvent::Issue {
+                l1_word: b.l1_word,
+                words: b.words,
+                mem_byte: b.mem_byte,
+                to_l1: b.to_l1,
+            });
             let bid = match self.free_inflight.pop() {
                 Some(i) => {
                     self.inflight[i as usize] = b;
@@ -256,6 +259,46 @@ impl DmaSubsystem {
             self.hbm
                 .submit(now + self.lat.backend_to_mc() as u64, b.mem_byte, bytes, bid);
         }
+    }
+
+    /// Advance one cycle with the functional data movement inline — the
+    /// serial reference engine's DMA step (and the DMA-only harnesses').
+    ///
+    /// Takes `&L1Memory` (word access through the per-Tile slice locks),
+    /// and `&mut L1Memory` call sites coerce. Data moves at burst issue
+    /// (both directions) in one shot — the timing of visibility is
+    /// guarded by DmaWait in the traces. Whole-burst staging through
+    /// `word_buf` lets the L1 side use run-grouped Tile locking instead
+    /// of per-word locks.
+    pub fn step(&mut self, now: u64, l1: &L1Memory) {
+        let mut words = std::mem::take(&mut self.word_buf);
+        self.step_events(now, |ev| {
+            if let DmaEvent::Issue { l1_word, words: n, mem_byte, to_l1 } = ev {
+                if to_l1 {
+                    words.clear();
+                    words.extend((0..n).map(|w| hbm_image_read(mem_byte + w as u64 * 4)));
+                    l1.write_run_shared(l1_word, &words);
+                } else {
+                    l1.read_run_shared(l1_word, n as usize, &mut words);
+                    for (w, &v) in words.iter().enumerate() {
+                        hbm_image_write(mem_byte + w as u64 * 4, v);
+                    }
+                }
+            }
+        });
+        self.word_buf = words;
+    }
+
+    /// Ids of descriptors that already retired — seeds the sharded
+    /// engine's per-worker done-mirrors when a run starts on a cluster
+    /// that was stepped before (mixed-engine stepping).
+    pub fn done_ids(&self) -> Vec<u16> {
+        self.descs
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, s))| matches!(s, DescState::Done { .. }))
+            .map(|(i, _)| i as u16)
+            .collect()
     }
 
     /// Bytes moved so far (both directions).

@@ -13,11 +13,13 @@
 //!   ([`interconnect`]), the banked shared-L1 SPM with the paper's hybrid
 //!   address map, stored as per-Tile slices ([`memory`]), and the cluster
 //!   composition with fork-join barriers ([`cluster`]) — runnable on a
-//!   serial reference engine or the deterministic three-phase sharded
-//!   engine ([`parallel`], `Cluster::run_parallel`), which distributes PE
-//!   stepping *and* per-Tile bank arbitration across host threads by the
-//!   paper's Tile → SubGroup → Group hierarchy while staying bit-identical
-//!   to the serial engine;
+//!   serial reference engine or the deterministic fully sharded engine
+//!   ([`parallel`], `Cluster::run_parallel`), which distributes PE
+//!   stepping, per-Tile bank arbitration, response/wake delivery,
+//!   barrier/DMA bookkeeping and the cross-shard transfer merge across
+//!   host threads by the paper's Tile → SubGroup → Group hierarchy
+//!   (O(threads) coordinator) while staying bit-identical to the serial
+//!   engine;
 //! * the paper's **analytical AMAT model** of hierarchical crossbars,
 //!   Eqs. (3)–(6) ([`amat`]) — regenerates Table 4 and Fig. 8b;
 //! * the **High Bandwidth Memory Link**: a cycle-level HBM2E channel model

@@ -299,6 +299,55 @@ impl L1Memory {
         }
     }
 
+    /// Words to skip past the remainder of a *foreign* Tile's bank run
+    /// starting at `word` (which maps to `at`): in the interleaved region
+    /// consecutive words sweep consecutive banks, so the rest of the
+    /// current Tile's bank window — including the wrap back to bank 0,
+    /// which is itself a Tile boundary — can be stepped over in one jump.
+    /// In the sequential region (not a DMA target, kept correct anyway)
+    /// advance a single word.
+    #[inline]
+    fn foreign_run_skip(&self, word: u32, at: BankAddr) -> usize {
+        if (word as usize) < self.map.seq_words_total {
+            1
+        } else {
+            self.banks_per_tile - (at.bank as usize % self.banks_per_tile)
+        }
+    }
+
+    /// Range-restricted variant of [`L1Memory::write_run_shared`] for the
+    /// sharded engine's workers: writes only the words of the run that
+    /// land in Tiles `[tile_lo, tile_hi)`. Every worker applies an
+    /// inbound DMA burst's sub-runs to the slices it owns — no two
+    /// workers ever touch the same slice, so the per-Tile locks stay
+    /// uncontended and the union over all workers' ranges equals the
+    /// serial engine's whole-run write. Foreign Tiles' runs are skipped
+    /// in one jump each, so a worker's pass costs O(own words +
+    /// number of foreign runs), not O(burst length).
+    pub fn write_run_range(&self, base: u32, data: &[f32], tile_lo: usize, tile_hi: usize) {
+        let mut i = 0;
+        while i < data.len() {
+            let at = self.map.map(base + i as u32);
+            let (t, b) = self.locate(at);
+            if t < tile_lo || t >= tile_hi {
+                i += self.foreign_run_skip(base + i as u32, at);
+                continue;
+            }
+            let mut store = self.tiles[t].lock().unwrap();
+            store.write(b, at.row as usize, data[i]);
+            i += 1;
+            while i < data.len() {
+                let at = self.map.map(base + i as u32);
+                let (t2, b2) = self.locate(at);
+                if t2 != t {
+                    break;
+                }
+                store.write(b2, at.row as usize, data[i]);
+                i += 1;
+            }
+        }
+    }
+
     /// Bulk host-side copy-in/out, used by test harnesses and the DMA
     /// backends' functional data movement.
     pub fn write_slice(&mut self, base: u32, data: &[f32]) {
@@ -406,6 +455,43 @@ mod tests {
             l1.tile_store(t).lock().unwrap().read(b, at.row as usize),
             3.25
         );
+    }
+
+    /// The range-restricted run writer must tile the whole-run writer:
+    /// applying a run through every worker's disjoint Tile range (with
+    /// foreign runs skipped in single jumps) reproduces
+    /// `write_run_shared` exactly — at offsets that start mid-Tile-run
+    /// and lengths that wrap the bank space multiple times.
+    #[test]
+    fn run_range_partitions_reproduce_whole_run() {
+        let cfg = ClusterConfig::tiny();
+        let num_tiles = cfg.num_tiles();
+        let nb = cfg.num_banks() as u32;
+        let interleaved = L1Memory::new(&cfg).map.interleaved_base();
+        // Misaligned starts: mid-Tile-run (+5) and near the bank wrap
+        // (+nb-3), with lengths spanning several wraps.
+        for (off, len) in [(5u32, 300usize), (nb - 3, 2 * nb as usize + 17), (0, 64)] {
+            let base = interleaved + 7 * nb + off;
+            let data: Vec<f32> = (0..len).map(|i| i as f32 * 0.25 + 1.0).collect();
+
+            let whole = L1Memory::new(&cfg);
+            whole.write_run_shared(base, &data);
+
+            for workers in [1usize, 2, 3] {
+                let split = L1Memory::new(&cfg);
+                let tpw = num_tiles.div_ceil(workers);
+                for w in 0..workers {
+                    let (lo, hi) =
+                        ((w * tpw).min(num_tiles), ((w + 1) * tpw).min(num_tiles));
+                    split.write_run_range(base, &data, lo, hi);
+                }
+                assert_eq!(
+                    split.read_slice(base, data.len()),
+                    whole.read_slice(base, data.len()),
+                    "{workers}-way split write diverges (off {off}, len {len})"
+                );
+            }
+        }
     }
 
     /// Property: the hybrid map is a bijection over the full address

@@ -1,52 +1,71 @@
-//! Host-side parallel execution plumbing for the deterministic
-//! three-phase cluster engine (`Cluster::run_parallel`), replacing the
-//! `rayon` crate in this offline build with `std::thread::scope` plus a
-//! spin barrier.
+//! Host-side parallel execution plumbing for the deterministic **fully
+//! sharded** cluster engine (`Cluster::run_parallel`), replacing the
+//! `rayon` crate in this offline build with `std::thread::scope`, a spin
+//! barrier, per-worker mailbox matrices and a binary reduction tree.
 //!
-//! ## Determinism contract (see DESIGN.md §Three-phase sharded engine)
+//! ## Sharded cycle contract (see DESIGN.md §Fully sharded engine)
 //!
-//! Each simulated cycle is split into:
+//! Each simulated cycle runs almost entirely inside the workers; the
+//! coordinator's per-cycle work is O(threads) plus the genuinely serial
+//! DMA channel-arbitration decisions:
 //!
-//! * **serial pre-phase (coordinator)** — deliver the previous cycle's
-//!   drained responses and wake-ups, barrier bookkeeping/release, DMA
-//!   control + progress, and the cross-shard transfer merge, all in fixed
-//!   global orders (worker order = Tile order = the serial engine's
-//!   order).
-//! * **phase 1 (parallel)** — each worker applies its PEs' responses and
-//!   wake-ups, then issues each PE in index order, bucketing every memory
-//!   action *directly into the issuing Tile's memory domain* (a pure
-//!   function of the address map; a Tile's requests can only come from
-//!   its own PEs, so no cross-worker hand-off exists here). DMA control
-//!   ops go to the coordinator's outbox instead.
-//! * **phase 2 (parallel)** — each worker steps its owned Tile domains in
-//!   ascending Tile order: master/slave/bank arbitration and the bank
-//!   reads/writes/AMOs against the Tiles' own L1 slices, then drains the
-//!   responses falling due next cycle into its channel.
+//! * **cycle top (parallel, owner-computes)** — each worker drains the
+//!   response/transfer mailboxes addressed to it (in ascending source
+//!   order, which restores the serial engine's global Tile-ascending
+//!   order), applies responses and wake-ups to its own PEs, ingests
+//!   transfer arrivals into its own Tile domains, and applies the
+//!   sub-runs of this cycle's inbound DMA bursts that land in its own
+//!   L1 slices.
+//! * **phase 1 (parallel)** — each worker issues its PEs in index order,
+//!   bucketing memory actions into the issuing Tile's domain. `DmaWait`
+//!   is resolved locally against the worker's descriptor done-mirror;
+//!   only `DmaStart` crosses to the coordinator (via the summary tree).
+//! * **phase 2 (parallel)** — each worker steps its Tile domains in
+//!   ascending order, then buckets the drained responses and master-port
+//!   winners straight into the destination workers' mailboxes. Barrier
+//!   arrivals are counted here, at drain time, into the worker's
+//!   [`CycleSummary`].
+//! * **summary reduction (parallel)** — the per-worker summaries (busy
+//!   flag, unconsumed-event count, barrier-arrival tallies, `DmaStart`
+//!   stream) merge pairwise up a binary worker tree; child `c = w + 2^l`
+//!   folds into parent `w` in ascending level order, so concatenated
+//!   streams stay in ascending worker (= PE = Tile) order and the
+//!   coordinator reads a single root.
+//! * **serial pre-phase (coordinator, O(threads))** — decide
+//!   termination, consume the root summary (global barrier counters,
+//!   release scheduling, `DmaStart` programming), run the DMA *timing*
+//!   step ([`crate::dma::DmaEvent`]) — moving outbound burst words
+//!   inline at the exact serial point (the main-memory image is
+//!   single-owner state) — and publish the per-cycle [`ControlBlock`]
+//!   (releases, retired descriptors, inbound data-movement jobs).
 //!
 //! Workers own disjoint, *contiguous* ranges of Tiles (and exactly those
 //! Tiles' PEs), in Tile → SubGroup → Group order — the paper's physical
 //! hierarchy. Every per-domain input stream is consumed in a canonical
-//! order and every cross-domain hand-off is merged in ascending Tile
-//! order, so results, cycle counts and all statistics are bit-identical
-//! to the serial engine for any thread count — `rust/tests/
-//! parallel_equiv.rs` enforces this differentially.
+//! order and every cross-domain hand-off lands in a per-(source,
+//! destination) mailbox whose drain order restores the global merge, so
+//! results, cycle counts and all statistics are bit-identical to the
+//! serial engine for any thread count — `rust/tests/parallel_equiv.rs`
+//! enforces this differentially at 1–16 threads.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, RwLock};
 
 use crate::cluster::{route_action, RoutedAction};
 use crate::interconnect::{Interconnect, Response, TileDomain, XferEvent};
 use crate::memory::L1Memory;
 use crate::pe::{Action, Pe};
+use crate::stats::IdCounts;
 
 /// Default worker-thread count for harness code (tests, benches,
-/// examples): the host's cores, capped at 16. Phase 2 (bank arbitration)
-/// is sharded by destination Tile, so the old 8-thread knee — "the serial
-/// phase 2 dominates anyway" — is gone; what bounds scaling now is the
-/// per-cycle coordinator merge plus two barrier crossings, whose cost
-/// grows with the worker count while each worker's share of the domain
-/// work shrinks. Past ~16 workers the crossings outweigh the shrinking
-/// shares on every realistic simulated cycle length.
+/// examples): the host's cores, capped at 16. With the pre-phase sharded
+/// (owner-computes delivery, distributed barriers/DMA, mailbox transfer
+/// scatter) the coordinator's per-cycle work is O(threads); what bounds
+/// scaling now is the two barrier crossings plus the summary-tree depth,
+/// whose cost grows with the worker count while each worker's share of
+/// the domain work shrinks. Past ~16 workers the crossings outweigh the
+/// shrinking shares on every realistic simulated cycle length.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -106,7 +125,8 @@ impl SpinBarrier {
 /// joining, turning a clean panic into a hang. Every coordinator panic
 /// site has the workers parked at that rendezvous (they only run strictly
 /// between the two barrier crossings), so the single release here is
-/// always paired.
+/// always paired. `parallel::tests::pool_shutdown_releases_workers_on_
+/// coordinator_panic` pins the invariant.
 pub struct PoolShutdown<'a> {
     stop: &'a AtomicBool,
     barrier: &'a SpinBarrier,
@@ -125,80 +145,244 @@ impl Drop for PoolShutdown<'_> {
     }
 }
 
-/// Coordinator → worker hand-off for one cycle.
-#[derive(Default)]
-pub struct Inbox {
-    /// L1 responses due this cycle for PEs owned by the worker, in the
-    /// global (Tile-ascending) drained order.
-    pub responses: Vec<Response>,
-    /// PEs (global indices) to wake before issuing: barrier releases and
-    /// DMA completions.
-    pub wakes: Vec<u32>,
+/// Single-producer, single-consumer event box between one (source,
+/// destination) worker pair, double-buffered by cycle parity: the writer
+/// fills parity `now & 1` during its phase, the reader drains parity
+/// `(now & 1) ^ 1` at the next cycle top, so the two sides never touch
+/// the same buffer in the same phase. The flag spares the reader a lock
+/// on the (common) empty case; the Mutex is uncontended by construction
+/// and exists to give the phase alternation a safe Rust expression.
+pub struct Mailbox<T> {
+    flag: AtomicBool,
+    q: Mutex<Vec<T>>,
 }
 
-/// Per-worker mailbox. Phases strictly alternate (enforced by the
-/// barrier), so every lock below is uncontended; the Mutex exists to give
-/// the alternation a safe Rust expression, not for arbitration.
+impl<T: Copy> Mailbox<T> {
+    fn new() -> Self {
+        Mailbox {
+            flag: AtomicBool::new(false),
+            q: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Move `items` into the box (no-op when empty), preserving order.
+    pub fn publish(&self, items: &mut Vec<T>) {
+        if items.is_empty() {
+            return;
+        }
+        self.q.lock().unwrap().append(items);
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Drain the box in publish order through `f`.
+    pub fn consume(&self, mut f: impl FnMut(T)) {
+        if self.flag.swap(false, Ordering::Acquire) {
+            for item in self.q.lock().unwrap().drain(..) {
+                f(item);
+            }
+        }
+    }
+}
+
+/// One worker's per-cycle output summary, combined pairwise up the binary
+/// worker tree so the coordinator consumes a single root instead of
+/// O(cluster) event streams. All fields merge associatively; the
+/// `dma_ops` stream concatenates child-after-parent, which (children
+/// being higher worker indices) keeps it in global PE order.
+#[derive(Default)]
+pub struct CycleSummary {
+    /// Any PE in the merged range still live.
+    pub busy: bool,
+    /// Responses + transfer events published to mailboxes this cycle
+    /// (unconsumed until the next cycle top).
+    pub events: u64,
+    /// Barrier arrivals observed at drain time, tallied per barrier id.
+    pub arrivals: IdCounts,
+    /// `DmaStart` control ops in global PE order — the only PE actions
+    /// the coordinator still routes itself.
+    pub dma_ops: Vec<(u32, Action)>,
+}
+
+impl CycleSummary {
+    fn reset(&mut self) {
+        self.busy = false;
+        self.events = 0;
+        self.arrivals.clear();
+        self.dma_ops.clear();
+    }
+
+    /// Fold `other` (a higher-indexed worker's subtree) into this one.
+    pub fn absorb(&mut self, other: &mut CycleSummary) {
+        self.busy |= other.busy;
+        self.events += other.events;
+        self.arrivals.absorb(&other.arrivals);
+        self.dma_ops.append(&mut other.dma_ops);
+        other.busy = false;
+        other.events = 0;
+        other.arrivals.clear();
+    }
+}
+
+/// One **inbound** DMA burst's functional data movement, published by
+/// the coordinator and executed by every worker on the sub-runs that
+/// land in its own Tiles. (Outbound bursts never become jobs: their L1
+/// reads and image writes happen inline on the coordinator at the exact
+/// serial point — the image is single-owner state, so there is nothing
+/// to shard.)
+pub struct DmaJob {
+    pub l1_word: u32,
+    /// The burst's words, staged from the main-memory image.
+    pub data: Vec<f32>,
+}
+
+/// Per-cycle coordinator → workers broadcast, published under the write
+/// lock strictly between the barrier crossings (workers read-lock it
+/// concurrently during their phase). The `seed_*` fields are one-time
+/// carry-over from earlier serial stepping on the same cluster,
+/// consumed/cleared after the first parallel cycle.
+#[derive(Default)]
+pub struct ControlBlock {
+    /// Barrier ids whose release broadcast fires this cycle; each worker
+    /// wakes its own waiters.
+    pub releases: Vec<u16>,
+    /// Descriptors that retired this cycle (first cycle: all descriptors
+    /// already done) — workers update their done-mirrors and wake their
+    /// own `DmaWait`-parked PEs.
+    pub dma_done: Vec<u16>,
+    /// Functional data movement of this cycle's issued bursts.
+    pub dma_jobs: Vec<DmaJob>,
+    /// Seed: responses drained but undelivered when the engine started,
+    /// pre-bucketed per destination worker.
+    pub seed_resp: Vec<Mutex<Vec<Response>>>,
+    /// Seed: transfer events awaiting their next-cycle merge, per
+    /// destination worker.
+    pub seed_xfer: Vec<Mutex<Vec<XferEvent>>>,
+    /// Seed: (barrier id, PE) pairs parked at a barrier.
+    pub seed_waiting: Vec<(u16, u32)>,
+    /// Seed: (PE, descriptor) pairs parked on `DmaWait`.
+    pub seed_dma_waiters: Vec<(u32, u16)>,
+}
+
+/// Parked-PE bookkeeping a worker hands back at shutdown so the cluster
+/// can continue (mixed-engine stepping) with consistent state.
+#[derive(Default)]
+pub struct ParkedState {
+    /// (barrier id, PE) pairs still waiting for a release.
+    pub barrier_waiting: Vec<(u16, u32)>,
+    /// (PE, descriptor) pairs still waiting for a retirement.
+    pub dma_waiters: Vec<(u32, u16)>,
+}
+
+/// Per-worker communication endpoints. Phases strictly alternate
+/// (enforced by the barrier) and mailboxes are parity-double-buffered,
+/// so every lock below is uncontended; the Mutexes express the
+/// alternation safely, they never arbitrate.
 pub struct WorkerChannel {
     /// Global index of the first PE owned by this worker.
     pub pe_base: u32,
-    pub inbox: Mutex<Inbox>,
-    /// DMA control ops issued in phase 1, `(global pe, action)` in PE
-    /// order — the only actions the coordinator still routes itself.
-    pub outbox: Mutex<Vec<(u32, Action)>>,
-    /// Transfer events routed *to* this worker's Tiles, already in the
-    /// global merge order (the coordinator buckets a Tile-ascending
-    /// stream, which bucketing preserves per destination).
-    pub xfer_in: Mutex<Vec<XferEvent>>,
-    /// Master-port winners of this worker's source Tiles, Tile-ascending.
-    pub xfer_out: Mutex<Vec<XferEvent>>,
-    /// Responses drained from this worker's domains, Tile-ascending.
-    pub resp_out: Mutex<Vec<Response>>,
+    /// Outgoing response mailboxes: `resp[parity][destination worker]`.
+    resp: [Vec<Mailbox<Response>>; 2],
+    /// Outgoing transfer-event mailboxes, same layout.
+    xfer: [Vec<Mailbox<XferEvent>>; 2],
+    /// This worker's (partially tree-merged) cycle summary.
+    pub summary: Mutex<CycleSummary>,
+    /// Cycle number for which `summary` covers the worker's whole
+    /// subtree; `u64::MAX` = never published.
+    pub summary_ready: AtomicU64,
     /// Net requests born minus retired in this worker's domains. The sum
     /// over all channels is the cluster-wide in-flight count (a request
     /// born in one worker's source Tile may retire in another's
     /// destination Tile, so individual counters can go negative).
     pub inflight: AtomicI64,
-    /// Whether any owned PE is still live after this worker's last phase.
-    pub busy: AtomicBool,
+    /// Parked state dumped when the pool shuts down.
+    pub parked: Mutex<ParkedState>,
 }
 
 impl WorkerChannel {
-    pub fn new(pe_base: u32) -> Self {
+    pub fn new(pe_base: u32, workers: usize) -> Self {
+        let boxes = |n: usize| -> Vec<Mailbox<Response>> { (0..n).map(|_| Mailbox::new()).collect() };
+        let xboxes = |n: usize| -> Vec<Mailbox<XferEvent>> { (0..n).map(|_| Mailbox::new()).collect() };
         WorkerChannel {
             pe_base,
-            inbox: Mutex::new(Inbox::default()),
-            outbox: Mutex::new(Vec::new()),
-            xfer_in: Mutex::new(Vec::new()),
-            xfer_out: Mutex::new(Vec::new()),
-            resp_out: Mutex::new(Vec::new()),
+            resp: [boxes(workers), boxes(workers)],
+            xfer: [xboxes(workers), xboxes(workers)],
+            summary: Mutex::new(CycleSummary::default()),
+            summary_ready: AtomicU64::new(u64::MAX),
             inflight: AtomicI64::new(0),
-            busy: AtomicBool::new(false),
+            parked: Mutex::new(ParkedState::default()),
         }
+    }
+
+    pub fn resp_to(&self, parity: usize, dst: usize) -> &Mailbox<Response> {
+        &self.resp[parity][dst]
+    }
+
+    pub fn xfer_to(&self, parity: usize, dst: usize) -> &Mailbox<XferEvent> {
+        &self.xfer[parity][dst]
     }
 }
 
-/// Everything a worker needs besides its PE slice: its channel, the
-/// shared (read-only-routed) views of the memory system, its owned Tile
-/// range, and the coordinator-published cycle counter.
+/// Everything a worker needs besides its PE slice: the full channel
+/// array (mailbox reads cross workers), the control block, the shared
+/// (read-only-routed) views of the memory system, its owned Tile range
+/// and the coordinator-published cycle counter.
 pub struct WorkerCtx<'a> {
-    pub ch: &'a WorkerChannel,
+    pub idx: usize,
+    pub channels: &'a [WorkerChannel],
+    pub ctrl: &'a RwLock<ControlBlock>,
     pub icn: &'a Interconnect,
     pub l1: &'a L1Memory,
     pub tile_lo: usize,
     pub tile_hi: usize,
     pub pes_per_tile: usize,
+    pub tiles_per_worker: usize,
+    pub pes_per_worker: usize,
+    pub has_dma: bool,
     pub now: &'a AtomicU64,
+}
+
+/// Apply one response to its (owned) PE and register barrier waiters —
+/// the per-PE half of what the serial engine's step 1 does; the arrival
+/// *counting* half happened at drain time in the destination domain's
+/// worker.
+fn apply_response_owned(
+    pes: &mut [Pe],
+    base: usize,
+    r: &Response,
+    waiting: &mut HashMap<u16, Vec<u32>>,
+) {
+    pes[r.core as usize - base].apply_response(r);
+    if let Some(id) = r.barrier_id() {
+        waiting.entry(id).or_default().push(r.core);
+    }
+}
+
+/// Spin until `ready` publishes `cycle`, with an escape hatch when a
+/// sibling worker failed (its summary will never arrive).
+fn await_summary(ready: &AtomicU64, cycle: u64, failed: &AtomicBool) {
+    let mut spins = 0u32;
+    while ready.load(Ordering::Acquire) != cycle {
+        if failed.load(Ordering::Relaxed) {
+            return;
+        }
+        spins += 1;
+        if spins < 4096 {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
 }
 
 /// Worker body: one iteration per simulated cycle until `stop` is raised.
 ///
 /// `pes` is the worker's contiguous PE slice (exactly the PEs of Tiles
-/// `[tile_lo, tile_hi)`); `ctx.ch.pe_base` is the global index of
-/// `pes[0]`. A panic inside the phase work (e.g. a debug assertion)
-/// raises `failed` and keeps the barrier protocol alive, so the
-/// coordinator can shut the pool down and re-raise instead of spinning
-/// forever.
+/// `[tile_lo, tile_hi)`); `ctx.channels[ctx.idx].pe_base` is the global
+/// index of `pes[0]`. A panic inside the phase work (e.g. a debug
+/// assertion) raises `failed`, still publishes the summary-ready stamp so
+/// tree parents never spin forever, and keeps the barrier protocol alive
+/// so the coordinator can shut the pool down and re-raise instead of
+/// hanging.
 pub fn worker_loop(
     pes: &mut [Pe],
     ctx: WorkerCtx<'_>,
@@ -206,57 +390,133 @@ pub fn worker_loop(
     stop: &AtomicBool,
     failed: &AtomicBool,
 ) {
-    let ch = ctx.ch;
+    let w = ctx.idx;
+    let workers = ctx.channels.len();
+    let ch = &ctx.channels[w];
     let base = ch.pe_base as usize;
-    let mut responses: Vec<Response> = Vec::new();
-    let mut wakes: Vec<u32> = Vec::new();
-    let mut actions: Vec<(u32, Action)> = Vec::new();
-    let mut xfer_out: Vec<XferEvent> = Vec::new();
-    let mut resp_out: Vec<Response> = Vec::new();
+
+    // Worker-local sharded state: this worker's parked PEs and its
+    // mirror of the retired-descriptor set.
+    let mut waiting: HashMap<u16, Vec<u32>> = HashMap::new();
+    let mut dma_waiters: Vec<(u32, u16)> = Vec::new();
+    let mut dma_done: Vec<bool> = Vec::new();
+
+    // Recycled buffers.
+    let mut summary = CycleSummary::default();
+    let mut resp_out: Vec<Vec<Response>> = (0..workers).map(|_| Vec::new()).collect();
+    let mut xfer_out: Vec<Vec<XferEvent>> = (0..workers).map(|_| Vec::new()).collect();
+    let mut flat_resp: Vec<Response> = Vec::new();
+    let mut flat_xfer: Vec<XferEvent> = Vec::new();
+
     loop {
         barrier.wait();
         if stop.load(Ordering::SeqCst) {
+            // Hand the parked state back so the cluster stays consistent
+            // for mixed-engine continuation.
+            let mut parked = ch.parked.lock().unwrap();
+            for (id, list) in waiting.drain() {
+                for pe in list {
+                    parked.barrier_waiting.push((id, pe));
+                }
+            }
+            parked.dma_waiters.append(&mut dma_waiters);
             break;
         }
 
+        let now = ctx.now.load(Ordering::SeqCst);
         let work = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let now = ctx.now.load(Ordering::SeqCst);
+            let cur = (now & 1) as usize;
+            let prev = cur ^ 1;
+            summary.reset();
 
-            // Take this cycle's events (capacity is recycled both ways).
-            {
-                let mut inbox = ch.inbox.lock().unwrap();
-                std::mem::swap(&mut inbox.responses, &mut responses);
-                std::mem::swap(&mut inbox.wakes, &mut wakes);
+            // ---- cycle top: owner-computes delivery -------------------
+            let cb = ctx.ctrl.read().unwrap();
+
+            // Seeds (non-empty only on the first cycle after a
+            // mixed-engine hand-off): carried-over undelivered responses,
+            // parked PEs, parked DMA waiters.
+            for r in cb.seed_resp[w].lock().unwrap().drain(..) {
+                apply_response_owned(pes, base, &r, &mut waiting);
+            }
+            for &(id, pe) in &cb.seed_waiting {
+                if pe as usize / ctx.pes_per_worker == w {
+                    waiting.entry(id).or_default().push(pe);
+                }
+            }
+            for &(pe, id) in &cb.seed_dma_waiters {
+                if pe as usize / ctx.pes_per_worker == w {
+                    dma_waiters.push((pe, id));
+                }
             }
 
-            // Response write-backs first, wake-ups second — the same
-            // order the serial engine uses within a cycle.
-            for r in &responses {
-                pes[r.core as usize - base].apply_response(r);
+            // (1) Responses for my PEs, drained in ascending source-worker
+            // order — which restores the serial engine's global
+            // Tile-ascending delivery order restricted to my PEs.
+            for src in ctx.channels {
+                src.resp_to(prev, w)
+                    .consume(|r| apply_response_owned(pes, base, &r, &mut waiting));
             }
-            responses.clear();
-            for &pe in &wakes {
-                pes[pe as usize - base].wake();
-            }
-            wakes.clear();
 
-            // Own this worker's Tile domains for the whole phase (one
-            // uncontended lock per Tile per cycle).
+            // (2) Barrier release broadcasts: wake my own waiters.
+            for &id in &cb.releases {
+                if let Some(list) = waiting.remove(&id) {
+                    for pe in list {
+                        pes[pe as usize - base].wake();
+                    }
+                }
+            }
+
+            // (3) DMA retirements: update the done-mirror, wake my own
+            // parked waiters (same cycle the serial engine wakes them).
+            for &d in &cb.dma_done {
+                let d = d as usize;
+                if dma_done.len() <= d {
+                    dma_done.resize(d + 1, false);
+                }
+                dma_done[d] = true;
+            }
+            if !cb.dma_done.is_empty() && !dma_waiters.is_empty() {
+                dma_waiters.retain(|&(pe, id)| {
+                    if dma_done.get(id as usize).copied().unwrap_or(false) {
+                        pes[pe as usize - base].wake();
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+
+            // (4) Inbound DMA movement: the sub-runs of this cycle's
+            // bursts that land in my Tiles go straight into my slices —
+            // visible to this cycle's bank accesses, exactly as the
+            // serial engine's step-3 movement is. (Outbound bursts moved
+            // inline on the coordinator during the pre-phase.)
+            for job in cb.dma_jobs.iter() {
+                ctx.l1
+                    .write_run_range(job.l1_word, &job.data, ctx.tile_lo, ctx.tile_hi);
+            }
+
+            // ---- own the Tile domains for the rest of the cycle -------
             let mut domains: Vec<MutexGuard<'_, TileDomain>> = (ctx.tile_lo..ctx.tile_hi)
                 .map(|t| ctx.icn.domain(t).lock().unwrap())
                 .collect();
 
-            // Cross-shard arrivals routed by the coordinator, already in
-            // the global (Tile-ascending) merge order.
-            {
-                let mut xin = ch.xfer_in.lock().unwrap();
-                for ev in xin.drain(..) {
+            // (5) Cross-shard arrivals: seeds first (strictly older),
+            // then the mailboxes in ascending source order — the global
+            // Tile-ascending merge, restricted to my destination Tiles.
+            for ev in cb.seed_xfer[w].lock().unwrap().drain(..) {
+                domains[ev.dst_tile as usize - ctx.tile_lo]
+                    .ingest_arrival(ev.at, ev.slave_port, ev.req);
+            }
+            for src in ctx.channels {
+                src.xfer_to(prev, w).consume(|ev| {
                     domains[ev.dst_tile as usize - ctx.tile_lo]
                         .ingest_arrival(ev.at, ev.slave_port, ev.req);
-                }
+                });
             }
+            drop(cb);
 
-            // Phase 1: issue every owned PE in index order, bucketing
+            // (6) Phase 1: issue every owned PE in index order, bucketing
             // memory actions straight into the issuing Tile's domain.
             let mut busy = false;
             let mut births: i64 = 0;
@@ -275,44 +535,102 @@ pub fn worker_loop(
                                 Some(p) => d.ingest_master(p, req),
                             }
                         }
-                        RoutedAction::Dma(op) => actions.push((gpe, op)),
+                        RoutedAction::Dma(op) => match op {
+                            Action::DmaStart { .. } => summary.dma_ops.push((gpe, op)),
+                            Action::DmaWait { id } => {
+                                // Resolved locally against the done-mirror,
+                                // whose state equals the serial engine's
+                                // `is_done` at this exact point of the
+                                // cycle (post DMA-progress, in-issue).
+                                let done = !ctx.has_dma
+                                    || dma_done.get(id as usize).copied().unwrap_or(false);
+                                if done {
+                                    pe.wake();
+                                } else {
+                                    dma_waiters.push((gpe, id));
+                                }
+                            }
+                            _ => unreachable!("only DMA control ops are RoutedAction::Dma"),
+                        },
                     }
                 }
                 busy |= !pe.done();
             }
 
-            // Phase 2: per-shard arbitration + bank accesses, ascending
-            // Tile order; responses due next cycle leave the domains.
+            // (7) Phase 2: per-shard arbitration + bank accesses in
+            // ascending Tile order; drains land in flat buffers, then get
+            // bucketed per destination worker (stable, so each bucket
+            // preserves my Tile-ascending order).
             for (k, t) in (ctx.tile_lo..ctx.tile_hi).enumerate() {
                 let d = &mut *domains[k];
                 if d.is_idle() {
                     continue;
                 }
                 let mut store = ctx.l1.tile_store(t).lock().unwrap();
-                d.step(now, &mut store, ctx.icn.topo(), &mut xfer_out, &mut resp_out);
+                d.step(now, &mut store, ctx.icn.topo(), &mut flat_xfer, &mut flat_resp);
             }
-            let deaths = resp_out.len() as i64;
-            ch.inflight.fetch_add(births - deaths, Ordering::SeqCst);
             drop(domains);
 
-            // Publish this cycle's outputs for the coordinator.
-            {
-                let mut out = ch.xfer_out.lock().unwrap();
-                out.append(&mut xfer_out);
+            let deaths = flat_resp.len() as i64;
+            let mut events = 0u64;
+            for r in flat_resp.drain(..) {
+                // Barrier arrivals are counted where they are drained, so
+                // the coordinator sees them at the same pre-phase the
+                // serial engine's bookkeeping would.
+                if let Some(id) = r.barrier_id() {
+                    summary.arrivals.add(id, 1);
+                }
+                resp_out[r.core as usize / ctx.pes_per_worker].push(r);
+                events += 1;
+            }
+            for ev in flat_xfer.drain(..) {
+                xfer_out[ev.dst_tile as usize / ctx.tiles_per_worker].push(ev);
+                events += 1;
+            }
+            for (dst, buf) in resp_out.iter_mut().enumerate() {
+                ch.resp_to(cur, dst).publish(buf);
+            }
+            for (dst, buf) in xfer_out.iter_mut().enumerate() {
+                ch.xfer_to(cur, dst).publish(buf);
+            }
+            ch.inflight.fetch_add(births - deaths, Ordering::SeqCst);
+            summary.busy = busy;
+            summary.events = events;
+
+            // (8) Summary reduction: fold every child subtree (ascending
+            // levels keep streams in ascending worker order), then
+            // publish for my parent / the coordinator.
+            let mut level = 0usize;
+            loop {
+                let stride = 1usize << level;
+                if w & stride != 0 {
+                    break; // I'm a right child at this level.
+                }
+                let child = w + stride;
+                if child >= workers {
+                    break;
+                }
+                await_summary(&ctx.channels[child].summary_ready, now, failed);
+                let mut cs = ctx.channels[child]
+                    .summary
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner());
+                summary.absorb(&mut cs);
+                drop(cs);
+                level += 1;
             }
             {
-                let mut out = ch.resp_out.lock().unwrap();
-                out.append(&mut resp_out);
+                let mut slot = ch.summary.lock().unwrap_or_else(|p| p.into_inner());
+                std::mem::swap(&mut *slot, &mut summary);
             }
-            {
-                let mut outbox = ch.outbox.lock().unwrap();
-                std::mem::swap(&mut *outbox, &mut actions);
-            }
-            debug_assert!(actions.is_empty());
-            ch.busy.store(busy, Ordering::SeqCst);
+            ch.summary_ready.store(now, Ordering::Release);
         }));
         if work.is_err() {
             failed.store(true, Ordering::SeqCst);
+            // Keep the tree protocol alive: parents escape their spin via
+            // `failed`, but publish the stamp anyway so nothing depends on
+            // the race.
+            ch.summary_ready.store(now, Ordering::SeqCst);
         }
 
         barrier.wait();
@@ -391,6 +709,104 @@ mod tests {
         for _ in 0..10 {
             b.wait();
         }
+    }
+
+    /// The PoolShutdown single-release invariant under the distributed
+    /// barrier: a coordinator panic mid-pre-phase must release the parked
+    /// workers exactly once (no hang, no unbalanced crossing) and every
+    /// worker must exit its loop.
+    #[test]
+    fn pool_shutdown_releases_workers_on_coordinator_panic() {
+        const W: usize = 3;
+        let barrier = SpinBarrier::new(W + 1);
+        let stop = AtomicBool::new(false);
+        let exited = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..W {
+                s.spawn(|| {
+                    loop {
+                        // Same two-crossing protocol as worker_loop.
+                        barrier.wait();
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        barrier.wait();
+                    }
+                    exited.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _shutdown = PoolShutdown::new(&stop, &barrier);
+                // One healthy cycle, then a pre-phase panic.
+                barrier.wait();
+                barrier.wait();
+                panic!("coordinator pre-phase failure");
+            }));
+            assert!(result.is_err(), "the panic must propagate");
+        });
+        assert_eq!(exited.load(Ordering::SeqCst), W, "all workers must exit");
+        assert!(stop.load(Ordering::SeqCst));
+    }
+
+    /// Mailboxes preserve publish order across parity flips and report
+    /// emptiness cheaply.
+    #[test]
+    fn mailbox_roundtrip_preserves_order() {
+        let mb: Mailbox<u32> = Mailbox::new();
+        let mut batch1 = vec![1, 2, 3];
+        let mut batch2 = vec![4, 5];
+        mb.publish(&mut batch1);
+        mb.publish(&mut batch2);
+        assert!(batch1.is_empty() && batch2.is_empty());
+        let mut got = Vec::new();
+        mb.consume(|v| got.push(v));
+        assert_eq!(got, vec![1, 2, 3, 4, 5]);
+        // Drained: a second consume sees nothing.
+        mb.consume(|_| panic!("mailbox must be empty"));
+    }
+
+    /// The summary tree's merge is associative and keeps the DmaStart
+    /// stream in ascending-worker order when children fold in ascending
+    /// level order.
+    #[test]
+    fn cycle_summary_absorb_concatenates_in_worker_order() {
+        let op = |pe: u32| (pe, Action::DmaStart { id: pe as u16 });
+        let mut w0 = CycleSummary {
+            busy: false,
+            events: 1,
+            arrivals: IdCounts::default(),
+            dma_ops: vec![op(0)],
+        };
+        let mut w1 = CycleSummary {
+            busy: true,
+            events: 2,
+            arrivals: IdCounts::default(),
+            dma_ops: vec![op(8)],
+        };
+        let mut w2 = CycleSummary {
+            busy: false,
+            events: 0,
+            arrivals: IdCounts::default(),
+            dma_ops: vec![op(16)],
+        };
+        let mut w3 = CycleSummary {
+            busy: false,
+            events: 4,
+            arrivals: IdCounts::default(),
+            dma_ops: vec![op(24)],
+        };
+        w0.arrivals.add(0, 3);
+        w2.arrivals.add(0, 2);
+        w2.arrivals.add(5, 1);
+        // Level 0: 0←1, 2←3. Level 1: 0←2.
+        w0.absorb(&mut w1);
+        w2.absorb(&mut w3);
+        w0.absorb(&mut w2);
+        assert!(w0.busy);
+        assert_eq!(w0.events, 7);
+        let pes: Vec<u32> = w0.dma_ops.iter().map(|&(pe, _)| pe).collect();
+        assert_eq!(pes, vec![0, 8, 16, 24], "global PE order");
+        assert_eq!(w0.arrivals.iter().collect::<Vec<_>>(), vec![(0, 5), (5, 1)]);
     }
 
     #[test]

@@ -41,15 +41,51 @@ use crate::errors::Result;
 use crate::kernels::{self, Workload};
 use crate::report::{RunReport, Verdict};
 
-/// One batch entry: a workload and the config to run it on.
+/// A config delta applied to a copy of a [`Job`]'s base config at run
+/// time.
+type ConfigTweak = Box<dyn Fn(&mut ClusterConfig) + Send + Sync>;
+
+/// One batch entry: a workload, the base config to run it on, and an
+/// optional chain of config *deltas* ([`Job::tweak`]).
 pub struct Job {
     pub cfg: ClusterConfig,
     pub workload: Box<dyn Workload>,
+    tweaks: Vec<ConfigTweak>,
 }
 
 impl Job {
     pub fn new(cfg: ClusterConfig, workload: Box<dyn Workload>) -> Self {
-        Job { cfg, workload }
+        Job { cfg, workload, tweaks: Vec::new() }
+    }
+
+    /// Register a config delta applied (in registration order) to a copy
+    /// of the base config when the job runs. Sweeps over single knobs —
+    /// `tx_table_entries`, the sequential-region size, NUMA latencies —
+    /// share one base config instead of clone-and-edit at every call
+    /// site:
+    ///
+    /// ```ignore
+    /// let jobs: Vec<Job> = [2, 4, 8, 16]
+    ///     .map(|tx| Job::new(base.clone(), kernels::lookup("axpy")?)
+    ///         .tweak(move |c| c.tx_table_entries = tx))
+    ///     .into();
+    /// ```
+    ///
+    /// The `RunReport` fingerprint is computed from the tweaked config,
+    /// so swept reports stay distinguishable.
+    pub fn tweak(mut self, f: impl Fn(&mut ClusterConfig) + Send + Sync + 'static) -> Self {
+        self.tweaks.push(Box::new(f));
+        self
+    }
+
+    /// The exact config this job will simulate: the base config with
+    /// every registered delta applied.
+    pub fn effective_cfg(&self) -> ClusterConfig {
+        let mut cfg = self.cfg.clone();
+        for t in &self.tweaks {
+            t(&mut cfg);
+        }
+        cfg
     }
 }
 
@@ -153,7 +189,7 @@ impl Session {
     /// reference engine; see the module docs).
     pub fn run_batch(&self, jobs: &[Job]) -> Vec<Result<RunReport>> {
         let results = crate::parallel::scatter(jobs.len(), self.threads, |i| {
-            self.run_inner(&jobs[i].cfg, &*jobs[i].workload, 1)
+            self.run_inner(&jobs[i].effective_cfg(), &*jobs[i].workload, 1)
         });
         let mut acc = self.reports.lock().unwrap();
         for r in results.iter().flatten() {

@@ -71,6 +71,41 @@ impl Histogram {
     }
 }
 
+/// Tiny id → count accumulator over a sorted vec, for per-cycle event
+/// tallies with few distinct ids (e.g. barrier-arrival counts in the
+/// sharded engine's per-worker cycle summaries). Integer adds merged in
+/// any order produce the same totals, so [`IdCounts::absorb`] is safe at
+/// every level of a reduction tree.
+#[derive(Debug, Clone, Default)]
+pub struct IdCounts {
+    entries: Vec<(u16, u32)>,
+}
+
+impl IdCounts {
+    pub fn add(&mut self, id: u16, n: u32) {
+        match self.entries.binary_search_by_key(&id, |e| e.0) {
+            Ok(i) => self.entries[i].1 += n,
+            Err(i) => self.entries.insert(i, (id, n)),
+        }
+    }
+    /// Fold another accumulator into this one (order-insensitive).
+    pub fn absorb(&mut self, other: &IdCounts) {
+        for &(id, n) in &other.entries {
+            self.add(id, n);
+        }
+    }
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    /// (id, count) pairs in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = (u16, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+}
+
 /// Binomial(n, p) probability mass function P(X = k) — the arbitration
 /// contention primitive of the paper's AMAT model (Sec. 3.1).
 pub fn binomial_pmf(n: usize, p: f64, k: usize) -> f64 {
@@ -110,6 +145,26 @@ mod tests {
         assert!((h.mean() - 2.5).abs() < 1e-12);
         assert_eq!(h.percentile(0.5), 1);
         assert_eq!(h.percentile(1.0), 5);
+    }
+
+    #[test]
+    fn id_counts_accumulate_and_merge_order_insensitively() {
+        let mut a = IdCounts::default();
+        a.add(3, 1);
+        a.add(1, 2);
+        a.add(3, 1);
+        let mut b = IdCounts::default();
+        b.add(1, 5);
+        b.add(7, 1);
+        let mut ab = a.clone();
+        ab.absorb(&b);
+        let mut ba = b.clone();
+        ba.absorb(&a);
+        let got: Vec<_> = ab.iter().collect();
+        assert_eq!(got, vec![(1, 7), (3, 2), (7, 1)]);
+        assert_eq!(got, ba.iter().collect::<Vec<_>>(), "merge order must not matter");
+        ab.clear();
+        assert!(ab.is_empty());
     }
 
     #[test]

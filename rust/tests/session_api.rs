@@ -152,6 +152,48 @@ fn batch_reports_arrive_in_job_order() {
 }
 
 // ------------------------------------------------------------------
+// Per-job config deltas
+// ------------------------------------------------------------------
+
+/// `Job::tweak` sweeps single knobs off a shared base config: the
+/// tweaked job must be bit-identical to a clone-and-edit job, the
+/// report fingerprint must follow the *effective* config, and deltas
+/// must compose in registration order.
+#[test]
+fn job_tweaks_match_clone_and_edit_and_refingerprint() {
+    let base = ClusterConfig::tiny();
+    let mut edited = base.clone();
+    edited.tx_table_entries = 2;
+    let w = || -> Box<dyn kernels::Workload> {
+        Box::new(axpy::Axpy::with(axpy::AxpyParams { n: base.num_banks() * 4, alpha: 2.0 }))
+    };
+
+    let s = Session::new(base.clone()).scale(Scale::Fast).check(true);
+    let jobs = vec![
+        Job::new(base.clone(), w()),
+        Job::new(base.clone(), w()).tweak(|c| c.tx_table_entries = 2),
+        Job::new(edited.clone(), w()),
+        // Deltas compose in registration order: the second overrides.
+        Job::new(base.clone(), w())
+            .tweak(|c| c.tx_table_entries = 7)
+            .tweak(|c| c.tx_table_entries = 2),
+    ];
+    assert_eq!(jobs[1].effective_cfg().tx_table_entries, 2);
+    assert_eq!(jobs[3].effective_cfg().tx_table_entries, 2);
+
+    let rs: Vec<_> = s.run_batch(&jobs).into_iter().map(|r| r.expect("job runs")).collect();
+    assert_eq!(rs[0].fingerprint, base.fingerprint());
+    assert_eq!(rs[1].fingerprint, edited.fingerprint(), "fingerprint must follow the delta");
+    assert_ne!(rs[0].fingerprint, rs[1].fingerprint, "a 2-entry tx table is a different config");
+    assert_eq!(rs[1], rs[2], "tweak must equal clone-and-edit bit for bit");
+    assert_eq!(rs[1].stats, rs[3].stats, "composed deltas must land on the same config");
+    // Shrinking the transaction table must actually change timing
+    // (more LSU stalls → different cycle count), proving the delta
+    // reached the simulated cluster.
+    assert_ne!(rs[0].stats.cycles, rs[1].stats.cycles);
+}
+
+// ------------------------------------------------------------------
 // Typed timeouts
 // ------------------------------------------------------------------
 

@@ -1,0 +1,195 @@
+#!/usr/bin/env python3
+"""Diff two ``terapool-runreport-v1`` documents field by field (ROADMAP
+"RunReport diff tool"): pair up reports, compare every numeric stat with
+per-field tolerances, and print a drift table — the paper-vs-measured
+tracking loop for `--json` dumps across PRs, configs or machines.
+
+Reports are paired on ``(workload, config, scale)`` by default; pass
+``--key`` to override (comma-separated field names, e.g.
+``--key kind,config``). Counters that determinism pins exactly
+(instructions, loads, stores, atomics, flops, num_pes, reqs_per_class)
+default to zero tolerance; timing-derived fields (cycles, stalls, AMAT,
+ipc, gflops) default to ``--rtol`` (relative). A missing counterpart is
+reported and — unless ``--ignore-unmatched`` — fails the diff.
+
+Usage:
+    python3 tools/report_diff.py old.json new.json
+    python3 tools/report_diff.py a.json b.json --rtol 0.02
+    python3 tools/report_diff.py a.json b.json --key kind --ignore-unmatched
+
+Exit codes: 0 no drift beyond tolerance, 1 drift/unmatched, 2 usage/IO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "terapool-runreport-v1"
+
+# Fields pinned bit-exactly by the deterministic engines: any difference
+# is a real behavioral change, not noise.
+EXACT_FIELDS = [
+    "stats.instructions",
+    "stats.flops",
+    "stats.num_pes",
+    "stats.loads",
+    "stats.stores",
+    "stats.atomics",
+    "stats.reqs_per_class[0]",
+    "stats.reqs_per_class[1]",
+    "stats.reqs_per_class[2]",
+    "stats.reqs_per_class[3]",
+]
+
+# Timing-derived fields: tolerate --rtol relative drift (config changes,
+# model recalibrations, paper-vs-measured comparisons).
+TOLERANT_FIELDS = [
+    "stats.cycles",
+    "stats.stall_raw",
+    "stats.stall_lsu",
+    "stats.stall_ctrl",
+    "stats.stall_synch",
+    "stats.amat",
+    "stats.amat_per_class[0]",
+    "stats.amat_per_class[1]",
+    "stats.amat_per_class[2]",
+    "stats.amat_per_class[3]",
+    "stats.ipc",
+    "stats.gflops",
+    "dma_bytes",
+]
+
+
+def load_reports(path: Path) -> list[dict]:
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: schema {doc.get('schema')!r}, want {SCHEMA!r}")
+    return doc["reports"]
+
+
+def lookup(report: dict, field: str):
+    """Resolve a dotted/indexed path like ``stats.amat_per_class[2]``."""
+    cur = report
+    for part in field.split("."):
+        idx = None
+        if part.endswith("]"):
+            part, bracket = part[:-1].split("[")
+            idx = int(bracket)
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+        if idx is not None:
+            if not isinstance(cur, list) or idx >= len(cur):
+                return None
+            cur = cur[idx]
+    return cur
+
+
+def key_of(report: dict, key_fields: list[str]) -> tuple:
+    return tuple(str(lookup(report, f)) for f in key_fields)
+
+
+def drift(old, new, rtol: float, atol: float) -> tuple[float, bool]:
+    """(relative drift, within_tolerance) for a field pair."""
+    if old is None and new is None:
+        return 0.0, True
+    if old is None or new is None:
+        return float("inf"), False
+    old, new = float(old), float(new)
+    if old == new:
+        return 0.0, True
+    denom = max(abs(old), abs(new))
+    rel = abs(new - old) / denom if denom > 0 else float("inf")
+    return rel, abs(new - old) <= atol + rtol * abs(old)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline terapool-runreport-v1 document")
+    ap.add_argument("new", help="fresh terapool-runreport-v1 document")
+    ap.add_argument("--key", default="workload,config,scale",
+                    help="comma-separated pairing fields (default: %(default)s)")
+    ap.add_argument("--rtol", type=float, default=0.0,
+                    help="relative tolerance for timing-derived fields (default: exact)")
+    ap.add_argument("--atol", type=float, default=0.0,
+                    help="absolute tolerance added on top of --rtol (default: %(default)s)")
+    ap.add_argument("--ignore-unmatched", action="store_true",
+                    help="unpaired reports are notes, not failures")
+    args = ap.parse_args()
+
+    try:
+        old_reports = load_reports(Path(args.old))
+        new_reports = load_reports(Path(args.new))
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"report-diff: {e}")
+        return 2
+
+    key_fields = [f.strip() for f in args.key.split(",") if f.strip()]
+    old_by_key: dict[tuple, dict] = {}
+    for r in old_reports:
+        k = key_of(r, key_fields)
+        if k in old_by_key:
+            print(f"report-diff: note: duplicate key {k} in {args.old}; keeping the last")
+        old_by_key[k] = r
+    new_by_key: dict[tuple, dict] = {}
+    for r in new_reports:
+        k = key_of(r, key_fields)
+        if k in new_by_key:
+            print(f"report-diff: note: duplicate key {k} in {args.new}; keeping the last")
+        new_by_key[k] = r
+
+    failures = 0
+    compared = 0
+    for k in sorted(old_by_key):
+        if k not in new_by_key:
+            print(f"report-diff: {'note' if args.ignore_unmatched else 'FAIL'}: "
+                  f"{k} only in {args.old}")
+            failures += 0 if args.ignore_unmatched else 1
+            continue
+        old_r, new_r = old_by_key[k], new_by_key[k]
+        compared += 1
+        rows = []
+        for field in EXACT_FIELDS:
+            rel, ok = drift(lookup(old_r, field), lookup(new_r, field), 0.0, 0.0)
+            if not ok:
+                rows.append((field, rel, "EXACT-DRIFT"))
+        for field in TOLERANT_FIELDS:
+            rel, ok = drift(lookup(old_r, field), lookup(new_r, field), args.rtol, args.atol)
+            if not ok:
+                rows.append((field, rel, "DRIFT"))
+        # Identity fields that should rarely change silently.
+        for field in ("fingerprint", "engine_threads", "verdict.status"):
+            a, b = lookup(old_r, field), lookup(new_r, field)
+            if a != b:
+                rows.append((field, float("nan"), f"{a!r} -> {b!r}"))
+        label = " / ".join(k)
+        if rows:
+            failures += 1
+            print(f"  {label}: {len(rows)} drifting field(s)")
+            for field, rel, status in rows:
+                a, b = lookup(old_r, field), lookup(new_r, field)
+                extra = "" if rel != rel else f"  ({rel:+.2%} rel)".replace("+", "")
+                print(f"    {field:<28} {a} -> {b}{extra}  {status}")
+        else:
+            print(f"  {label}: ok")
+    for k in sorted(set(new_by_key) - set(old_by_key)):
+        print(f"report-diff: {'note' if args.ignore_unmatched else 'FAIL'}: "
+              f"{k} only in {args.new} (new coverage)")
+        failures += 0 if args.ignore_unmatched else 1
+
+    if compared == 0:
+        print("report-diff: no comparable reports — check --key")
+        return 1
+    if failures:
+        print(f"\nreport-diff: FAIL — {failures} report pair(s) drifted "
+              f"(rtol {args.rtol}, atol {args.atol})")
+        return 1
+    print(f"\nreport-diff: OK — {compared} report pair(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
