@@ -26,6 +26,7 @@ use terapool::dma::hbm_image_clear;
 use terapool::isa::Program;
 use terapool::kernels::axpy::{build, AxpyParams};
 use terapool::kernels::double_buffer::{self, DbKernel, DbParams};
+use terapool::session::Session;
 
 /// One benchmark configuration's outcome, destined for the JSON report.
 struct Row {
@@ -203,6 +204,119 @@ fn main() {
         );
         rows.push(Row::new("db-axpy-1024", threads, &r, db_mcycles, serial.median_ms));
     }
+
+    // Idle-heavy barrier-ping trace: 200 bulk-synchronous phases with
+    // nothing but the arrival atomic per phase, on a config whose
+    // barrier wake-up broadcast is long — almost every simulated cycle
+    // is fully quiescent (all PEs parked, one scheduled release event).
+    // These are exactly the spans the engines' event-driven idle-cycle
+    // fast-forward jumps in O(1); EXPERIMENTS.md §Perf sets ≥ 5× over
+    // the unskipped engine on this trace.
+    let mut idle_cfg = ClusterConfig::terapool(9);
+    idle_cfg.barrier_wakeup = 128;
+    let idle_programs = |cfg: &ClusterConfig| -> Vec<Program> {
+        (0..cfg.num_pes())
+            .map(|_| {
+                let mut p = Program::new();
+                for phase in 0..200u16 {
+                    p.barrier(phase);
+                }
+                p.halt();
+                p
+            })
+            .collect()
+    };
+    let mut idle_cycles = 0u64;
+    let noskip = util::bench("idle-heavy 200 barriers on 1024 PEs (skip off)", 3, || {
+        let mut cl = Cluster::new(idle_cfg.clone(), idle_programs(&idle_cfg));
+        cl.fast_forward = false;
+        idle_cycles = cl.run(10_000_000).cycles;
+        idle_cycles
+    });
+    let idle_mcycles = (idle_cycles * 1024) as f64 / 1e6;
+    util::report_rate("PE-cycles", idle_mcycles, "M", noskip.median_ms);
+    rows.push(Row {
+        engine: "serial-noskip".into(),
+        ..Row::new("idle-heavy", 1, &noskip, idle_mcycles, noskip.median_ms)
+    });
+
+    let skip = util::bench("idle-heavy 200 barriers on 1024 PEs (skip on)", 3, || {
+        let mut cl = Cluster::new(idle_cfg.clone(), idle_programs(&idle_cfg));
+        let cycles = cl.run(10_000_000).cycles;
+        assert_eq!(cycles, idle_cycles, "fast-forward must not change the cycle count");
+        cycles
+    });
+    util::report_rate("PE-cycles", idle_mcycles, "M", skip.median_ms);
+    println!(
+        "  ↳ idle-skip speedup vs unskipped serial: {:.2}x (target ≥ 5x)",
+        noskip.median_ms / skip.median_ms
+    );
+    rows.push(Row {
+        engine: "serial".into(),
+        ..Row::new("idle-heavy", 1, &skip, idle_mcycles, noskip.median_ms)
+    });
+
+    for (threads, ff, engine) in [(8usize, false, "sharded-8-noskip"), (8, true, "sharded-8")] {
+        let r = util::bench(
+            &format!(
+                "idle-heavy 200 barriers on 1024 PEs ({threads} threads, skip {})",
+                if ff { "on" } else { "off" }
+            ),
+            3,
+            || {
+                let mut cl = Cluster::new(idle_cfg.clone(), idle_programs(&idle_cfg));
+                cl.fast_forward = ff;
+                let cycles = cl.run_parallel(10_000_000, threads).cycles;
+                assert_eq!(cycles, idle_cycles, "engines must agree on the idle-heavy trace");
+                cycles
+            },
+        );
+        util::report_rate("PE-cycles", idle_mcycles, "M", r.median_ms);
+        println!(
+            "  ↳ speedup vs unskipped serial: {:.2}x",
+            noskip.median_ms / r.median_ms
+        );
+        rows.push(Row {
+            engine: engine.into(),
+            ..Row::new("idle-heavy", threads, &r, idle_mcycles, noskip.median_ms)
+        });
+    }
+
+    // Estimate-vs-exact: the calibrated analytic fast path against the
+    // cycle-accurate engine on full-scale AXPY. The row's speedup column
+    // is the wall-clock ratio; the printed accuracy is the |Δcycles|
+    // relative error the estimate gate holds to ≤ 10% in CI.
+    let exact_session = Session::new(cfg.clone());
+    let mut exact_cycles = 0u64;
+    let exact = util::bench("axpy full-scale (cycle-accurate)", 3, || {
+        let r = exact_session.run_named("axpy").expect("exact axpy run");
+        exact_cycles = r.stats.cycles;
+        exact_cycles
+    });
+    let est_session = Session::new(cfg.clone()).estimating(true);
+    let mut est_cycles = 0u64;
+    let est = util::bench("axpy full-scale (estimate)", 3, || {
+        let r = est_session.run_named("axpy").expect("estimate axpy run");
+        est_cycles = r.stats.cycles;
+        est_cycles
+    });
+    let err = (est_cycles as f64 - exact_cycles as f64).abs() / exact_cycles as f64;
+    println!(
+        "  ↳ estimate vs exact: {:.2}x wall-clock, cycles {est_cycles} vs {exact_cycles} \
+         ({:.1}% error, gate ≤ 10%)",
+        exact.median_ms / est.median_ms,
+        err * 100.0
+    );
+    rows.push(Row {
+        engine: "estimate".into(),
+        ..Row::new(
+            "estimate-axpy",
+            1,
+            &est,
+            (est_cycles * 1024) as f64 / 1e6,
+            exact.median_ms,
+        )
+    });
 
     write_json(&rows, host_cores);
 }

@@ -320,8 +320,18 @@ impl HierSpec {
     /// Expected contention (cycles beyond zero-load) for a level-ℓ
     /// request under all-PEs-inject-every-cycle traffic (p = 1).
     pub fn level_contention(&self, level: usize) -> f64 {
-        let p_level = self.level_prob(level);
-        if p_level == 0.0 {
+        self.level_contention_at(level, self.level_prob(level))
+    }
+
+    /// Expected contention for a level-ℓ request when each PE injects a
+    /// level-ℓ request with per-cycle probability `p_level` — the
+    /// generalization of [`HierSpec::level_contention`] (which fixes
+    /// `p_level = level_prob(level)`, the all-PEs-inject-every-cycle
+    /// burst). `Session::estimate` feeds measured per-class injection
+    /// rates from a workload census through this to predict contention
+    /// off the saturation point.
+    pub fn level_contention_at(&self, level: usize, p_level: f64) -> f64 {
+        if p_level <= 0.0 {
             return 0.0;
         }
         match self.level_route(level) {
@@ -770,6 +780,21 @@ mod tests {
         // Flat 1024×4096 at p = 1: the paper's 1.13 AMAT ⇒ 0.13 contention.
         let e = expected_latency_n_to_k(1024, 4096, 1.0);
         assert!((e - 0.13).abs() < 0.01, "flat contention {e}");
+    }
+
+    #[test]
+    fn level_contention_at_generalizes_burst_rate() {
+        let tp = HierSpec::terapool();
+        for l in 0..4 {
+            // At the burst rate the generalization is the original.
+            let a = tp.level_contention(l);
+            let b = tp.level_contention_at(l, tp.level_prob(l));
+            assert!((a - b).abs() < 1e-12, "level {l}: {a} vs {b}");
+            // Lighter traffic never contends more, and zero not at all.
+            let light = tp.level_contention_at(l, tp.level_prob(l) * 0.1);
+            assert!(light <= a + 1e-12, "level {l}: {light} > {a}");
+            assert_eq!(tp.level_contention_at(l, 0.0), 0.0);
+        }
     }
 
     #[test]

@@ -32,11 +32,11 @@
 use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
-use crate::dma::DmaSubsystem;
+use crate::dma::{DmaSubsystem, DmaWake};
 use crate::interconnect::{Interconnect, ReqKind, Request, Response, Topology, XferEvent};
 use crate::isa::Program;
 use crate::memory::{AddressMap, L1Memory};
-use crate::pe::{Action, Pe, PeStats};
+use crate::pe::{Action, Pe, PeState, PeStats};
 
 /// Word offset inside each Tile's sequential region reserved for the
 /// barrier arrival counter (kernel traces must not touch it).
@@ -99,6 +99,15 @@ pub struct Cluster {
     barriers: HashMap<u16, BarrierSlot>,
     dma_waiters: Vec<(u32, u16)>,
     pub cycle: u64,
+    /// Event-driven idle-cycle skipping (on by default): when nothing
+    /// can change until a scheduled event — every PE parked or halted,
+    /// no request in flight, no DMA burst queued — both engines jump
+    /// the cycle counter to the next wake event in O(parked PEs)
+    /// instead of stepping the whole cluster once per empty cycle.
+    /// Results are bit-identical either way (the differential suite
+    /// runs the skip against the stepped engines); turn it off to
+    /// benchmark the skip itself or to bisect a suspected skip bug.
+    pub fast_forward: bool,
 }
 
 impl Cluster {
@@ -123,6 +132,7 @@ impl Cluster {
             barriers: HashMap::new(),
             dma_waiters: Vec::new(),
             cycle: 0,
+            fast_forward: true,
         }
     }
 
@@ -318,6 +328,91 @@ impl Cluster {
             && self.dma.as_ref().map(|d| d.idle()).unwrap_or(true)
     }
 
+    /// Earliest *scheduled* event a quiescent cluster can wake on — a
+    /// barrier release or an HBM burst completion — or `None` when
+    /// something rules the skip out: a fully-arrived barrier whose
+    /// release is not scheduled yet (the next step schedules it), a
+    /// queued DMA burst (per-cycle arbitration), or an event due this
+    /// very cycle. `limit` doubles as the deadlock target: a quiescent
+    /// cluster with no event scheduled at all can only run out its
+    /// cycle budget, and jumping straight there is exactly what
+    /// stepping the empty cycles one by one would do.
+    ///
+    /// Shared by both engines: the serial skip wraps it with the PE /
+    /// interconnect quiescence checks, the sharded coordinator feeds it
+    /// the same barrier map and DMA subsystem it already owns.
+    fn next_wake_cycle(
+        barriers: &HashMap<u16, BarrierSlot>,
+        dma: &Option<DmaSubsystem>,
+        expected: u32,
+        now: u64,
+        limit: u64,
+    ) -> Option<u64> {
+        let mut wake = limit;
+        for slot in barriers.values() {
+            if slot.arrived == expected && slot.release_at.is_none() {
+                return None;
+            }
+            if let Some(at) = slot.release_at {
+                if at <= now {
+                    return None;
+                }
+                wake = wake.min(at);
+            }
+        }
+        if let Some(d) = dma.as_ref() {
+            match d.next_wake() {
+                DmaWake::Busy => return None,
+                DmaWake::At(at) => {
+                    if at <= now {
+                        return None;
+                    }
+                    wake = wake.min(at);
+                }
+                DmaWake::Idle => {}
+            }
+        }
+        (wake > now).then_some(wake)
+    }
+
+    /// Serial-engine skip decision: `Some(wake)` when the cluster is
+    /// quiescent — no PE runnable, nothing in flight or pending in the
+    /// memory system, no DMA burst queued, no waiter owed a wake — and
+    /// the next scheduled event (clamped to `max_cycles`) lies strictly
+    /// ahead. During such a span every [`Cluster::step`] is a no-op
+    /// except for the parked PEs' per-cycle `Synch` stall charge, which
+    /// [`Cluster::skip_idle_span`] credits in one update.
+    fn idle_skip_target(&self, max_cycles: u64) -> Option<u64> {
+        if self.pes.iter().any(|p| p.state == PeState::Running) {
+            return None;
+        }
+        if self.icn.inflight() != 0 || self.icn.has_pending() {
+            return None;
+        }
+        if let Some(d) = self.dma.as_ref() {
+            // A waiter whose descriptor already retired is woken by the
+            // next step's DMA-progress sweep — that step must run.
+            if self.dma_waiters.iter().any(|&(_, id)| d.is_done(id)) {
+                return None;
+            }
+        }
+        let expected = self.pes.len() as u32;
+        Self::next_wake_cycle(&self.barriers, &self.dma, expected, self.cycle, max_cycles)
+    }
+
+    /// Jump the serial engine to `wake`, crediting each parked PE with
+    /// the skipped span's synch stalls — the only state a quiescent
+    /// span mutates.
+    fn skip_idle_span(&mut self, wake: u64) {
+        let span = wake - self.cycle;
+        for pe in self.pes.iter_mut() {
+            if matches!(pe.state, PeState::AtBarrier | PeState::WaitDma) {
+                pe.note_idle_span(span);
+            }
+        }
+        self.cycle = wake;
+    }
+
     /// Run to completion (or `max_cycles`); returns aggregated stats.
     /// Panics on a timeout — harness entry points that must not compare a
     /// half-finished memory image use [`Cluster::try_run_threads`], which
@@ -331,6 +426,12 @@ impl Cluster {
     /// the cluster is not [`Cluster::done`] after `max_cycles`.
     pub fn try_run(&mut self, max_cycles: u64) -> crate::errors::Result<RunStats> {
         while !self.done() && self.cycle < max_cycles {
+            if self.fast_forward {
+                if let Some(wake) = self.idle_skip_target(max_cycles) {
+                    self.skip_idle_span(wake);
+                    continue;
+                }
+            }
             self.step();
         }
         if !self.done() {
@@ -403,6 +504,7 @@ impl Cluster {
         let expected = self.pes.len() as u32;
         let wakeup = self.cfg.barrier_wakeup as u64;
         let has_dma = self.dma.is_some();
+        let fast_forward = self.fast_forward;
 
         let channels: Vec<WorkerChannel> = (0..workers)
             .map(|w| WorkerChannel::new((w * pes_per_worker) as u32, workers))
@@ -427,9 +529,11 @@ impl Cluster {
             barriers,
             dma_waiters,
             cycle,
+            fast_forward: _,
         } = self;
 
         let init_busy = pes.iter().any(|p| !p.done());
+        let init_runnable = pes.iter().any(|p| p.state == PeState::Running);
 
         // Carry-over from earlier serial stepping on the same cluster:
         // requests alive in the memory system, already-drained responses,
@@ -514,6 +618,7 @@ impl Cluster {
             // pre-spawn state (workers have produced nothing yet).
             let mut root = CycleSummary {
                 busy: init_busy,
+                runnable: init_runnable,
                 events: seed_events,
                 ..CycleSummary::default()
             };
@@ -521,6 +626,12 @@ impl Cluster {
             let mut seeds_cleared = false;
             // Recycled staging buffer for outbound burst words.
             let mut out_words: Vec<f32> = Vec::new();
+            // Recycled inbound-job buffers: the workers only read the
+            // jobs during their cycle top, so by the time the
+            // coordinator holds the write lock again the data Vecs are
+            // dead capacity — harvest them instead of reallocating one
+            // per burst per cycle.
+            let mut job_pool: Vec<Vec<f32>> = Vec::new();
 
             loop {
                 let now = *cycle;
@@ -587,6 +698,38 @@ impl Cluster {
                 }
                 root.arrivals.clear();
 
+                // (d2) Idle-cycle fast-forward: with no PE runnable after
+                // the last phase 1, nothing in flight or published, and
+                // no DMA burst queued, the cluster is quiescent — every
+                // cycle until the next scheduled event (barrier release /
+                // HBM completion) would only re-charge the parked PEs'
+                // synch stalls. Jump `now` there; the workers credit the
+                // skipped span via the control block's `skip` field at
+                // their next cycle top, then the wake cycle itself runs
+                // normally (its release/retirement publishes below use
+                // the advanced `now`). The first iteration never skips:
+                // its cycle top consumes the mixed-engine seeds (e.g. a
+                // DmaWait parked on an already-retired descriptor must
+                // wake *this* cycle, as the serial engine would).
+                // Clamped to `max_cycles - 1` so the final budgeted
+                // cycle executes normally — its per-parked-PE stall and
+                // the `cycle` advance to `max_cycles` land exactly as in
+                // the serial engine's timeout path.
+                let mut skip = 0u64;
+                if fast_forward && !first && !root.runnable && inflight == 0 && root.events == 0
+                {
+                    let limit = max_cycles.saturating_sub(1);
+                    if let Some(wake) =
+                        Self::next_wake_cycle(barriers, dma, expected, now, limit)
+                    {
+                        skip = wake - now;
+                    }
+                }
+                let now = now + skip;
+                if skip > 0 {
+                    *cycle = now;
+                }
+
                 // (e) Publish this cycle's control block: barrier
                 // releases, DMA retirements and inbound data-movement
                 // jobs.
@@ -598,8 +741,13 @@ impl Cluster {
                     // carries the pre-retired-descriptor seed instead).
                     cb.dma_done.clear();
                 }
-                cb.dma_jobs.clear();
+                for job in cb.dma_jobs.drain(..) {
+                    let mut buf = job.data;
+                    buf.clear();
+                    job_pool.push(buf);
+                }
                 cb.releases.clear();
+                cb.skip = skip;
                 if let Some(d) = dma.as_mut() {
                     // DMA timing step: channel arbitration and burst
                     // issue stay serial. Inbound bursts become jobs whose
@@ -614,7 +762,8 @@ impl Cluster {
                     d.step_events(now, |ev| match ev {
                         DmaEvent::Issue { l1_word, words, mem_byte, to_l1 } => {
                             if to_l1 {
-                                let mut data = Vec::with_capacity(words as usize);
+                                let mut data = job_pool.pop().unwrap_or_default();
+                                data.reserve(words as usize);
                                 data.extend(
                                     (0..words)
                                         .map(|w| hbm_image_read(mem_byte + w as u64 * 4)),

@@ -84,6 +84,21 @@ struct Backend {
     queue: VecDeque<Burst>,
 }
 
+/// What the DMA subsystem is waiting on — the engines' idle-skip wake
+/// query ([`DmaSubsystem::next_wake`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaWake {
+    /// A burst sits in a backend queue: issue arbitration (and the AXI
+    /// port's occupancy/stall accounting) runs every cycle, so the span
+    /// is not skippable.
+    Busy,
+    /// Backends are drained; quiet until the earliest in-flight HBM
+    /// burst completes at this cycle.
+    At(u64),
+    /// Nothing queued or in flight.
+    Idle,
+}
+
 /// The DMA subsystem: descriptors + midend split + 16 backends + HBM.
 pub struct DmaSubsystem {
     pub hbm: Hbm,
@@ -95,6 +110,10 @@ pub struct DmaSubsystem {
     frontend_free: u64,
     /// Recycled burst staging buffer for the functional data movement.
     word_buf: Vec<f32>,
+    /// Recycled completion-id scratch for [`DmaSubsystem::step_events`]
+    /// (one retirement sweep per simulated cycle — keep it off the
+    /// allocator).
+    completed_scratch: Vec<u64>,
     // geometry
     interleaved_base: u32,
     num_banks: usize,
@@ -117,6 +136,7 @@ impl DmaSubsystem {
             free_inflight: Vec::new(),
             frontend_free: 0,
             word_buf: Vec::new(),
+            completed_scratch: Vec::new(),
             interleaved_base: cfg.seq_words_total() as u32,
             num_banks: cfg.num_banks(),
             banks_per_subgroup: cfg.banks_per_subgroup(),
@@ -195,6 +215,22 @@ impl DmaSubsystem {
             .all(|(_, s)| matches!(s, DescState::Registered | DescState::Done { .. }))
     }
 
+    /// When does the DMA subsystem next need a cycle? See [`DmaWake`].
+    /// Conservative on purpose: any queued burst reports `Busy` even if
+    /// its descriptor's `ready_at` lies in the future, because once a
+    /// queue head is ready the per-cycle arbitration (including
+    /// `AxiPort::note_stall` accounting on blocked cycles) must run
+    /// every cycle to stay bit-identical with the stepped engine.
+    pub fn next_wake(&self) -> DmaWake {
+        if self.backends.iter().any(|b| !b.queue.is_empty()) {
+            return DmaWake::Busy;
+        }
+        match self.hbm.next_completion_at() {
+            Some(at) => DmaWake::At(at),
+            None => DmaWake::Idle,
+        }
+    }
+
     /// Advance the timing model one cycle: retire HBM completions and
     /// issue new bursts from the backend queues, reporting every decision
     /// through `sink` ([`DmaEvent`]). This is the **serial core** of a DMA
@@ -204,9 +240,10 @@ impl DmaSubsystem {
     /// engine has always moved data.
     pub fn step_events(&mut self, now: u64, mut sink: impl FnMut(DmaEvent)) {
         // 1. Completions coming back from the memory controller.
-        let mut done_ids: Vec<u64> = Vec::new();
+        let mut done_ids = std::mem::take(&mut self.completed_scratch);
+        done_ids.clear();
         self.hbm.take_completed(now, |bid| done_ids.push(bid));
-        for bid in done_ids {
+        for &bid in &done_ids {
             let b = self.inflight[bid as usize];
             self.free_inflight.push(bid as u32);
             self.backends[b.backend as usize].port.retire();
@@ -219,6 +256,7 @@ impl DmaSubsystem {
                 }
             }
         }
+        self.completed_scratch = done_ids;
 
         // 2. Issue from backend queues (≤1 burst per backend per cycle,
         //    bounded by the 512-bit port's beat rate and outstanding cap).

@@ -1,0 +1,615 @@
+//! `Session::estimate()` — the calibrated analytic fast path.
+//!
+//! Predicts a workload's [`RunStats`] without running the cycle-accurate
+//! engine at the target scale, in three layers:
+//!
+//! 1. **Exact census** ([`model_run`], the `census` half): every PE
+//!    program is linear (branches fall through with a refetch bubble;
+//!    the first `Halt` ends the trace), so instruction, FLOP, load /
+//!    store / atomic and per-NUMA-class request counts are *computable*,
+//!    not estimated — the census replays the engine's own counting rules
+//!    (`Pe::count_issue`, `route_action`, `Topology::classify`) over the
+//!    static trace. These fields land in the report bit-exact, which is
+//!    what lets `tools/report_diff.py` hold them to zero drift.
+//! 2. **Analytic schedule** (the timing half): a per-PE O(ops)
+//!    mini-schedule replays the core's issue rules — RAW/WAW readiness,
+//!    the `tx_table_entries` LSU cap, the post-branch `CTRL_BUBBLE` —
+//!    against per-class effective latencies `L(c) = zero_load(c) +
+//!    contention(c)`, with contention from the paper's closed-form
+//!    arbitration model (`amat::HierSpec::level_contention_at`) at the
+//!    census-derived injection rates. Barrier-delimited segments combine
+//!    bulk-synchronously: each phase costs the slowest PE's segment plus
+//!    the arrival + wake-up overhead, and the headroom of faster PEs is
+//!    charged to their predicted `stall_synch`.
+//! 3. **Calibration** ([`calibrated_stats`]): one cycle-accurate run at
+//!    `Scale::Fast` anchors the model. Every approximate field F is
+//!    reported as `actual_fast(F) × model_target(F) / model_fast(F)` —
+//!    systematic model bias cancels in the ratio, so the estimate is
+//!    *exact by construction* when the target scale is the calibration
+//!    scale, and tracks the engine to the stated bound (EXPERIMENTS.md
+//!    §Estimate accuracy: 10 % relative on off-saturation configs) when
+//!    extrapolating to full scale.
+//!
+//! The model intentionally does not chase saturated interconnect rows
+//! (where closed-form contention diverges, see `amat.rs`) or cycle-level
+//! DMA arbitration — the double-buffered workloads get a coarse
+//! bandwidth model and lean on calibration.
+
+use std::collections::HashMap;
+
+use crate::amat::HierSpec;
+use crate::cluster::{RunStats, BARRIER_SLOT};
+use crate::config::ClusterConfig;
+use crate::dma::CONFIG_CYCLES;
+use crate::isa::{Op, OpClass, Program, CTRL_BUBBLE, NUM_REGS};
+use crate::kernels::Staged;
+use crate::memory::AddressMap;
+
+/// Exact static counts over a staged workload (see module docs, layer 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Census {
+    pub instructions: u64,
+    pub flops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub atomics: u64,
+    pub branches: u64,
+    /// Barrier arrivals over all PEs.
+    pub barriers: u64,
+    /// L1 requests per NUMA class — loads, stores, explicit atomics and
+    /// the barrier-arrival atomics, classified exactly as
+    /// `cluster::route_action` would.
+    pub reqs_per_class: [u64; 4],
+    /// Bytes the trace's `DmaStart`s will move through the HBML.
+    pub dma_bytes: u64,
+}
+
+/// Census + analytic-schedule prediction for one staged workload.
+#[derive(Debug, Clone)]
+pub struct ModelRun {
+    pub census: Census,
+    pub cycles: f64,
+    pub stall_raw: f64,
+    pub stall_lsu: f64,
+    /// Exact: every branch costs precisely `CTRL_BUBBLE` refetch stalls.
+    pub stall_ctrl: f64,
+    pub stall_synch: f64,
+    pub amat: f64,
+    pub amat_per_class: [f64; 4],
+}
+
+/// NUMA classification mirroring `interconnect::Topology::classify` —
+/// kept as plain math on the config so the estimate does not need to
+/// build an interconnect.
+#[derive(Clone, Copy)]
+struct Numa {
+    tiles_per_subgroup: usize,
+    tiles_per_group: usize,
+    banks_per_tile: usize,
+    pes_per_tile: usize,
+}
+
+impl Numa {
+    fn new(cfg: &ClusterConfig) -> Self {
+        Numa {
+            tiles_per_subgroup: cfg.hierarchy.tiles_per_subgroup,
+            tiles_per_group: cfg.hierarchy.tiles_per_group(),
+            banks_per_tile: cfg.banks_per_tile(),
+            pes_per_tile: cfg.hierarchy.pes_per_tile,
+        }
+    }
+
+    fn classify(&self, src_tile: usize, dst_tile: usize) -> usize {
+        if src_tile == dst_tile {
+            return 0; // Local
+        }
+        if src_tile / self.tiles_per_group != dst_tile / self.tiles_per_group {
+            return 3; // RemoteGroup
+        }
+        let s_sg = (src_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+        let d_sg = (dst_tile % self.tiles_per_group) / self.tiles_per_subgroup;
+        if s_sg == d_sg {
+            1 // SubGroup
+        } else {
+            2 // Group
+        }
+    }
+
+    /// Class of a word access issued from `tile`.
+    fn class_of(&self, map: &AddressMap, tile: usize, addr: u32) -> usize {
+        let dst = map.map(addr).bank as usize / self.banks_per_tile;
+        self.classify(tile, dst)
+    }
+}
+
+/// The engine's NUMA classes onto the [`HierSpec`] contention levels.
+/// `HierSpec` collapses degenerate hierarchy levels (β, γ or δ = 1)
+/// while the engine always reports four classes; a class's level is the
+/// number of *live* hierarchy crossings at or below it. Classes whose
+/// crossing is degenerate can never carry traffic, so their mapping is
+/// moot.
+fn level_of_class(spec: &HierSpec, class: usize) -> usize {
+    let mut level = 0;
+    if class >= 1 && spec.beta > 1 {
+        level += 1;
+    }
+    if class >= 2 && spec.gamma > 1 {
+        level += 1;
+    }
+    if class >= 3 && spec.delta > 1 {
+        level += 1;
+    }
+    level
+}
+
+fn hier_of(cfg: &ClusterConfig) -> HierSpec {
+    let h = &cfg.hierarchy;
+    HierSpec {
+        alpha: h.pes_per_tile,
+        beta: h.tiles_per_subgroup,
+        gamma: h.subgroups_per_group,
+        delta: h.groups,
+        banking: cfg.banking_factor,
+    }
+}
+
+/// Coarse HBML transfer time (cluster cycles) for one descriptor:
+/// frontend CSR programming, the burst stream at peak main-memory
+/// bandwidth, and one access latency's worth of pipeline fill. The
+/// per-cycle AXI/channel arbitration is deliberately not modeled —
+/// calibration absorbs the residual.
+fn dma_cycles(cfg: &ClusterConfig, words: u32) -> f64 {
+    let bytes = words as f64 * 4.0;
+    // peak GB/s = bytes/ns; at freq_mhz the cluster sees
+    // peak × 1000 / freq bytes per cycle.
+    let bytes_per_cycle = cfg.ddr.peak_gbps_total() * 1000.0 / cfg.freq_mhz;
+    CONFIG_CYCLES as f64 + bytes / bytes_per_cycle.max(1e-9) + 100.0
+}
+
+/// One PE's analytic schedule: barrier-delimited busy segments plus
+/// per-cause stall predictions.
+#[derive(Debug, Clone, Default)]
+struct PeSched {
+    /// Busy duration of each barrier-delimited phase; the last entry is
+    /// the post-final-barrier (or whole-trace) segment including the
+    /// outstanding-request drain.
+    segments: Vec<f64>,
+    stall_raw: f64,
+    stall_lsu: f64,
+    /// DmaWait park time (the barrier share of synch stalls is computed
+    /// across PEs in [`model_run`]).
+    dma_wait: f64,
+}
+
+/// Replay one program against per-class effective latencies (module
+/// docs, layer 2). `lat[c]` is the full round-trip a class-`c` request
+/// holds its transaction-table entry and destination register for.
+fn schedule_pe(
+    prog: &Program,
+    tile: usize,
+    map: &AddressMap,
+    numa: &Numa,
+    lat: &[f64; 4],
+    tx_cap: usize,
+    dma_len: &HashMap<u16, f64>,
+) -> PeSched {
+    let mut s = PeSched::default();
+    let mut t = 0.0f64;
+    let mut ready = [0.0f64; NUM_REGS];
+    let mut tx: Vec<f64> = Vec::with_capacity(tx_cap);
+    // Descriptor completion times on this PE's segment-local clock.
+    let mut dma_done: HashMap<u16, f64> = HashMap::new();
+
+    // Wait until a transaction-table slot frees (the engine's Lsu stall).
+    fn tx_admit(tx: &mut Vec<f64>, t: &mut f64, cap: usize, stall_lsu: &mut f64) {
+        tx.retain(|&c| c > *t);
+        if tx.len() >= cap {
+            let earliest = tx.iter().copied().fold(f64::INFINITY, f64::min);
+            if earliest > *t {
+                *stall_lsu += earliest - *t;
+                *t = earliest;
+            }
+            tx.retain(|&c| c > *t);
+        }
+    }
+
+    for op in &prog.ops {
+        match *op {
+            Op::Ld { rd, addr } => {
+                let rd = rd as usize;
+                if ready[rd] > t {
+                    s.stall_raw += ready[rd] - t; // WAW on the in-flight load
+                    t = ready[rd];
+                }
+                tx_admit(&mut tx, &mut t, tx_cap, &mut s.stall_lsu);
+                let done = t + lat[numa.class_of(map, tile, addr)];
+                tx.push(done);
+                ready[rd] = done;
+                t += 1.0;
+            }
+            Op::St { rs, addr } | Op::AtomAdd { rs, addr } => {
+                let rs = rs as usize;
+                if ready[rs] > t {
+                    s.stall_raw += ready[rs] - t;
+                    t = ready[rs];
+                }
+                tx_admit(&mut tx, &mut t, tx_cap, &mut s.stall_lsu);
+                tx.push(t + lat[numa.class_of(map, tile, addr)]);
+                t += 1.0;
+            }
+            Op::LdImm { rd, .. } => {
+                let rd = rd as usize;
+                if ready[rd] > t {
+                    s.stall_raw += ready[rd] - t;
+                    t = ready[rd];
+                }
+                t += 1.0;
+            }
+            Op::Fmac { rd, ra, rb }
+            | Op::Fnmac { rd, ra, rb }
+            | Op::Mul { rd, ra, rb }
+            | Op::Add { rd, ra, rb }
+            | Op::Sub { rd, ra, rb } => {
+                let need = ready[ra as usize].max(ready[rb as usize]).max(ready[rd as usize]);
+                if need > t {
+                    s.stall_raw += need - t;
+                    t = need;
+                }
+                t += 1.0;
+            }
+            Op::Mov { rd, ra } => {
+                let need = ready[ra as usize].max(ready[rd as usize]);
+                if need > t {
+                    s.stall_raw += need - t;
+                    t = need;
+                }
+                t += 1.0;
+            }
+            Op::Alu => t += 1.0,
+            Op::Branch => t += 1.0 + CTRL_BUBBLE as f64,
+            Op::Barrier { .. } => {
+                tx_admit(&mut tx, &mut t, tx_cap, &mut s.stall_lsu);
+                // Segment ends when the arrival atomic lands on the
+                // (Tile-local) counter bank.
+                let seg_end = t + 1.0 + lat[0];
+                s.segments.push(seg_end);
+                t = 0.0;
+                ready = [0.0; NUM_REGS];
+                tx.clear();
+                // Transfers keep streaming through the barrier park:
+                // rebase their completion onto the new segment's clock
+                // (the park lasts at least until this segment's end).
+                for v in dma_done.values_mut() {
+                    *v = (*v - seg_end).max(0.0);
+                }
+            }
+            Op::DmaStart { id } => {
+                t += 1.0;
+                if let Some(&len) = dma_len.get(&id) {
+                    dma_done.insert(id, t + len);
+                }
+            }
+            Op::DmaWait { id } => {
+                t += 1.0;
+                if let Some(&done) = dma_done.get(&id) {
+                    if done > t {
+                        s.dma_wait += done - t;
+                        t = done;
+                    }
+                }
+            }
+            Op::Halt => break,
+        }
+    }
+    // Final segment: the trace plus the drain of outstanding requests.
+    let drain = tx.iter().copied().fold(t, f64::max);
+    s.segments.push(drain);
+    s
+}
+
+/// Exact census + analytic timing model of one staged workload on `cfg`
+/// (module docs, layers 1–2).
+pub fn model_run(cfg: &ClusterConfig, staged: &Staged) -> ModelRun {
+    let map = AddressMap::new(cfg);
+    let numa = Numa::new(cfg);
+    let spec = hier_of(cfg);
+    let num_pes = cfg.num_pes().max(1);
+
+    // Descriptor transfer-time table for the schedule's DmaStart/DmaWait.
+    let mut dma_len: HashMap<u16, f64> = HashMap::new();
+    let mut desc_bytes: HashMap<u16, u64> = HashMap::new();
+    if let Some(plan) = &staged.dma {
+        for (i, d) in plan.descriptors.iter().enumerate() {
+            dma_len.insert(i as u16, dma_cycles(cfg, d.words));
+            desc_bytes.insert(i as u16, d.words as u64 * 4);
+        }
+    }
+
+    // ---- layer 1: exact census -------------------------------------
+    let mut c = Census::default();
+    for (pe, prog) in staged.programs.iter().enumerate() {
+        let tile = pe / numa.pes_per_tile;
+        for op in &prog.ops {
+            if matches!(op, Op::Halt) {
+                break; // Halt retires the PE without issuing.
+            }
+            c.instructions += 1;
+            c.flops += op.flops();
+            match op.class() {
+                OpClass::Load => c.loads += 1,
+                OpClass::Store => c.stores += 1,
+                OpClass::Atomic => c.atomics += 1,
+                OpClass::Control => c.branches += 1,
+                OpClass::Compute | OpClass::Sync => {}
+            }
+            match *op {
+                Op::Ld { addr, .. } | Op::St { addr, .. } | Op::AtomAdd { addr, .. } => {
+                    c.reqs_per_class[numa.class_of(&map, tile, addr)] += 1;
+                }
+                Op::Barrier { .. } => {
+                    c.barriers += 1;
+                    let addr = map.seq_base_of_tile(tile) + BARRIER_SLOT;
+                    c.reqs_per_class[numa.class_of(&map, tile, addr)] += 1;
+                }
+                Op::DmaStart { id } => {
+                    c.dma_bytes += desc_bytes.get(&id).copied().unwrap_or(0);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ---- layer 2: two-pass analytic schedule -----------------------
+    let zero_load = [
+        cfg.latency.local as f64,
+        cfg.latency.subgroup as f64,
+        cfg.latency.group as f64,
+        cfg.latency.remote_group as f64,
+    ];
+    let tx_cap = cfg.tx_table_entries.max(1);
+
+    // Pass 1 at zero-load latencies: a busy-cycle floor that turns the
+    // census into per-class injection rates.
+    let sched_all = |lat: &[f64; 4]| -> Vec<PeSched> {
+        staged
+            .programs
+            .iter()
+            .enumerate()
+            .map(|(pe, p)| {
+                schedule_pe(p, pe / numa.pes_per_tile, &map, &numa, lat, tx_cap, &dma_len)
+            })
+            .collect()
+    };
+    let pass1 = sched_all(&zero_load);
+    let busy_mean = (pass1
+        .iter()
+        .map(|s| s.segments.iter().sum::<f64>())
+        .sum::<f64>()
+        / num_pes as f64)
+        .max(1.0);
+
+    // Closed-form contention at the census rates (Eqs. (4)–(6) through
+    // `level_contention_at`), mapped back onto the engine's classes.
+    let mut contention = [0.0f64; 4];
+    let mut lat_eff = zero_load;
+    for cls in 0..4 {
+        let rate = (c.reqs_per_class[cls] as f64 / num_pes as f64 / busy_mean).min(1.0);
+        contention[cls] = spec.level_contention_at(level_of_class(&spec, cls), rate);
+        lat_eff[cls] += contention[cls];
+    }
+
+    // Pass 2 at effective latencies: the schedule the estimate reports.
+    let pass2 = sched_all(&lat_eff);
+
+    // Bulk-synchronous phase assembly: each phase costs its slowest PE,
+    // the headroom of the others is their barrier synch stall, and each
+    // release costs the configured wake-up broadcast latency.
+    let n_phases = pass2.iter().map(|s| s.segments.len()).max().unwrap_or(1);
+    let wakeup = cfg.barrier_wakeup as f64;
+    let mut cycles = 0.0;
+    let mut stall_synch = 0.0;
+    for k in 0..n_phases {
+        let seg = |s: &PeSched| s.segments.get(k).copied();
+        let longest = pass2.iter().filter_map(seg).fold(0.0f64, f64::max);
+        let barrier_phase = k + 1 < n_phases;
+        for s in &pass2 {
+            if let Some(mine) = seg(s) {
+                if barrier_phase {
+                    stall_synch += (longest - mine) + wakeup;
+                }
+            }
+        }
+        cycles += longest + if barrier_phase { wakeup + 1.0 } else { 0.0 };
+    }
+    let stall_raw: f64 = pass2.iter().map(|s| s.stall_raw).sum();
+    let stall_lsu: f64 = pass2.iter().map(|s| s.stall_lsu).sum();
+    stall_synch += pass2.iter().map(|s| s.dma_wait).sum::<f64>();
+
+    // AMAT straight from the model: zero-load plus contention, weighted
+    // by the exact class mix.
+    let mut amat_per_class = [0.0f64; 4];
+    let mut amat_num = 0.0;
+    let total_reqs: u64 = c.reqs_per_class.iter().sum();
+    for cls in 0..4 {
+        if c.reqs_per_class[cls] > 0 {
+            amat_per_class[cls] = zero_load[cls] + contention[cls];
+            amat_num += amat_per_class[cls] * c.reqs_per_class[cls] as f64;
+        }
+    }
+    let amat = if total_reqs == 0 { 0.0 } else { amat_num / total_reqs as f64 };
+
+    ModelRun {
+        census: c,
+        cycles: cycles.max(1.0),
+        stall_raw,
+        stall_lsu,
+        stall_ctrl: (c.branches * CTRL_BUBBLE as u64) as f64,
+        stall_synch,
+        amat,
+        amat_per_class,
+    }
+}
+
+/// Ratio calibration (module docs, layer 3): report
+/// `actual × model_target / model_fast`, falling back to the raw model
+/// when either anchor is degenerate (a field the calibration run never
+/// exercised).
+fn blend(actual: f64, model_target: f64, model_fast: f64) -> f64 {
+    if model_fast > 0.0 {
+        actual * model_target / model_fast
+    } else if model_target > 0.0 {
+        model_target
+    } else {
+        actual
+    }
+}
+
+/// Assemble the estimated [`RunStats`] for the target-scale build
+/// `target` from the calibration anchor (`fast_actual` measured on the
+/// `fast_model` build). Census-backed fields are exact at the target
+/// scale; timing fields are ratio-calibrated; `stall_ctrl` is exact by
+/// construction. When the target build *is* the calibration build every
+/// ratio is 1 and the estimate reproduces the measurement.
+pub fn calibrated_stats(
+    cfg: &ClusterConfig,
+    target: &ModelRun,
+    fast_actual: &RunStats,
+    fast_model: &ModelRun,
+) -> RunStats {
+    let c = &target.census;
+    let cycles = blend(fast_actual.cycles as f64, target.cycles, fast_model.cycles)
+        .round()
+        .max(1.0) as u64;
+    let mut amat_per_class = [0.0f64; 4];
+    for cls in 0..4 {
+        if c.reqs_per_class[cls] > 0 {
+            amat_per_class[cls] = blend(
+                fast_actual.amat_per_class[cls],
+                target.amat_per_class[cls],
+                fast_model.amat_per_class[cls],
+            );
+        }
+    }
+    RunStats {
+        cycles,
+        instructions: c.instructions,
+        flops: c.flops,
+        num_pes: cfg.num_pes(),
+        freq_mhz: cfg.freq_mhz,
+        stall_raw: blend(fast_actual.stall_raw as f64, target.stall_raw, fast_model.stall_raw)
+            .round() as u64,
+        stall_lsu: blend(fast_actual.stall_lsu as f64, target.stall_lsu, fast_model.stall_lsu)
+            .round() as u64,
+        stall_ctrl: c.branches * CTRL_BUBBLE as u64,
+        stall_synch: blend(
+            fast_actual.stall_synch as f64,
+            target.stall_synch,
+            fast_model.stall_synch,
+        )
+        .round() as u64,
+        loads: c.loads,
+        stores: c.stores,
+        atomics: c.atomics,
+        amat: blend(fast_actual.amat, target.amat, fast_model.amat),
+        amat_per_class,
+        reqs_per_class: c.reqs_per_class,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, Scale};
+    use crate::kernels::axpy::{Axpy, AxpyParams};
+    use crate::kernels::Workload;
+
+    /// The census half must reproduce the engine's exact counters —
+    /// that is what makes the EXACT fields of `report_diff` hold at
+    /// zero drift between estimate and measurement.
+    #[test]
+    fn census_matches_engine_exact_counts() {
+        let cfg = ClusterConfig::tiny();
+        for w in ["axpy", "dotp", "gemm"] {
+            let w = crate::kernels::lookup(w).unwrap();
+            let staged = w.build(&cfg, Scale::Fast);
+            let m = model_run(&cfg, &staged);
+            let (mut cl, io) = staged.into_cluster(cfg.clone());
+            let stats = cl.try_run(50_000_000).unwrap();
+            assert_eq!(m.census.instructions, stats.instructions, "{}", io.name);
+            assert_eq!(m.census.flops, stats.flops, "{}", io.name);
+            assert_eq!(m.census.loads, stats.loads, "{}", io.name);
+            assert_eq!(m.census.stores, stats.stores, "{}", io.name);
+            assert_eq!(m.census.atomics, stats.atomics, "{}", io.name);
+            assert_eq!(m.census.reqs_per_class, stats.reqs_per_class, "{}", io.name);
+            assert_eq!(
+                m.stall_ctrl as u64, stats.stall_ctrl,
+                "{}: branch bubbles are exact",
+                io.name
+            );
+        }
+    }
+
+    /// Calibrating against the very build being estimated collapses
+    /// every ratio to 1: the estimate must reproduce the measurement.
+    #[test]
+    fn estimate_is_exact_at_calibration_scale() {
+        let cfg = ClusterConfig::tiny();
+        let w = Axpy::default();
+        let staged = w.build(&cfg, Scale::Fast);
+        let m = model_run(&cfg, &staged);
+        let (mut cl, _) = staged.into_cluster(cfg.clone());
+        let actual = cl.try_run(50_000_000).unwrap();
+        let est = calibrated_stats(&cfg, &m, &actual, &m);
+        assert_eq!(est, actual);
+    }
+
+    /// The headline accuracy property: calibrate on a small instance,
+    /// extrapolate 8× — the prediction must track the engine within the
+    /// stated bound on an off-saturation (local-traffic) config.
+    #[test]
+    fn extrapolated_cycles_within_bound() {
+        let cfg = ClusterConfig::tiny();
+        let nb = cfg.num_banks();
+        let small = Axpy::with(AxpyParams { n: nb * 4, alpha: 2.0 });
+        let big = Axpy::with(AxpyParams { n: nb * 32, alpha: 2.0 });
+
+        let staged_small = small.build(&cfg, Scale::Fast);
+        let m_small = model_run(&cfg, &staged_small);
+        let (mut cl, _) = staged_small.into_cluster(cfg.clone());
+        let actual_small = cl.try_run(50_000_000).unwrap();
+
+        let staged_big = big.build(&cfg, Scale::Fast);
+        let m_big = model_run(&cfg, &staged_big);
+        let est = calibrated_stats(&cfg, &m_big, &actual_small, &m_small);
+
+        let (mut cl, _) = staged_big.into_cluster(cfg.clone());
+        let actual_big = cl.try_run(50_000_000).unwrap();
+
+        let rel = |e: u64, a: u64| (e as f64 - a as f64).abs() / a as f64;
+        assert!(
+            rel(est.cycles, actual_big.cycles) < 0.10,
+            "cycles: est {} vs actual {}",
+            est.cycles,
+            actual_big.cycles
+        );
+        // Exact fields carry zero drift by construction.
+        assert_eq!(est.instructions, actual_big.instructions);
+        assert_eq!(est.reqs_per_class, actual_big.reqs_per_class);
+    }
+
+    #[test]
+    fn class_level_mapping_collapses_with_hierarchy() {
+        // tiny is 4C-2T-2SG-2G: four live levels, identity mapping.
+        let spec = hier_of(&ClusterConfig::tiny());
+        assert_eq!(spec.levels(), 4);
+        for cls in 0..4 {
+            assert_eq!(level_of_class(&spec, cls), cls);
+        }
+        // mempool is 4C-16T-1SG-4G: three levels; the engine's
+        // RemoteGroup class contends at HierSpec level 2.
+        let spec = hier_of(&ClusterConfig::mempool());
+        assert_eq!(spec.levels(), 3);
+        assert_eq!(level_of_class(&spec, 3), 2);
+        assert_eq!(level_of_class(&spec, 1), 1);
+    }
+}

@@ -210,6 +210,16 @@ impl Hbm {
         self.completions.len()
     }
 
+    /// Earliest scheduled burst completion, if any — the engines'
+    /// idle-skip wake query. Completion stamps are resolved fully at
+    /// [`Hbm::submit`] time (bus occupancy, refresh windows and row
+    /// misses are all folded into the absolute cycle pushed on the
+    /// heap), so a peek is exact: no per-cycle HBM state advances
+    /// between `submit` and the completion popping out.
+    pub fn next_completion_at(&self) -> Option<u64> {
+        self.completions.peek().map(|&Reverse((at, _))| at)
+    }
+
     /// Total bytes transferred so far.
     pub fn total_bytes(&self) -> u64 {
         self.channels.iter().map(|c| c.bytes).sum()

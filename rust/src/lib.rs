@@ -59,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dma;
 pub mod errors;
+pub mod estimate;
 pub mod hbm;
 pub mod interconnect;
 pub mod isa;

@@ -30,10 +30,11 @@ use terapool::session::{Job, Session};
 use terapool::{bail, ensure};
 
 const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N] [--json PATH]
+       terapool sweep [--fast] [--estimate] [--json PATH]
        terapool --list
 experiments:
   table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
-  table5 table6 scaling headline all validate
+  table5 table6 scaling headline all validate sweep
   ablate-txtable ablate-addrmap ablate-spill
 options:
   --fast        reduced problem sizes (smoke runs, CI)
@@ -44,6 +45,14 @@ options:
   --json PATH   write every RunReport of this invocation (config
                 fingerprint, stats, per-class interconnect numbers,
                 validation verdict) as terapool-runreport-v1 JSON
+  --no-skip     disable engine idle-cycle fast-forward (results are
+                bit-identical either way; this exists for differential
+                and speedup measurements)
+  --estimate    route runs through the calibrated analytic fast path
+                (Session::estimating): exact census, model timing,
+                one fast-scale cycle-accurate calibration run per job.
+                Compare vs a cycle-accurate sweep with
+                tools/report_diff.py --rtol 0.10
   --list        enumerate registered workloads and experiments";
 
 fn main() -> Result<()> {
@@ -58,6 +67,8 @@ fn main() -> Result<()> {
         .transpose()?
         .unwrap_or(1);
     let json_path = parse_value(&args, "--json")?;
+    let no_skip = args.iter().any(|a| a == "--no-skip");
+    let estimate = args.iter().any(|a| a == "--estimate");
 
     if args.iter().any(|a| a == "--list") {
         print_list();
@@ -74,7 +85,11 @@ fn main() -> Result<()> {
 
     // The single Session every cluster-simulator experiment runs
     // through; its accumulated RunReports become the --json document.
-    let session = Session::new(ClusterConfig::terapool(9)).scale(scale).threads(threads);
+    let session = Session::new(ClusterConfig::terapool(9))
+        .scale(scale)
+        .threads(threads)
+        .fast_forward(!no_skip)
+        .estimating(estimate);
     let mut reports: Vec<RunReport> = Vec::new();
 
     // Dispatch, but write the --json document even when the command
@@ -126,6 +141,7 @@ fn dispatch(
             coordinator::headline(session).print();
         }
         "validate" => validate(scale, threads, reports)?,
+        "sweep" => sweep(session)?,
         "ablate-txtable" => ablate_txtable(session),
         "ablate-addrmap" => ablate_addrmap(session),
         "ablate-spill" => ablate_spill(session),
@@ -284,6 +300,45 @@ fn validate(scale: Scale, threads: usize, reports: &mut Vec<RunReport>) -> Resul
     }
 
     println!("\nvalidate: all cluster-simulator results match their references");
+    Ok(())
+}
+
+/// Table-6 config × kernel sweep through the session's run path. One
+/// command serves both sides of the estimate-accuracy CI gate: run it
+/// plain for the cycle-accurate reference, run it with `--estimate` for
+/// the analytic fast path, and hold the two documents together with
+/// `tools/report_diff.py --rtol 0.10` (census-backed fields are
+/// compared exactly; cycles/stalls/AMAT to the stated bound).
+fn sweep(s: &Session) -> Result<()> {
+    use terapool::report::{f2, int, Table};
+    let configs = [
+        ClusterConfig::tiny(),
+        ClusterConfig::mempool(),
+        ClusterConfig::occamy(),
+        ClusterConfig::terapool(9),
+    ];
+    let mut t = Table::new(
+        "Sweep — Table-6 configs × kernels (Session run path)",
+        &["Config", "Kernel", "Cycles", "IPC", "AMAT", "Path"],
+    );
+    for cfg in &configs {
+        for kernel in ["axpy", "dotp"] {
+            let r = s.run_on(cfg, &*kernels::lookup(kernel)?)?;
+            let path = match &r.estimate {
+                Some(e) => format!("estimate (residual {:.3})", e.model_residual),
+                None => "cycle-accurate".into(),
+            };
+            t.row(vec![
+                cfg.name.clone(),
+                kernel.into(),
+                int(r.stats.cycles),
+                f2(r.stats.ipc()),
+                f2(r.stats.amat),
+                path,
+            ]);
+        }
+    }
+    t.print();
     Ok(())
 }
 

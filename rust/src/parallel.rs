@@ -55,7 +55,7 @@ use std::sync::{Mutex, MutexGuard, RwLock};
 use crate::cluster::{route_action, RoutedAction};
 use crate::interconnect::{Interconnect, Response, TileDomain, XferEvent};
 use crate::memory::L1Memory;
-use crate::pe::{Action, Pe};
+use crate::pe::{Action, Pe, PeState};
 use crate::stats::IdCounts;
 
 /// Default worker-thread count for harness code (tests, benches,
@@ -193,6 +193,12 @@ impl<T: Copy> Mailbox<T> {
 pub struct CycleSummary {
     /// Any PE in the merged range still live.
     pub busy: bool,
+    /// Any PE in the merged range in `PeState::Running` *after* this
+    /// cycle's phase 1 — the consensus signal for the coordinator's
+    /// idle-cycle fast-forward. Distinct from `busy`, which stays true
+    /// for parked (barrier/DMA-waiting) PEs: a cluster can be busy yet
+    /// have nothing to do until a scheduled event.
+    pub runnable: bool,
     /// Responses + transfer events published to mailboxes this cycle
     /// (unconsumed until the next cycle top).
     pub events: u64,
@@ -206,6 +212,7 @@ pub struct CycleSummary {
 impl CycleSummary {
     fn reset(&mut self) {
         self.busy = false;
+        self.runnable = false;
         self.events = 0;
         self.arrivals.clear();
         self.dma_ops.clear();
@@ -214,10 +221,12 @@ impl CycleSummary {
     /// Fold `other` (a higher-indexed worker's subtree) into this one.
     pub fn absorb(&mut self, other: &mut CycleSummary) {
         self.busy |= other.busy;
+        self.runnable |= other.runnable;
         self.events += other.events;
         self.arrivals.absorb(&other.arrivals);
         self.dma_ops.append(&mut other.dma_ops);
         other.busy = false;
+        other.runnable = false;
         other.events = 0;
         other.arrivals.clear();
     }
@@ -242,6 +251,12 @@ pub struct DmaJob {
 /// consumed/cleared after the first parallel cycle.
 #[derive(Default)]
 pub struct ControlBlock {
+    /// Idle cycles fast-forwarded over since the workers' last cycle:
+    /// the coordinator found the cluster quiescent and jumped the cycle
+    /// counter by this span. Each worker credits its own parked PEs
+    /// with the span's synch stalls at its cycle top — the only
+    /// per-cycle state a quiescent span would have mutated.
+    pub skip: u64,
     /// Barrier ids whose release broadcast fires this cycle; each worker
     /// wakes its own waiters.
     pub releases: Vec<u16>,
@@ -432,6 +447,19 @@ pub fn worker_loop(
             // ---- cycle top: owner-computes delivery -------------------
             let cb = ctx.ctrl.read().unwrap();
 
+            // Idle-cycle fast-forward: the coordinator jumped the clock
+            // over `cb.skip` fully quiescent cycles. Credit each of my
+            // parked PEs with the stall_synch ticks it would have
+            // accumulated polling through them one by one — nothing else
+            // in a quiescent cycle touches worker state.
+            if cb.skip > 0 {
+                for pe in pes.iter_mut() {
+                    if matches!(pe.state, PeState::AtBarrier | PeState::WaitDma) {
+                        pe.note_idle_span(cb.skip);
+                    }
+                }
+            }
+
             // Seeds (non-empty only on the first cycle after a
             // mixed-engine hand-off): carried-over undelivered responses,
             // parked PEs, parked DMA waiters.
@@ -519,6 +547,7 @@ pub fn worker_loop(
             // (6) Phase 1: issue every owned PE in index order, bucketing
             // memory actions straight into the issuing Tile's domain.
             let mut busy = false;
+            let mut runnable = false;
             let mut births: i64 = 0;
             for (i, pe) in pes.iter_mut().enumerate() {
                 let action = pe.try_issue();
@@ -555,6 +584,7 @@ pub fn worker_loop(
                     }
                 }
                 busy |= !pe.done();
+                runnable |= pe.state == PeState::Running;
             }
 
             // (7) Phase 2: per-shard arbitration + bank accesses in
@@ -595,6 +625,7 @@ pub fn worker_loop(
             }
             ch.inflight.fetch_add(births - deaths, Ordering::SeqCst);
             summary.busy = busy;
+            summary.runnable = runnable;
             summary.events = events;
 
             // (8) Summary reduction: fold every child subtree (ascending
@@ -773,24 +804,28 @@ mod tests {
         let op = |pe: u32| (pe, Action::DmaStart { id: pe as u16 });
         let mut w0 = CycleSummary {
             busy: false,
+            runnable: false,
             events: 1,
             arrivals: IdCounts::default(),
             dma_ops: vec![op(0)],
         };
         let mut w1 = CycleSummary {
             busy: true,
+            runnable: true,
             events: 2,
             arrivals: IdCounts::default(),
             dma_ops: vec![op(8)],
         };
         let mut w2 = CycleSummary {
             busy: false,
+            runnable: false,
             events: 0,
             arrivals: IdCounts::default(),
             dma_ops: vec![op(16)],
         };
         let mut w3 = CycleSummary {
             busy: false,
+            runnable: false,
             events: 4,
             arrivals: IdCounts::default(),
             dma_ops: vec![op(24)],
@@ -803,6 +838,8 @@ mod tests {
         w2.absorb(&mut w3);
         w0.absorb(&mut w2);
         assert!(w0.busy);
+        assert!(w0.runnable, "runnable merges like busy");
+        assert!(!w1.runnable, "absorb drains the child");
         assert_eq!(w0.events, 7);
         let pes: Vec<u32> = w0.dma_ops.iter().map(|&(pe, _)| pe).collect();
         assert_eq!(pes, vec![0, 8, 16, 24], "global PE order");

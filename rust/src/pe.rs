@@ -148,6 +148,19 @@ impl Pe {
         Action::None
     }
 
+    /// Credit `span` cycles of barrier/DMA wait in one update. The
+    /// engines' idle-cycle fast-forward calls this instead of polling
+    /// [`Pe::try_issue`] once per skipped cycle, which would charge the
+    /// identical `StallCause::Synch` stall `span` times — the only
+    /// per-cycle state a parked PE mutates.
+    pub fn note_idle_span(&mut self, span: u64) {
+        debug_assert!(
+            matches!(self.state, PeState::AtBarrier | PeState::WaitDma),
+            "idle-span credit on a non-parked PE"
+        );
+        self.stats.stall_synch += span;
+    }
+
     fn count_issue(&mut self, op: &Op) {
         self.stats.issued += 1;
         self.stats.flops += op.flops();

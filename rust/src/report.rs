@@ -366,6 +366,44 @@ impl Verdict {
     }
 }
 
+/// Provenance of an analytic estimate (`Session::estimating`): which
+/// scale anchored the calibration, how long the anchor run took, how far
+/// the uncalibrated model sat from that anchor, and the error bound the
+/// estimate is stated to (what `tools/report_diff.py --rtol` should be
+/// asked to hold it to against a cycle-accurate sweep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimateInfo {
+    /// Scale tag of the calibration run, e.g. `fast`.
+    pub calibration_scale: String,
+    /// Measured cycles of the calibration run.
+    pub calibration_cycles: u64,
+    /// |model − measured| / measured cycles at the calibration scale —
+    /// the residual the ratio calibration cancelled.
+    pub model_residual: f64,
+    /// Relative tolerance the estimate is stated to (EXPERIMENTS.md).
+    pub stated_rtol: f64,
+}
+
+impl EstimateInfo {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("calibration_scale".into(), Json::Str(self.calibration_scale.clone())),
+            ("calibration_cycles".into(), Json::Num(self.calibration_cycles as f64)),
+            ("model_residual".into(), Json::Num(self.model_residual)),
+            ("stated_rtol".into(), Json::Num(self.stated_rtol)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<EstimateInfo> {
+        Ok(EstimateInfo {
+            calibration_scale: j.field_str("calibration_scale")?,
+            calibration_cycles: j.field_u64("calibration_cycles")?,
+            model_residual: j.field_f64("model_residual")?,
+            stated_rtol: j.field_f64("stated_rtol")?,
+        })
+    }
+}
+
 /// Everything one `Session` run produces: identity (workload instance +
 /// registry kind + config name + config fingerprint + scale), engine
 /// choice, the full [`RunStats`] (including per-class AMAT / request
@@ -390,6 +428,9 @@ pub struct RunReport {
     /// HBML bytes moved (None when the run had no DMA subsystem).
     pub dma_bytes: Option<u64>,
     pub verdict: Verdict,
+    /// Calibration provenance when the stats came from the analytic
+    /// fast path rather than a cycle-accurate run.
+    pub estimate: Option<EstimateInfo>,
 }
 
 impl RunReport {
@@ -437,6 +478,13 @@ impl RunReport {
                 },
             ),
             ("verdict".into(), self.verdict.to_json()),
+            (
+                "estimate".into(),
+                match &self.estimate {
+                    Some(e) => e.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -489,6 +537,10 @@ impl RunReport {
             verdict: Verdict::from_json(
                 j.get("verdict").ok_or_else(|| err!("missing verdict"))?,
             )?,
+            estimate: match j.get("estimate") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(EstimateInfo::from_json(v)?),
+            },
         })
     }
 }

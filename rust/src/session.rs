@@ -39,7 +39,7 @@ use std::sync::Mutex;
 use crate::config::{ClusterConfig, Scale};
 use crate::errors::Result;
 use crate::kernels::{self, Workload};
-use crate::report::{RunReport, Verdict};
+use crate::report::{EstimateInfo, RunReport, Verdict};
 
 /// A config delta applied to a copy of a [`Job`]'s base config at run
 /// time.
@@ -98,13 +98,15 @@ pub struct Session {
     max_cycles: u64,
     force_dma: bool,
     checking: bool,
+    fast_forward: bool,
+    estimating: bool,
     reports: Mutex<Vec<RunReport>>,
 }
 
 impl Session {
     /// A session over `cfg` with the defaults harness code wants:
     /// full scale, one host thread, 2 G max cycles, no forced HBML, no
-    /// reference checking.
+    /// reference checking, idle-cycle fast-forward on.
     pub fn new(cfg: ClusterConfig) -> Self {
         Session {
             cfg,
@@ -113,6 +115,8 @@ impl Session {
             max_cycles: 2_000_000_000,
             force_dma: false,
             checking: false,
+            fast_forward: true,
+            estimating: false,
             reports: Mutex::new(Vec::new()),
         }
     }
@@ -148,6 +152,25 @@ impl Session {
         self
     }
 
+    /// Engine idle-cycle fast-forward (on by default; the results are
+    /// bit-identical either way — `rust/tests/parallel_equiv.rs`).
+    /// `--no-skip` exists so the differential suite and the simspeed
+    /// bench can measure the unskipped engine.
+    pub fn fast_forward(mut self, on: bool) -> Self {
+        self.fast_forward = on;
+        self
+    }
+
+    /// Route runs through the calibrated analytic fast path
+    /// ([`crate::estimate`]) instead of the cycle-accurate engine at the
+    /// target scale: exact instruction/traffic census, model-predicted
+    /// timing, ratio-calibrated against one cycle-accurate run at
+    /// [`Scale::Fast`]. Reports carry [`EstimateInfo`] provenance.
+    pub fn estimating(mut self, on: bool) -> Self {
+        self.estimating = on;
+        self
+    }
+
     pub fn current_scale(&self) -> Scale {
         self.scale
     }
@@ -170,7 +193,11 @@ impl Session {
     /// Run one workload on an explicit config (ablations sweep config
     /// knobs without rebuilding the session).
     pub fn run_on(&self, cfg: &ClusterConfig, w: &dyn Workload) -> Result<RunReport> {
-        let r = self.run_inner(cfg, w, self.threads);
+        let r = if self.estimating {
+            self.estimate_inner(cfg, w)
+        } else {
+            self.run_inner(cfg, w, self.threads)
+        };
         if let Ok(rep) = &r {
             self.reports.lock().unwrap().push(rep.clone());
         }
@@ -189,7 +216,12 @@ impl Session {
     /// reference engine; see the module docs).
     pub fn run_batch(&self, jobs: &[Job]) -> Vec<Result<RunReport>> {
         let results = crate::parallel::scatter(jobs.len(), self.threads, |i| {
-            self.run_inner(&jobs[i].effective_cfg(), &*jobs[i].workload, 1)
+            let cfg = jobs[i].effective_cfg();
+            if self.estimating {
+                self.estimate_inner(&cfg, &*jobs[i].workload)
+            } else {
+                self.run_inner(&cfg, &*jobs[i].workload, 1)
+            }
         });
         let mut acc = self.reports.lock().unwrap();
         for r in results.iter().flatten() {
@@ -223,6 +255,7 @@ impl Session {
         if self.force_dma && cl.dma.is_none() {
             cl = cl.with_dma();
         }
+        cl.fast_forward = self.fast_forward;
         let stats = cl
             .try_run_threads(self.max_cycles, engine_threads)
             .map_err(|e| e.prefixed(&io.name))?;
@@ -242,6 +275,57 @@ impl Session {
             stats,
             dma_bytes: cl.dma.as_ref().map(|d| d.total_bytes()),
             verdict,
+            estimate: None,
+        })
+    }
+
+    /// The analytic fast path (see [`crate::estimate`]): census + model
+    /// the target-scale build, calibrate against one cycle-accurate run
+    /// of the same workload at [`Scale::Fast`], and report the blended
+    /// stats with provenance. No cluster is ever built at the target
+    /// scale — for a TeraPool-sized config this is the difference
+    /// between seconds and hours.
+    fn estimate_inner(&self, cfg: &ClusterConfig, w: &dyn Workload) -> Result<RunReport> {
+        let target_staged = w.build(cfg, self.scale);
+        let name = target_staged.name.clone();
+        let has_dma = target_staged.dma.is_some() || self.force_dma;
+        let target_model = crate::estimate::model_run(cfg, &target_staged);
+        drop(target_staged);
+
+        // Calibration anchor: the same workload at fast scale, measured
+        // cycle-accurately, plus the model of that exact build.
+        let fast_staged = w.build(cfg, Scale::Fast);
+        let fast_model = crate::estimate::model_run(cfg, &fast_staged);
+        let (mut cl, io) = fast_staged.into_cluster(cfg.clone());
+        if self.force_dma && cl.dma.is_none() {
+            cl = cl.with_dma();
+        }
+        cl.fast_forward = self.fast_forward;
+        let fast_actual = cl
+            .try_run_threads(self.max_cycles, self.threads)
+            .map_err(|e| e.prefixed(&io.name))?;
+
+        let stats =
+            crate::estimate::calibrated_stats(cfg, &target_model, &fast_actual, &fast_model);
+        let residual = (fast_model.cycles - fast_actual.cycles as f64).abs()
+            / (fast_actual.cycles as f64).max(1.0);
+        Ok(RunReport {
+            workload: name,
+            kind: w.kind().to_string(),
+            config: cfg.name.clone(),
+            fingerprint: cfg.fingerprint(),
+            scale: self.scale.tag().to_string(),
+            engine_threads: self.threads,
+            max_cycles: self.max_cycles,
+            stats,
+            dma_bytes: if has_dma { Some(target_model.census.dma_bytes) } else { None },
+            verdict: Verdict::NotChecked,
+            estimate: Some(EstimateInfo {
+                calibration_scale: Scale::Fast.tag().to_string(),
+                calibration_cycles: fast_actual.cycles,
+                model_residual: residual,
+                stated_rtol: 0.10,
+            }),
         })
     }
 }
@@ -274,6 +358,24 @@ mod tests {
         let e = s.run_named("axpy").unwrap_err();
         assert_eq!(e.kind(), ErrorKind::MaxCyclesExceeded);
         assert!(s.reports().is_empty(), "failed runs must not be reported");
+    }
+
+    #[test]
+    fn estimate_reports_provenance_and_exact_census() {
+        let cfg = ClusterConfig::tiny();
+        // Target scale == calibration scale: the ratio calibration
+        // collapses and the estimate must equal the measurement.
+        let est = Session::new(cfg.clone()).scale(Scale::Fast).estimating(true);
+        let exact = Session::new(cfg).scale(Scale::Fast);
+        let re = est.run_named("axpy").unwrap();
+        let rx = exact.run_named("axpy").unwrap();
+        assert_eq!(re.stats, rx.stats);
+        let info = re.estimate.as_ref().expect("estimate runs carry provenance");
+        assert_eq!(info.calibration_scale, "fast");
+        assert_eq!(info.calibration_cycles, rx.stats.cycles);
+        assert!(info.model_residual >= 0.0);
+        assert_eq!(info.stated_rtol, 0.10);
+        assert!(rx.estimate.is_none(), "cycle-accurate runs carry none");
     }
 
     #[test]

@@ -304,6 +304,110 @@ fn dma_trace_identical_across_engines() {
     }
 }
 
+/// Idle-heavy differential: a sparse barrier-ping trace whose phases are
+/// dominated by fully quiescent drain gaps — one straggler grinds
+/// through long Alu/Branch chains while every other PE parks at the
+/// barrier, and a cluster-wide `DmaWait` parks *all* PEs behind a
+/// streaming transfer. Exactly the spans the engines' idle-cycle
+/// fast-forward jumps. The skip must be unobservable: `RunStats` and the
+/// memory image bit-identical between `fast_forward` on and off, on the
+/// serial engine and at 1/8/16 worker threads.
+#[test]
+fn idle_heavy_fast_forward_is_bit_identical() {
+    for cfg in [ClusterConfig::tiny(), ClusterConfig::mempool()] {
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let hot = base;
+        let out = base + cfg.num_banks() as u32;
+        // DMA L1 targets must sit on a 256-word SubGroup-run boundary
+        // past the scratch words above.
+        let used = cfg.num_banks() + cfg.num_pes();
+        let dma_l1 = base + (used as u32).div_ceil(256) * 256;
+        let words = 256usize;
+        let data: Vec<f32> = (0..words).map(|i| i as f32 * 0.5).collect();
+        let build = |cfg: &ClusterConfig| -> Vec<Program> {
+            (0..cfg.num_pes())
+                .map(|i| {
+                    let mut p = Program::new();
+                    p.ld_imm(1, 1.0);
+                    // Three barrier-ping phases, each with a long drain
+                    // gap: everyone else arrives immediately and sits
+                    // parked while PE 0 grinds.
+                    for phase in 0..3u16 {
+                        if i == 0 {
+                            for _ in 0..200 {
+                                p.alu();
+                                p.branch();
+                            }
+                        }
+                        p.atom_add(1, hot);
+                        p.barrier(phase);
+                    }
+                    // Cluster-wide DMA park: every PE waits on the same
+                    // streaming transfer — zero busy PEs until the HBML
+                    // event lands.
+                    if i == 0 {
+                        p.push(Op::DmaStart { id: 0 });
+                    }
+                    p.push(Op::DmaWait { id: 0 });
+                    p.ld(2, dma_l1 + (i % words) as u32);
+                    p.st(2, out + i as u32);
+                    p.halt();
+                    p
+                })
+                .collect()
+        };
+        let run = |fast_forward: bool, threads: Option<usize>| -> (RunStats, Vec<f32>) {
+            hbm_image_clear();
+            hbm_image_stage(0, &data);
+            let mut cl = Cluster::new(cfg.clone(), build(&cfg)).with_dma();
+            cl.fast_forward = fast_forward;
+            cl.dma.as_mut().unwrap().register(DmaDescriptor {
+                l1_word: dma_l1,
+                mem_byte: 0,
+                words: words as u32,
+                to_l1: true,
+            });
+            let stats = match threads {
+                None => cl.run(5_000_000),
+                Some(t) => cl.run_parallel(5_000_000, t),
+            };
+            let image = cl.l1.read_slice(out, cfg.num_pes());
+            (stats, image)
+        };
+        let (ref_stats, ref_image) = run(false, None);
+        // The trace must actually be idle-heavy, or this test guards
+        // nothing: parked PEs dominate the straggler phases.
+        assert!(
+            ref_stats.stall_synch > ref_stats.cycles,
+            "{}: trace not idle-heavy (synch {} vs cycles {})",
+            cfg.name,
+            ref_stats.stall_synch,
+            ref_stats.cycles
+        );
+        for (ff, threads) in [
+            (true, None),
+            (true, Some(1)),
+            (false, Some(1)),
+            (true, Some(8)),
+            (false, Some(8)),
+            (true, Some(16)),
+            (false, Some(16)),
+        ] {
+            let (stats, image) = run(ff, threads);
+            assert_eq!(
+                ref_stats, stats,
+                "{}: stats diverge (fast_forward={ff}, threads={threads:?})",
+                cfg.name
+            );
+            assert_eq!(
+                ref_image, image,
+                "{}: image diverges (fast_forward={ff}, threads={threads:?})",
+                cfg.name
+            );
+        }
+    }
+}
+
 /// Thread counts beyond the Tile count (and absurd ones) clamp instead
 /// of misbehaving — occamy has a single Tile, so this exercises the
 /// one-worker edge of the sharding.
