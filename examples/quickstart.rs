@@ -48,10 +48,14 @@ fn main() -> Result<()> {
 
     // 3. Pin explicit parameters, or fan a batch of workload×config
     //    jobs out across host threads — results are bit-identical to
-    //    running them sequentially, in job order.
+    //    running them sequentially, in job order. Config knobs ride on
+    //    the per-job ClusterConfig: `with_burst(true)` turns on TCDM
+    //    burst access (multi-word loads/stores, one port grant per run
+    //    of consecutive banks — `--burst` on the CLI).
     let batch = Session::new(cfg.clone()).scale(Scale::Fast).threads(4);
     let jobs = vec![
         Job::new(cfg.clone(), Box::new(Axpy::with(AxpyParams { n: cfg.num_banks() * 8, alpha: 0.5 }))),
+        Job::new(cfg.clone().with_burst(true), Box::new(Axpy::default())),
         Job::new(ClusterConfig::mempool(), Box::new(Axpy::default())),
         Job::new(ClusterConfig::occamy(), Box::new(Axpy::default())),
     ];

@@ -1,0 +1,104 @@
+"""Regression tests for ``tools/report_diff.py``.
+
+The drift check must judge the same symmetric relative drift it prints:
+historically the table showed ``|new - old| / max(|old|, |new|)`` while
+the verdict tested ``|new - old| <= atol + rtol * |old|``, so a pair
+could print a drift within ``--rtol`` yet FAIL (and a zero baseline
+failed every nonzero measurement no matter what the table said).
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+TOOLS = Path(__file__).resolve().parents[2] / "tools"
+sys.path.insert(0, str(TOOLS))
+
+from report_diff import drift  # noqa: E402
+
+
+def test_drift_check_judges_the_printed_number():
+    # rel = 10/110 = 9.09% < rtol: the verdict must agree with the
+    # printed number. Pre-fix this failed (10 <= 0.095 * 100 is False).
+    rel, ok = drift(100.0, 110.0, rtol=0.095, atol=0.0)
+    assert abs(rel - 10.0 / 110.0) < 1e-12
+    assert ok
+
+
+def test_drift_is_symmetric():
+    assert drift(100.0, 110.0, 0.1, 0.0) == drift(110.0, 100.0, 0.1, 0.0)
+    assert drift(100.0, 120.0, 0.1, 0.0)[1] is False
+    assert drift(120.0, 100.0, 0.1, 0.0)[1] is False
+
+
+def test_zero_baseline_uses_symmetric_denominator_and_atol():
+    # A zero baseline yields a finite 100% drift, not a guaranteed FAIL
+    # with an infinite/NaN denominator story.
+    rel, ok = drift(0.0, 4.0, rtol=0.5, atol=0.0)
+    assert rel == 1.0 and not ok
+    # --atol is what admits genuinely-near-zero noise on a zero baseline.
+    assert drift(0.0, 1e-9, rtol=0.0, atol=1e-6)[1]
+    assert drift(0.0, 0.0, 0.0, 0.0) == (0.0, True)
+
+
+def test_missing_fields():
+    assert drift(None, 1.0, 1.0, 1.0) == (float("inf"), False)
+    assert drift(None, None, 0.0, 0.0) == (0.0, True)
+
+
+def _doc(cycles, stall_synch):
+    return {
+        "schema": "terapool-runreport-v1",
+        "reports": [
+            {
+                "workload": "axpy-n128",
+                "config": "tiny",
+                "scale": "fast",
+                "fingerprint": "f00d",
+                "engine_threads": 1,
+                "verdict": {"status": "not_checked", "detail": ""},
+                "stats": {"cycles": cycles, "stall_synch": stall_synch},
+            }
+        ],
+    }
+
+
+def test_cli_zero_baseline_within_atol_exits_clean(tmp_path):
+    old, new = tmp_path / "old.json", tmp_path / "new.json"
+    old.write_text(json.dumps(_doc(1000, 0)))
+    new.write_text(json.dumps(_doc(1005, 3)))  # stall_synch: zero baseline
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(TOOLS / "report_diff.py"),
+            str(old),
+            str(new),
+            "--rtol",
+            "0.01",
+            "--atol",
+            "5",
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_real_drift_still_fails(tmp_path):
+    old, new = tmp_path / "old.json", tmp_path / "new.json"
+    old.write_text(json.dumps(_doc(1000, 0)))
+    new.write_text(json.dumps(_doc(1500, 0)))
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(TOOLS / "report_diff.py"),
+            str(old),
+            str(new),
+            "--rtol",
+            "0.10",
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr

@@ -34,7 +34,7 @@ use std::collections::HashMap;
 use crate::config::ClusterConfig;
 use crate::dma::{DmaSubsystem, DmaWake};
 use crate::interconnect::{Interconnect, ReqKind, Request, Response, Topology, XferEvent};
-use crate::isa::Program;
+use crate::isa::{Program, MAX_BURST_WORDS};
 use crate::memory::{AddressMap, L1Memory};
 use crate::pe::{Action, Pe, PeState, PeStats};
 
@@ -71,6 +71,12 @@ pub struct RunStats {
     /// Measured AMAT per NUMA class.
     pub amat_per_class: [f64; 4],
     pub reqs_per_class: [u64; 4],
+    /// Multi-word (burst) requests per NUMA class — a subset of
+    /// `reqs_per_class`, so `reqs - burst_reqs` is the single-word
+    /// traffic and a burst-off run reports all zeros here.
+    pub burst_reqs_per_class: [u64; 4],
+    /// Words moved by those burst requests.
+    pub burst_words_per_class: [u64; 4],
 }
 
 impl RunStats {
@@ -297,8 +303,10 @@ impl Cluster {
                 route_action(now, i as u32, tile, action, &self.l1.map, self.icn.topo());
             match routed {
                 RoutedAction::None => {}
-                RoutedAction::Mem { req, master_port } => {
-                    self.icn.ingest(tile, req, master_port)
+                RoutedAction::Mem { reqs } => {
+                    for (req, master_port) in reqs.into_iter().flatten() {
+                        self.icn.ingest(tile, req, master_port);
+                    }
                 }
                 RoutedAction::Dma(op) => {
                     let pes = &mut self.pes;
@@ -931,6 +939,18 @@ impl Cluster {
                 ic.per_class[2].count,
                 ic.per_class[3].count,
             ],
+            burst_reqs_per_class: [
+                ic.per_class[0].burst_count,
+                ic.per_class[1].burst_count,
+                ic.per_class[2].burst_count,
+                ic.per_class[3].burst_count,
+            ],
+            burst_words_per_class: [
+                ic.per_class[0].burst_words,
+                ic.per_class[1].burst_words,
+                ic.per_class[2].burst_words,
+                ic.per_class[3].burst_words,
+            ],
         }
     }
 
@@ -951,9 +971,13 @@ impl Cluster {
 /// One PE action resolved against the shared routing function.
 pub(crate) enum RoutedAction {
     None,
-    /// A memory request for the issuing Tile's domain (see
-    /// [`Topology::make_request`] for the `master_port` contract).
-    Mem { req: Request, master_port: Option<u8> },
+    /// Memory request(s) for the issuing Tile's domain (see
+    /// [`Topology::make_request`] for the per-slot `master_port`
+    /// contract). A single-word action fills slot 0; a burst fills one
+    /// slot per consecutive-bank run ([`AddressMap::map_burst`]), in
+    /// ascending-address order. A fixed array keeps the issue path
+    /// allocation-free; consume with `.into_iter().flatten()`.
+    Mem { reqs: [Option<(Request, Option<u8>)>; MAX_BURST_WORDS] },
     /// DMA control (`Action::DmaStart`/`DmaWait`): the serial issue loop
     /// routes both through [`Cluster::dma_control`] directly; the sharded
     /// engine's workers resolve `DmaWait` locally against their
@@ -976,25 +1000,77 @@ pub(crate) fn route_action(
     map: &AddressMap,
     topo: &Topology,
 ) -> RoutedAction {
+    // Slot 0 of the fixed request array (single-word actions).
+    let one = |req: Request, master_port: Option<u8>| {
+        let mut reqs = [None; MAX_BURST_WORDS];
+        reqs[0] = Some((req, master_port));
+        RoutedAction::Mem { reqs }
+    };
     match action {
         Action::None => RoutedAction::None,
         Action::Load { rd, addr } => {
             let bank = map.map(addr);
             let (req, master_port) =
                 topo.make_request(now, pe, tile, ReqKind::Read { rd }, 0.0, bank, 0);
-            RoutedAction::Mem { req, master_port }
+            one(req, master_port)
         }
         Action::Store { value, addr } => {
             let bank = map.map(addr);
             let (req, master_port) =
                 topo.make_request(now, pe, tile, ReqKind::Write, value, bank, 0);
-            RoutedAction::Mem { req, master_port }
+            one(req, master_port)
+        }
+        Action::LoadBurst { rd, addr, n } => {
+            let mut reqs = [None; MAX_BURST_WORDS];
+            let (mut idx, mut off) = (0usize, 0u8);
+            map.map_burst(addr, n, |bank, len| {
+                // Run k targets registers rd+off.. — the split carries
+                // the register window with the addresses.
+                let (mut req, port) =
+                    topo.make_request(now, pe, tile, ReqKind::Read { rd: rd + off }, 0.0, bank, 0);
+                req.words = len;
+                req.last = false;
+                reqs[idx] = Some((req, port));
+                idx += 1;
+                off += len;
+            });
+            if let Some((req, _)) = reqs[idx - 1].as_mut() {
+                req.last = true; // final run releases the tx-table entry
+            }
+            RoutedAction::Mem { reqs }
+        }
+        Action::StoreBurst { addr, n, values } => {
+            let mut reqs = [None; MAX_BURST_WORDS];
+            let (mut idx, mut off) = (0usize, 0u8);
+            map.map_burst(addr, n, |bank, len| {
+                let (mut req, port) = topo.make_request(
+                    now,
+                    pe,
+                    tile,
+                    ReqKind::Write,
+                    values[off as usize],
+                    bank,
+                    0,
+                );
+                req.words = len;
+                req.last = false;
+                for k in 0..len as usize {
+                    req.wdata[k] = values[off as usize + k];
+                }
+                reqs[idx] = Some((req, port));
+                idx += 1;
+                off += len;
+            });
+            if let Some((req, _)) = reqs[idx - 1].as_mut() {
+                req.last = true;
+            }
+            RoutedAction::Mem { reqs }
         }
         Action::AmoAdd { value, addr } => {
             let bank = map.map(addr);
             let (req, master_port) =
                 topo.make_request(now, pe, tile, ReqKind::Amo, value, bank, 0);
-            RoutedAction::Mem { req, master_port }
+            one(req, master_port)
         }
         Action::BarrierArrive { id } => {
             // Barrier-counter word: sequential-region slot 0 of the Tile.
@@ -1002,7 +1078,7 @@ pub(crate) fn route_action(
             let bank = map.map(addr);
             let (req, master_port) =
                 topo.make_request(now, pe, tile, ReqKind::Amo, 1.0, bank, id as u32 + 1);
-            RoutedAction::Mem { req, master_port }
+            one(req, master_port)
         }
         Action::DmaStart { .. } | Action::DmaWait { .. } => RoutedAction::Dma(action),
     }
@@ -1195,6 +1271,143 @@ mod tests {
                 par.l1.read_slice(out, 32),
                 "memory image diverges at {threads} threads"
             );
+        }
+    }
+
+    #[test]
+    fn burst_roundtrip_matches_singles_with_fewer_grants() {
+        // Each PE burst-stores 4 words into its own banking-factor
+        // window, barriers, then burst-loads its neighbour's window.
+        // The memory image must match the single-word program exactly,
+        // and the burst run must not be slower.
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let out = base + 512;
+        let bf = cfg.banking_factor as u32; // 4 = MAX_BURST_WORDS
+        let build = |cfg: &ClusterConfig, burst: bool| {
+            programs_for(cfg, |i| {
+                let window = |pe: u32| base + bf * pe;
+                let mut p = Program::new();
+                for k in 0..bf {
+                    p.ld_imm(1 + k as u8, (i as u32 * 10 + k) as f32);
+                }
+                if burst {
+                    p.st_burst(1, window(i as u32), bf as u8);
+                } else {
+                    for k in 0..bf {
+                        p.st(1 + k as u8, window(i as u32) + k);
+                    }
+                }
+                p.barrier(0);
+                let n = (i as u32 + 1) % cfg.num_pes() as u32;
+                if burst {
+                    p.ld_burst(8, window(n), bf as u8);
+                    p.st_burst(8, out + bf * i as u32, bf as u8);
+                } else {
+                    for k in 0..bf {
+                        p.ld(8 + k as u8, window(n) + k);
+                        p.st(8 + k as u8, out + bf * i as u32 + k);
+                    }
+                }
+                p.halt();
+                p
+            })
+        };
+        let mut single = Cluster::new(cfg.clone(), build(&cfg, false));
+        let s = single.run(100_000);
+        let mut burst = Cluster::new(cfg.clone(), build(&cfg, true));
+        let b = burst.run(100_000);
+        assert_eq!(
+            single.l1.read_slice(out, 128),
+            burst.l1.read_slice(out, 128),
+            "burst and single-word programs must produce the same image"
+        );
+        assert!(b.cycles <= s.cycles, "burst {} > single {}", b.cycles, s.cycles);
+        // Split accounting: the burst run reports its traffic, the
+        // single-word run reports none.
+        assert_eq!(s.burst_reqs_per_class, [0; 4]);
+        assert_eq!(s.burst_words_per_class, [0; 4]);
+        assert!(b.burst_reqs_per_class.iter().sum::<u64>() > 0);
+        for c in 0..4 {
+            assert!(b.burst_reqs_per_class[c] <= b.reqs_per_class[c]);
+        }
+    }
+
+    /// Satellite: ClassStats burst/single split sums exactly to the
+    /// legacy totals on a burst-off run — same trace as an old binary
+    /// would execute, and `reqs - burst_reqs == reqs`.
+    #[test]
+    fn burst_off_run_reports_pure_single_word_traffic() {
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let progs = programs_for(&cfg, |i| {
+            let mut p = Program::new();
+            p.ld_imm(1, i as f32);
+            p.st(1, base + i as u32);
+            p.barrier(0);
+            p.ld(2, base + ((i as u32 + 7) % 32));
+            p.halt();
+            p
+        });
+        let mut cl = Cluster::new(cfg, progs);
+        let stats = cl.run(100_000);
+        assert_eq!(stats.burst_reqs_per_class, [0; 4]);
+        assert_eq!(stats.burst_words_per_class, [0; 4]);
+        let singles: u64 = stats
+            .reqs_per_class
+            .iter()
+            .zip(&stats.burst_reqs_per_class)
+            .map(|(r, b)| r - b)
+            .sum();
+        assert_eq!(singles, stats.reqs_per_class.iter().sum::<u64>());
+    }
+
+    /// Satellite: a burst racing a DMA write into the same banks stays
+    /// deterministic — serial and sharded engines agree bit-for-bit on
+    /// the stats and the final image.
+    #[test]
+    fn burst_racing_dma_write_is_deterministic() {
+        use crate::dma::{hbm_image_clear, hbm_image_stage, DmaDescriptor};
+        let cfg = ClusterConfig::tiny();
+        let base = L1Memory::new(&cfg).map.interleaved_base();
+        let out = base + 512;
+        let bf = cfg.banking_factor as u32;
+        let build = |cfg: &ClusterConfig| {
+            programs_for(cfg, |i| {
+                let mut p = Program::new();
+                if i == 0 {
+                    p.push(Op::DmaStart { id: 0 });
+                }
+                // Racing burst stores into the DMA's destination window
+                // while the transfer is in flight...
+                p.st_burst(1, base + bf * i as u32, bf as u8);
+                p.push(Op::DmaWait { id: 0 });
+                // ...then read the settled words back with a burst.
+                p.ld_burst(4, base + bf * i as u32, bf as u8);
+                p.st_burst(4, out + bf * i as u32, bf as u8);
+                p.halt();
+                p
+            })
+        };
+        let run = |threads: usize| {
+            hbm_image_clear();
+            let data: Vec<f32> = (0..128).map(|i| 1000.0 + i as f32).collect();
+            hbm_image_stage(0, &data);
+            let mut cl = Cluster::new(cfg.clone(), build(&cfg)).with_dma();
+            cl.dma.as_mut().unwrap().register(DmaDescriptor {
+                l1_word: base,
+                mem_byte: 0,
+                words: 128,
+                to_l1: true,
+            });
+            let stats = cl.run_threads(100_000, threads);
+            (stats, cl.l1.read_slice(out, 128))
+        };
+        let (s_stats, s_img) = run(1);
+        for threads in [2usize, 4] {
+            let (p_stats, p_img) = run(threads);
+            assert_eq!(s_stats, p_stats, "stats diverge at {threads} threads");
+            assert_eq!(s_img, p_img, "image diverges at {threads} threads");
         }
     }
 

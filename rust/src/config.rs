@@ -127,6 +127,13 @@ pub struct ClusterConfig {
     /// Barrier wake-up broadcast latency (cycles) after the last arrival —
     /// models the WFI wake propagation through the hierarchy.
     pub barrier_wakeup: u32,
+    /// TCDM burst access (the sequel paper "TCDM Burst Access: Breaking
+    /// the Bandwidth Barrier in Shared-L1 RVV Clusters Beyond 1000
+    /// FPUs"): kernel trace builders emit multi-word `LdBurst`/`StBurst`
+    /// ops where their access patterns allow it, moving up to
+    /// `MAX_BURST_WORDS` words per port grant. Off by default — the
+    /// baseline paper's one-word-per-request interconnect.
+    pub burst: bool,
 }
 
 impl Default for ClusterConfig {
@@ -167,6 +174,7 @@ impl ClusterConfig {
             freq_mhz: freq,
             ddr: DdrRate::G3_6,
             barrier_wakeup: 10,
+            burst: false,
         }
     }
 
@@ -194,6 +202,7 @@ impl ClusterConfig {
             freq_mhz: 500.0,
             ddr: DdrRate::G3_6,
             barrier_wakeup: 8,
+            burst: false,
         }
     }
 
@@ -221,6 +230,7 @@ impl ClusterConfig {
             freq_mhz: 1000.0,
             ddr: DdrRate::G3_6,
             barrier_wakeup: 4,
+            burst: false,
         }
     }
 
@@ -248,7 +258,14 @@ impl ClusterConfig {
             freq_mhz: 850.0,
             ddr: DdrRate::G3_6,
             barrier_wakeup: 10,
+            burst: false,
         }
+    }
+
+    /// Builder-style toggle for the TCDM burst knob (tests, CLI, sweeps).
+    pub fn with_burst(mut self, on: bool) -> Self {
+        self.burst = on;
+        self
     }
 
     // ------------------------------------------------------ derived ----
@@ -409,6 +426,11 @@ mod tests {
         b.tx_table_entries = 4;
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_ne!(a.fingerprint(), ClusterConfig::terapool(11).fingerprint());
+        // The burst knob is timing-relevant and must move it too.
+        assert_ne!(
+            a.fingerprint(),
+            ClusterConfig::terapool(9).with_burst(true).fingerprint()
+        );
     }
 
     #[test]

@@ -58,8 +58,15 @@ pub struct Census {
     pub barriers: u64,
     /// L1 requests per NUMA class — loads, stores, explicit atomics and
     /// the barrier-arrival atomics, classified exactly as
-    /// `cluster::route_action` would.
+    /// `cluster::route_action` would. Burst instructions contribute one
+    /// request per consecutive-bank run of the same `map_burst` split
+    /// the engine performs.
     pub reqs_per_class: [u64; 4],
+    /// Multi-word runs per class (subset of `reqs_per_class`) — mirrors
+    /// the engine's `ClassStats` burst split exactly.
+    pub burst_reqs_per_class: [u64; 4],
+    /// Words those runs move.
+    pub burst_words_per_class: [u64; 4],
     /// Bytes the trace's `DmaStart`s will move through the HBML.
     pub dma_bytes: u64,
 }
@@ -119,6 +126,12 @@ impl Numa {
     fn class_of(&self, map: &AddressMap, tile: usize, addr: u32) -> usize {
         let dst = map.map(addr).bank as usize / self.banks_per_tile;
         self.classify(tile, dst)
+    }
+
+    /// Class of an already-mapped bank (burst runs are classified by
+    /// their base bank, like the engine's per-run requests).
+    fn class_of_bank(&self, tile: usize, bank: crate::memory::BankAddr) -> usize {
+        self.classify(tile, bank.bank as usize / self.banks_per_tile)
     }
 }
 
@@ -225,6 +238,48 @@ fn schedule_pe(
                 let done = t + lat[numa.class_of(map, tile, addr)];
                 tx.push(done);
                 ready[rd] = done;
+                t += 1.0;
+            }
+            Op::LdBurst { rd, n, addr } => {
+                let rd = rd as usize;
+                let mut need = t;
+                for k in 0..n as usize {
+                    need = need.max(ready[rd + k]);
+                }
+                if need > t {
+                    s.stall_raw += need - t;
+                    t = need;
+                }
+                tx_admit(&mut tx, &mut t, tx_cap, &mut s.stall_lsu);
+                // One table entry held until the slowest run returns;
+                // the whole register window frees with it.
+                let mut l = 0.0f64;
+                map.map_burst(addr, n, |bank, _| {
+                    l = l.max(lat[numa.class_of_bank(tile, bank)]);
+                });
+                let done = t + l;
+                tx.push(done);
+                for k in 0..n as usize {
+                    ready[rd + k] = done;
+                }
+                t += 1.0;
+            }
+            Op::StBurst { rs, n, addr } => {
+                let rs = rs as usize;
+                let mut need = t;
+                for k in 0..n as usize {
+                    need = need.max(ready[rs + k]);
+                }
+                if need > t {
+                    s.stall_raw += need - t;
+                    t = need;
+                }
+                tx_admit(&mut tx, &mut t, tx_cap, &mut s.stall_lsu);
+                let mut l = 0.0f64;
+                map.map_burst(addr, n, |bank, _| {
+                    l = l.max(lat[numa.class_of_bank(tile, bank)]);
+                });
+                tx.push(t + l);
                 t += 1.0;
             }
             Op::St { rs, addr } | Op::AtomAdd { rs, addr } => {
@@ -345,6 +400,18 @@ pub fn model_run(cfg: &ClusterConfig, staged: &Staged) -> ModelRun {
             match *op {
                 Op::Ld { addr, .. } | Op::St { addr, .. } | Op::AtomAdd { addr, .. } => {
                     c.reqs_per_class[numa.class_of(&map, tile, addr)] += 1;
+                }
+                Op::LdBurst { n, addr, .. } | Op::StBurst { n, addr, .. } => {
+                    // Same run split as `route_action` → the burst/single
+                    // request counts land bit-exact.
+                    map.map_burst(addr, n, |bank, len| {
+                        let cls = numa.class_of_bank(tile, bank);
+                        c.reqs_per_class[cls] += 1;
+                        if len > 1 {
+                            c.burst_reqs_per_class[cls] += 1;
+                            c.burst_words_per_class[cls] += len as u64;
+                        }
+                    });
                 }
                 Op::Barrier { .. } => {
                     c.barriers += 1;
@@ -513,6 +580,8 @@ pub fn calibrated_stats(
         amat: blend(fast_actual.amat, target.amat, fast_model.amat),
         amat_per_class,
         reqs_per_class: c.reqs_per_class,
+        burst_reqs_per_class: c.burst_reqs_per_class,
+        burst_words_per_class: c.burst_words_per_class,
     }
 }
 
@@ -544,6 +613,51 @@ mod tests {
             assert_eq!(
                 m.stall_ctrl as u64, stats.stall_ctrl,
                 "{}: branch bubbles are exact",
+                io.name
+            );
+        }
+    }
+
+    /// Burst mode: the census's `map_burst` split must land on the same
+    /// request totals *and* the same burst/single division the engine's
+    /// `ClassStats` measures — for all three burst-emitting kernels.
+    #[test]
+    fn census_matches_engine_burst_counts() {
+        let cfg = ClusterConfig::tiny().with_burst(true);
+        let nb = cfg.num_banks();
+        let workloads: Vec<Box<dyn Workload>> = vec![
+            Box::new(Axpy::with(AxpyParams { n: nb * 4, alpha: 2.0 })),
+            Box::new(crate::kernels::dotp::Dotp::with(crate::kernels::dotp::DotpParams {
+                n: nb * 4,
+            })),
+            Box::new(crate::kernels::spmmadd::Spmmadd::with(
+                crate::kernels::spmmadd::SpmmaddParams {
+                    rows: 128,
+                    cols: 128,
+                    nnz_per_row: 4,
+                    seed: 7,
+                },
+            )),
+        ];
+        for w in &workloads {
+            let staged = w.build(&cfg, Scale::Fast);
+            let m = model_run(&cfg, &staged);
+            let (mut cl, io) = staged.into_cluster(cfg.clone());
+            let stats = cl.try_run(50_000_000).unwrap();
+            assert_eq!(m.census.reqs_per_class, stats.reqs_per_class, "{}", io.name);
+            assert_eq!(
+                m.census.burst_reqs_per_class, stats.burst_reqs_per_class,
+                "{}",
+                io.name
+            );
+            assert_eq!(
+                m.census.burst_words_per_class, stats.burst_words_per_class,
+                "{}",
+                io.name
+            );
+            assert!(
+                m.census.burst_reqs_per_class.iter().sum::<u64>() > 0,
+                "{}: expected burst traffic",
                 io.name
             );
         }

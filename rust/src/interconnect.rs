@@ -44,6 +44,7 @@ use std::collections::VecDeque;
 use std::sync::Mutex;
 
 use crate::config::{ClusterConfig, LatencyCfg};
+use crate::isa::MAX_BURST_WORDS;
 use crate::memory::{BankAddr, L1Memory, TileStore};
 
 /// NUMA distance class of an access (Fig. 8b).
@@ -76,6 +77,15 @@ pub enum ReqKind {
 /// An in-flight L1 request. Carried by value through the queues and
 /// wheels (no slab/id indirection: a request lives in exactly one domain
 /// structure at a time, or in a transfer event between domains).
+///
+/// A TCDM **burst run** is a request with `words > 1`: `words`
+/// consecutive banks starting at `bank` at one row, arbitrated as a
+/// single unit at the destination's bank ports and answered by one
+/// response. `cluster::route_action` splits a burst instruction into
+/// runs along Tile/row boundaries (`AddressMap::map_burst`); `last`
+/// marks the run that retires the issuing PE's transaction-table entry.
+/// The payload rides in the fixed `wdata` array so the type stays
+/// `Copy` for the sharded engine's mailboxes.
 #[derive(Debug, Clone, Copy)]
 pub struct Request {
     pub core: u32,
@@ -86,12 +96,22 @@ pub struct Request {
     pub issue_cycle: u64,
     /// Cluster-defined tag (e.g. barrier id + 1); 0 = none.
     pub tag: u32,
+    /// Beats in this request (1 = single word; > 1 = burst run).
+    pub words: u8,
+    /// True for single requests and for a burst's final run: completing
+    /// it releases the PE's LSU transaction-table entry.
+    pub last: bool,
+    /// Burst payload: store data in (writes), loaded data out (reads),
+    /// one slot per beat. Single-word requests keep using `value`.
+    pub wdata: [f32; MAX_BURST_WORDS],
     slave_port: u8,
     hop_delay: u32,
     resp_delay: u32,
 }
 
-/// A completed request delivered back to the cluster.
+/// A completed request delivered back to the cluster. `words`, `last`
+/// and `wdata` mirror the [`Request`] burst fields: a burst run answers
+/// with one response carrying all its beats.
 #[derive(Debug, Clone, Copy)]
 pub struct Response {
     pub core: u32,
@@ -100,6 +120,9 @@ pub struct Response {
     pub latency: u64,
     pub class: NumaClass,
     pub tag: u32,
+    pub words: u8,
+    pub last: bool,
+    pub wdata: [f32; MAX_BURST_WORDS],
 }
 
 impl Response {
@@ -153,13 +176,19 @@ impl<T> Wheel<T> {
 }
 
 /// Per-class latency/contention accounting (drives the measured-AMAT
-/// validation of the analytical model, Sec. 7).
+/// validation of the analytical model, Sec. 7). `count` covers every
+/// retired request; the `burst_*` fields split out the multi-word
+/// subset (`burst_count` requests moving `burst_words` words total), so
+/// `count - burst_count` is the single-word traffic and the legacy
+/// totals are recoverable from a burst-off run unchanged.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ClassStats {
     pub count: u64,
     pub latency_sum: u64,
     pub latency_max: u64,
     pub contention_sum: u64,
+    pub burst_count: u64,
+    pub burst_words: u64,
 }
 
 impl ClassStats {
@@ -207,6 +236,8 @@ impl IcnStats {
             a.latency_sum += b.latency_sum;
             a.latency_max = a.latency_max.max(b.latency_max);
             a.contention_sum += b.contention_sum;
+            a.burst_count += b.burst_count;
+            a.burst_words += b.burst_words;
         }
         self.bank_conflicts += other.bank_conflicts;
         self.issued += other.issued;
@@ -345,6 +376,10 @@ impl Topology {
                 Some(self.master_port(src_tile, dst_tile, class) as u8),
             )
         };
+        // Beat 0's payload mirrors `value` so the bank access path reads
+        // write data uniformly from `wdata` for singles and bursts alike.
+        let mut wdata = [0.0; MAX_BURST_WORDS];
+        wdata[0] = value;
         (
             Request {
                 core,
@@ -354,6 +389,9 @@ impl Topology {
                 class,
                 issue_cycle: now,
                 tag,
+                words: 1,
+                last: true,
+                wdata,
                 slave_port,
                 hop_delay,
                 resp_delay,
@@ -450,6 +488,27 @@ impl TileDomain {
         self.arrivals.push(at, (port, req));
     }
 
+    /// Schedule the response for a request whose bank access(es) just
+    /// completed. One response per request — a burst run answers once
+    /// for all its beats.
+    fn push_response(&mut self, now: u64, req: Request) {
+        let due = (now + req.resp_delay as u64).max(now + 1);
+        self.responses.push(
+            due,
+            Response {
+                core: req.core,
+                kind: req.kind,
+                value: req.value,
+                latency: due - req.issue_cycle,
+                class: req.class,
+                tag: req.tag,
+                words: req.words,
+                last: req.last,
+                wdata: req.wdata,
+            },
+        );
+    }
+
     /// Advance this domain one cycle: deliver spill-register arrivals,
     /// arbitrate the master ports, slave ports/crossbar outputs and banks
     /// (one grant per node per cycle), perform the granted accesses on
@@ -519,32 +578,73 @@ impl TileDomain {
         }
 
         // 4. Bank ports: one access per bank per cycle, on this Tile's
-        //    own L1 slice.
+        //    own L1 slice. Two deterministic passes over the same
+        //    active-bank snapshot: burst runs first — a run queued at
+        //    bank `b` claims the `words` consecutive bank ports
+        //    b..b+words and performs all its beats under one grant (the
+        //    TCDM burst wide grant) — then single-word heads at banks no
+        //    run claimed. `covered` is a bank-port bitmask
+        //    (banks_per_tile ≤ 32 in every shipped configuration), so
+        //    the grant outcome depends only on this domain's
+        //    insertion-ordered active list — partition-independent, as
+        //    the deterministic-merge invariant requires.
         nodes.clear();
         nodes.extend_from_slice(&self.active_banks);
         self.active_banks.clear();
+        debug_assert!(self.bank_q.len() <= 64, "covered bitmask needs widening");
+        let mut covered: u64 = 0;
         for &b in nodes.iter() {
             let q = &mut self.bank_q[b as usize];
-            if let Some(mut req) = q.pop_front() {
-                let (lb, row) = (b as usize, req.bank.row as usize);
-                match req.kind {
-                    ReqKind::Read { .. } => req.value = store.read(lb, row),
-                    ReqKind::Write => store.write(lb, row, req.value),
-                    ReqKind::Amo => req.value = store.amo_add(lb, row, req.value),
-                }
-                let due = (now + req.resp_delay as u64).max(now + 1);
-                self.responses.push(
-                    due,
-                    Response {
-                        core: req.core,
-                        kind: req.kind,
-                        value: req.value,
-                        latency: due - req.issue_cycle,
-                        class: req.class,
-                        tag: req.tag,
-                    },
-                );
+            let w = match q.front() {
+                Some(r) if r.words > 1 => r.words as usize,
+                _ => continue,
+            };
+            let mask = ((1u64 << w) - 1) << b;
+            if covered & mask != 0 {
+                continue; // overlaps a run already granted this cycle
             }
+            covered |= mask;
+            let mut req = q.pop_front().unwrap();
+            let (lb, row) = (b as usize, req.bank.row as usize);
+            debug_assert!(lb + w <= self.bank_q.len(), "burst run leaves the Tile");
+            match req.kind {
+                ReqKind::Read { .. } => {
+                    for k in 0..w {
+                        req.wdata[k] = store.read(lb + k, row);
+                    }
+                    req.value = req.wdata[0];
+                }
+                ReqKind::Write => {
+                    for k in 0..w {
+                        store.write(lb + k, row, req.wdata[k]);
+                    }
+                }
+                ReqKind::Amo => unreachable!("AMOs never travel as bursts"),
+            }
+            self.push_response(now, req);
+        }
+        for &b in nodes.iter() {
+            if covered & (1u64 << b) != 0 {
+                continue; // port claimed by a burst run this cycle
+            }
+            let q = &mut self.bank_q[b as usize];
+            if !matches!(q.front(), Some(r) if r.words <= 1) {
+                continue; // empty, or a (stalled) burst head
+            }
+            let mut req = q.pop_front().unwrap();
+            let (lb, row) = (b as usize, req.bank.row as usize);
+            match req.kind {
+                ReqKind::Read { .. } => {
+                    req.value = store.read(lb, row);
+                    req.wdata[0] = req.value;
+                }
+                ReqKind::Write => store.write(lb, row, req.wdata[0]),
+                ReqKind::Amo => req.value = store.amo_add(lb, row, req.value),
+            }
+            self.push_response(now, req);
+        }
+        for &b in nodes.iter() {
+            let q = &self.bank_q[b as usize];
             if !q.is_empty() {
                 self.stats.bank_conflicts += q.len() as u64;
                 self.active_banks.push(b);
@@ -564,6 +664,10 @@ impl TileDomain {
             cs.latency_sum += r.latency;
             cs.latency_max = cs.latency_max.max(r.latency);
             cs.contention_sum += r.latency.saturating_sub(zero_load);
+            if r.words > 1 {
+                cs.burst_count += 1;
+                cs.burst_words += r.words as u64;
+            }
             self.stats.completed += 1;
             self.live -= 1;
             resp_out.push(r);
@@ -881,6 +985,157 @@ mod tests {
         assert_eq!(s.latency_sum, 1 + 2 + 3 + 4);
         assert_eq!(s.contention_sum, 0 + 1 + 2 + 3);
         assert!((stats.amat() - 2.5).abs() < 1e-9);
+    }
+
+    /// Build a burst-run request the way `cluster::route_action` does:
+    /// a normal single-word request widened to `n` beats.
+    fn burst_req(
+        icn: &Interconnect,
+        core: u32,
+        src_tile: usize,
+        kind: ReqKind,
+        bank: BankAddr,
+        n: u8,
+        wdata: [f32; MAX_BURST_WORDS],
+    ) -> (Request, Option<u8>) {
+        let (mut req, port) = icn.topo().make_request(0, core, src_tile, kind, wdata[0], bank, 0);
+        req.words = n;
+        req.wdata = wdata;
+        (req, port)
+    }
+
+    #[test]
+    fn burst_moves_n_words_in_one_grant() {
+        let (cfg, mut l1, mut icn) = setup();
+        for k in 0..4u32 {
+            l1.write_bank(BankAddr { bank: k, row: 2 }, 10.0 + k as f32);
+        }
+        let (req, port) = burst_req(
+            &icn,
+            0,
+            0,
+            ReqKind::Read { rd: 4 },
+            BankAddr { bank: 0, row: 2 },
+            4,
+            [0.0; MAX_BURST_WORDS],
+        );
+        icn.ingest(0, req, port);
+        let mut got = None;
+        for now in 0..8 {
+            icn.drain_responses(now, |r| got = Some(r));
+            if got.is_some() {
+                break;
+            }
+            icn.step(now, &mut l1);
+        }
+        let r = got.expect("burst response");
+        assert_eq!(r.latency, cfg.latency.local as u64, "one grant, local RT");
+        assert_eq!(r.words, 4);
+        assert!(r.last);
+        assert_eq!(r.wdata, [10.0, 11.0, 12.0, 13.0]);
+        let s = &icn.stats().per_class[NumaClass::Local as usize];
+        assert_eq!((s.count, s.burst_count, s.burst_words), (1, 1, 4));
+    }
+
+    #[test]
+    fn burst_store_writes_consecutive_banks() {
+        let (_, mut l1, mut icn) = setup();
+        let (req, port) = burst_req(
+            &icn,
+            0,
+            0,
+            ReqKind::Write,
+            BankAddr { bank: 8, row: 1 },
+            3,
+            [5.0, 6.0, 7.0, 0.0],
+        );
+        icn.ingest(0, req, port);
+        run_one(&mut icn, &mut l1);
+        for k in 0..3u32 {
+            assert_eq!(l1.read_bank(BankAddr { bank: 8 + k, row: 1 }), 5.0 + k as f32);
+        }
+        // The beat past the run's end is untouched.
+        assert_eq!(l1.read_bank(BankAddr { bank: 11, row: 1 }), 0.0);
+    }
+
+    #[test]
+    fn burst_claims_consecutive_ports_and_singles_stall() {
+        let (_, mut l1, mut icn) = setup();
+        // A 4-beat run over banks 0..4 plus singles at banks 2 (inside
+        // the run's window — must lose this cycle's arbitration) and 5
+        // (outside — unaffected), all issued at cycle 0.
+        let (burst, bp) = burst_req(
+            &icn,
+            0,
+            0,
+            ReqKind::Read { rd: 4 },
+            BankAddr { bank: 0, row: 0 },
+            4,
+            [0.0; MAX_BURST_WORDS],
+        );
+        icn.ingest(0, burst, bp);
+        icn.push_request(0, 1, 0, ReqKind::Read { rd: 1 }, 0.0, BankAddr { bank: 2, row: 0 }, 0);
+        icn.push_request(0, 2, 0, ReqKind::Read { rd: 1 }, 0.0, BankAddr { bank: 5, row: 0 }, 0);
+        let mut lats = Vec::new();
+        for now in 0..8 {
+            icn.drain_responses(now, |r| lats.push((r.core, r.latency)));
+            icn.step(now, &mut l1);
+        }
+        lats.sort();
+        assert_eq!(lats, vec![(0, 1), (1, 2), (2, 1)]);
+        assert_eq!(icn.stats().bank_conflicts, 1, "the covered single retried once");
+    }
+
+    #[test]
+    fn stalled_burst_head_blocks_its_bank() {
+        let (_, mut l1, mut icn) = setup();
+        // Two overlapping runs: banks 0..4 and banks 2..6. The second is
+        // ingested after the first, loses the covered-window check, and
+        // retries a cycle later — singles behind it wait their turn.
+        for (core, base) in [(0u32, 0u32), (1, 2)] {
+            let (req, port) = burst_req(
+                &icn,
+                core,
+                0,
+                ReqKind::Read { rd: 4 },
+                BankAddr { bank: base, row: 0 },
+                4,
+                [0.0; MAX_BURST_WORDS],
+            );
+            icn.ingest(0, req, port);
+        }
+        let mut lats = Vec::new();
+        for now in 0..8 {
+            icn.drain_responses(now, |r| lats.push((r.core, r.latency)));
+            icn.step(now, &mut l1);
+        }
+        lats.sort();
+        assert_eq!(lats, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn remote_burst_keeps_numa_latency() {
+        let (cfg, mut l1, mut icn) = setup();
+        // Tile 0 → tile 1 (SubGroup): the run crosses the master/slave
+        // ports like any request and still completes in one bank grant.
+        let base = cfg.banks_per_tile() as u32;
+        for k in 0..4u32 {
+            l1.write_bank(BankAddr { bank: base + k, row: 0 }, 20.0 + k as f32);
+        }
+        let (req, port) = burst_req(
+            &icn,
+            0,
+            0,
+            ReqKind::Read { rd: 4 },
+            BankAddr { bank: base, row: 0 },
+            4,
+            [0.0; MAX_BURST_WORDS],
+        );
+        icn.ingest(0, req, port);
+        let (lat, _) = run_one(&mut icn, &mut l1);
+        assert_eq!(lat, cfg.latency.subgroup as u64);
+        let s = &icn.stats().per_class[NumaClass::SubGroup as usize];
+        assert_eq!((s.burst_count, s.burst_words), (1, 4));
     }
 
     #[test]

@@ -18,6 +18,14 @@
 /// supported by 32 ISA registers").
 pub const NUM_REGS: usize = 32;
 
+/// Maximum words a single burst request may move (matches the banking
+/// factor of every shipped configuration: one beat per bank of the PE's
+/// own bank group, the widest window one port grant can cover without
+/// re-arbitrating). Also bounds the fixed arrays bursts travel in
+/// ([`crate::interconnect::Request`] stays `Copy` for the sharded
+/// engine's mailboxes).
+pub const MAX_BURST_WORDS: usize = 4;
+
 /// One trace instruction. Kept to 8 bytes — full-cluster GEMM traces reach
 /// tens of millions of instructions.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,6 +35,14 @@ pub enum Op {
     Ld { rd: u8, addr: u32 },
     /// Store word: `L1[addr] <- rs`. Tracked for retirement like loads.
     St { rs: u8, addr: u32 },
+    /// Burst load: `rd+k <- L1[addr+k]` for `k in 0..n` (TCDM burst
+    /// access, the sequel paper's bandwidth-ceiling breaker): one LSU
+    /// transaction-table entry and one port grant move `n` words over
+    /// consecutive banks. `1 <= n <= MAX_BURST_WORDS`.
+    LdBurst { rd: u8, n: u8, addr: u32 },
+    /// Burst store: `L1[addr+k] <- rs+k` for `k in 0..n`; one table
+    /// entry, one grant, like [`Op::LdBurst`].
+    StBurst { rs: u8, n: u8, addr: u32 },
     /// Atomic fetch-and-add to L1: `L1[addr] += rs` (the paper's join
     /// primitive). Serializes at the target bank.
     AtomAdd { rs: u8, addr: u32 },
@@ -79,8 +95,8 @@ pub enum OpClass {
 impl Op {
     pub fn class(&self) -> OpClass {
         match self {
-            Op::Ld { .. } => OpClass::Load,
-            Op::St { .. } => OpClass::Store,
+            Op::Ld { .. } | Op::LdBurst { .. } => OpClass::Load,
+            Op::St { .. } | Op::StBurst { .. } => OpClass::Store,
             Op::AtomAdd { .. } => OpClass::Atomic,
             Op::LdImm { .. }
             | Op::Fmac { .. }
@@ -137,6 +153,18 @@ impl Program {
     pub fn st(&mut self, rs: u8, addr: u32) {
         self.push(Op::St { rs, addr });
     }
+    /// Burst load of `n` words into `rd..rd+n` (see [`Op::LdBurst`]).
+    pub fn ld_burst(&mut self, rd: u8, addr: u32, n: u8) {
+        assert!(n >= 1 && n as usize <= MAX_BURST_WORDS, "burst length {n}");
+        assert!(rd as usize + n as usize <= NUM_REGS, "burst regs out of range");
+        self.push(Op::LdBurst { rd, n, addr });
+    }
+    /// Burst store of `n` words from `rs..rs+n` (see [`Op::StBurst`]).
+    pub fn st_burst(&mut self, rs: u8, addr: u32, n: u8) {
+        assert!(n >= 1 && n as usize <= MAX_BURST_WORDS, "burst length {n}");
+        assert!(rs as usize + n as usize <= NUM_REGS, "burst regs out of range");
+        self.push(Op::StBurst { rs, n, addr });
+    }
     pub fn atom_add(&mut self, rs: u8, addr: u32) {
         self.push(Op::AtomAdd { rs, addr });
     }
@@ -192,6 +220,23 @@ mod tests {
         assert_eq!(Op::Add { rd: 0, ra: 1, rb: 2 }.flops(), 1);
         assert_eq!(Op::Ld { rd: 0, addr: 0 }.flops(), 0);
         assert_eq!(Op::Barrier { id: 0 }.class(), OpClass::Sync);
+        assert_eq!(Op::LdBurst { rd: 1, n: 4, addr: 0 }.class(), OpClass::Load);
+        assert_eq!(Op::StBurst { rs: 1, n: 4, addr: 0 }.class(), OpClass::Store);
+        assert_eq!(Op::LdBurst { rd: 1, n: 4, addr: 0 }.flops(), 0);
+    }
+
+    #[test]
+    fn burst_builder_checks_bounds() {
+        let mut p = Program::new();
+        p.ld_burst(2, 100, 4);
+        p.st_burst(6, 200, 2);
+        assert_eq!(p.ops[0], Op::LdBurst { rd: 2, n: 4, addr: 100 });
+        assert_eq!(p.ops[1], Op::StBurst { rs: 6, n: 2, addr: 200 });
+        let r = std::panic::catch_unwind(move || {
+            let mut p = Program::new();
+            p.ld_burst(30, 0, 4); // r30..r34 out of range
+        });
+        assert!(r.is_err());
     }
 
     #[test]

@@ -101,27 +101,38 @@ pub fn build(cfg: &ClusterConfig, p: &AxpyParams) -> Staged {
     let zb = alloc.alloc(p.n as u32);
 
     let sweeps = p.n / nb; // bank rows per array
+    // TCDM burst mode (cfg.burst): each bf-element group is one burst
+    // over the PE's bf consecutive local banks — one port grant and one
+    // LSU entry instead of bf, the sequel paper's bandwidth lever.
+    let burst = cfg.burst && bf > 1 && bf <= crate::isa::MAX_BURST_WORDS;
     let mut programs = Vec::with_capacity(npes);
     for pe in 0..npes {
         let mut t = Program::new();
         t.ld_imm(R_ALPHA, p.alpha);
         for k in 0..sweeps {
             // The bf(=4) elements of sweep k living in PE `pe`'s banks.
-            for j in 0..bf {
-                let i = (k * nb + bf * pe + j) as u32;
-                t.ld(R_X + j as u8, xb + i);
-            }
-            for j in 0..bf {
-                let i = (k * nb + bf * pe + j) as u32;
-                t.ld(R_Y + j as u8, yb + i);
+            let i0 = (k * nb + bf * pe) as u32;
+            if burst {
+                t.ld_burst(R_X, xb + i0, bf as u8);
+                t.ld_burst(R_Y, yb + i0, bf as u8);
+            } else {
+                for j in 0..bf as u32 {
+                    t.ld(R_X + j as u8, xb + i0 + j);
+                }
+                for j in 0..bf as u32 {
+                    t.ld(R_Y + j as u8, yb + i0 + j);
+                }
             }
             for j in 0..bf as u8 {
                 // y_j += alpha * x_j
                 t.fmac(R_Y + j, R_ALPHA, R_X + j);
             }
-            for j in 0..bf {
-                let i = (k * nb + bf * pe + j) as u32;
-                t.st(R_Y + j as u8, zb + i);
+            if burst {
+                t.st_burst(R_Y, zb + i0, bf as u8);
+            } else {
+                for j in 0..bf as u32 {
+                    t.st(R_Y + j as u8, zb + i0 + j);
+                }
             }
             t.alu(); // pointer bump
             t.alu(); // loop counter

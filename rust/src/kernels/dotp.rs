@@ -103,6 +103,7 @@ pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> Staged {
     let out = alloc.alloc(1);
 
     let sweeps = p.n / nb;
+    let burst = cfg.burst && bf > 1 && bf <= crate::isa::MAX_BURST_WORDS;
     let mut programs = Vec::with_capacity(npes);
     for pe in 0..npes {
         let tile = pe / ppt;
@@ -111,13 +112,18 @@ pub fn build(cfg: &ClusterConfig, p: &DotpParams) -> Staged {
             t.ld_imm(R_ACC + j, 0.0);
         }
         for k in 0..sweeps {
-            for j in 0..bf {
-                let i = (k * nb + bf * pe + j) as u32;
-                t.ld(R_X + j as u8, xb + i);
-            }
-            for j in 0..bf {
-                let i = (k * nb + bf * pe + j) as u32;
-                t.ld(R_Y + j as u8, yb + i);
+            let i0 = (k * nb + bf * pe) as u32;
+            if burst {
+                // One grant per bf-element group (see axpy.rs).
+                t.ld_burst(R_X, xb + i0, bf as u8);
+                t.ld_burst(R_Y, yb + i0, bf as u8);
+            } else {
+                for j in 0..bf as u32 {
+                    t.ld(R_X + j as u8, xb + i0 + j);
+                }
+                for j in 0..bf as u32 {
+                    t.ld(R_Y + j as u8, yb + i0 + j);
+                }
             }
             for j in 0..bf as u8 {
                 t.fmac(R_ACC + j, R_X + j, R_Y + j);

@@ -194,6 +194,16 @@ const R_CMP: u8 = 3;
 const RA_VAL: u8 = 4;
 const RB_VAL: u8 = 5;
 const R_OUT: u8 = 6;
+// Burst-mode (cfg.burst) register windows, r8..r31: the four CSR
+// streams are cached MAX_BURST_WORDS entries at a time (one burst load
+// per refill instead of one word load per merge step), and outputs are
+// buffered and drained with burst stores.
+const RA_W: u8 = 8; // A col window
+const RB_W: u8 = 12; // B col window
+const RAV_W: u8 = 16; // A val window
+const RBV_W: u8 = 20; // B val window
+const RCV_O: u8 = 24; // C val output buffer
+const RCC_O: u8 = 28; // C col output buffer
 
 /// [`Workload`] registration: CSR SpMMadd with pinned or scale-resolved
 /// shape (4096²/nnz 16 full, 2048² fast — the Fig. 14a sizes).
@@ -282,9 +292,20 @@ pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (Staged, Spm
         heap.push(std::cmp::Reverse((load[pe], pe)));
     }
 
+    // TCDM burst mode (cfg.burst): instead of one single-word load per
+    // merge step, each CSR stream is cached MAX_BURST_WORDS entries at a
+    // time in a register window (one ld_burst per refill for cols, one
+    // for vals), and outputs are buffered and drained with st_burst.
+    // Windows persist across a PE's (LPT-shuffled, non-contiguous) rows:
+    // a refill re-validates whenever the cursor leaves the cached range.
+    let bw = crate::isa::MAX_BURST_WORDS;
+    let burst = cfg.burst && bw > 1;
     let mut programs = Vec::with_capacity(npes);
     for pe in 0..npes {
         let mut t = Program::new();
+        // Cached [lo, hi) index ranges of the A and B streams currently
+        // resident in the col/val register windows (burst mode only).
+        let (mut awin, mut bwin) = ((0usize, 0usize), (0usize, 0usize));
         for &r in &assigned[pe] {
             // Row-pointer fetches (values known to the builder; the loads
             // model the CSR bookkeeping traffic — distinct address per
@@ -295,24 +316,74 @@ pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (Staged, Spm
             let (mut ia, ea) = (a.row_ptr[r] as usize, a.row_ptr[r + 1] as usize);
             let (mut ib, eb) = (b.row_ptr[r] as usize, b.row_ptr[r + 1] as usize);
             let mut ic = c.row_ptr[r] as usize;
+            // Output burst buffer: C indices [ic0, ic0 + nbuf) are staged
+            // in RCV_O/RCC_O and flushed when full or at row end (ic is
+            // contiguous within a row, not across LPT-assigned rows).
+            let (mut ic0, mut nbuf) = (ic, 0usize);
             while ia < ea || ib < eb {
                 let ca = if ia < ea { a.col_idx[ia] } else { u32::MAX };
                 let cb = if ib < eb { b.col_idx[ib] } else { u32::MAX };
                 // Load the two candidate column indices (when available),
                 // compare (dependent ALU), branch on the outcome.
                 if ia < ea {
-                    t.ld(RA_COL, a_col + ia as u32);
+                    if burst {
+                        if ia < awin.0 || ia >= awin.1 {
+                            let n = bw.min(a.nnz() - ia);
+                            t.ld_burst(RA_W, a_col + ia as u32, n as u8);
+                            t.ld_burst(RAV_W, a_val + ia as u32, n as u8);
+                            awin = (ia, ia + n);
+                        }
+                    } else {
+                        t.ld(RA_COL, a_col + ia as u32);
+                    }
                 }
                 if ib < eb {
-                    t.ld(RB_COL, b_col + ib as u32);
+                    if burst {
+                        if ib < bwin.0 || ib >= bwin.1 {
+                            let n = bw.min(b.nnz() - ib);
+                            t.ld_burst(RB_W, b_col + ib as u32, n as u8);
+                            t.ld_burst(RBV_W, b_val + ib as u32, n as u8);
+                            bwin = (ib, ib + n);
+                        }
+                    } else {
+                        t.ld(RB_COL, b_col + ib as u32);
+                    }
                 }
                 if ia < ea && ib < eb {
-                    t.sub(R_CMP, RA_COL, RB_COL); // waits on both loads
+                    // Waits on both (window) loads.
+                    if burst {
+                        t.sub(R_CMP, RA_W + (ia - awin.0) as u8, RB_W + (ib - bwin.0) as u8);
+                    } else {
+                        t.sub(R_CMP, RA_COL, RB_COL);
+                    }
                 } else {
                     t.alu();
                 }
                 t.branch();
-                if ca == cb {
+                if burst {
+                    let (ov, oc) = (RCV_O + nbuf as u8, RCC_O + nbuf as u8);
+                    if ca == cb {
+                        t.add(ov, RAV_W + (ia - awin.0) as u8, RBV_W + (ib - bwin.0) as u8);
+                        t.ld_imm(oc, ca as f32);
+                        ia += 1;
+                        ib += 1;
+                    } else if ca < cb {
+                        t.mov(ov, RAV_W + (ia - awin.0) as u8);
+                        t.ld_imm(oc, ca as f32);
+                        ia += 1;
+                    } else {
+                        t.mov(ov, RBV_W + (ib - bwin.0) as u8);
+                        t.ld_imm(oc, cb as f32);
+                        ib += 1;
+                    }
+                    nbuf += 1;
+                    if nbuf == bw {
+                        t.st_burst(RCV_O, c_val + ic0 as u32, nbuf as u8);
+                        t.st_burst(RCC_O, c_col + ic0 as u32, nbuf as u8);
+                        ic0 += nbuf;
+                        nbuf = 0;
+                    }
+                } else if ca == cb {
                     t.ld(RA_VAL, a_val + ia as u32);
                     t.ld(RB_VAL, b_val + ib as u32);
                     t.add(R_OUT, RA_VAL, RB_VAL);
@@ -337,6 +408,13 @@ pub fn build_with_layout(cfg: &ClusterConfig, p: &SpmmaddParams) -> (Staged, Spm
                     ib += 1;
                 }
                 ic += 1;
+            }
+            if nbuf > 0 {
+                // Row-end flush of the partial output buffer (a run may
+                // straddle bank/Tile boundaries — the address map splits
+                // it into legal consecutive-bank beats).
+                t.st_burst(RCV_O, c_val + ic0 as u32, nbuf as u8);
+                t.st_burst(RCC_O, c_col + ic0 as u32, nbuf as u8);
             }
             t.branch(); // row-loop backedge
         }
@@ -398,6 +476,38 @@ mod tests {
         for (i, (&cgot, &want)) in cols.iter().zip(&layout.c_ref.col_idx).enumerate() {
             assert_eq!(cgot, want as f32, "col[{i}]");
         }
+    }
+
+    #[test]
+    fn spmmadd_burst_matches_single_word_results() {
+        let p = SpmmaddParams { rows: 128, cols: 128, nnz_per_row: 4, seed: 7 };
+        let cfg = ClusterConfig::tiny();
+        let (setup, layout) = build_with_layout(&cfg, &p);
+        let (mut cl, _) = setup.into_cluster(cfg.clone());
+        let s = cl.run(10_000_000);
+
+        let bcfg = cfg.with_burst(true);
+        let (bsetup, _) = build_with_layout(&bcfg, &p);
+        let (mut bl, bio) = bsetup.into_cluster(bcfg);
+        let sb = bl.run(10_000_000);
+
+        let vals = bio.read_output(&bl).unwrap();
+        for (i, (&v, &want)) in vals.iter().zip(&layout.c_ref.values).enumerate() {
+            assert!((v - want).abs() < 1e-5, "val[{i}] = {v}, want {want}");
+        }
+        let cols = bl.l1.read_slice(layout.c_col_base, layout.c_ref.nnz());
+        for (i, (&cgot, &want)) in cols.iter().zip(&layout.c_ref.col_idx).enumerate() {
+            assert_eq!(cgot, want as f32, "col[{i}]");
+        }
+        // Same arithmetic, fewer port grants: the windowed prefetch and
+        // buffered stores replace per-step single-word traffic.
+        assert_eq!(sb.flops, s.flops, "burst mode must not change FLOPs");
+        assert!(sb.burst_reqs_per_class.iter().sum::<u64>() > 0);
+        let (tot_b, tot_s) = (
+            sb.reqs_per_class.iter().sum::<u64>(),
+            s.reqs_per_class.iter().sum::<u64>(),
+        );
+        assert!(tot_b < tot_s, "bursts should cut requests: {tot_b} vs {tot_s}");
     }
 
     #[test]

@@ -53,6 +53,9 @@ options:
                 one fast-scale cycle-accurate calibration run per job.
                 Compare vs a cycle-accurate sweep with
                 tools/report_diff.py --rtol 0.10
+  --burst       enable TCDM burst access (ClusterConfig::burst): kernels
+                that support it issue multi-word loads/stores moving up
+                to MAX_BURST_WORDS consecutive-bank words per port grant
   --list        enumerate registered workloads and experiments";
 
 fn main() -> Result<()> {
@@ -69,6 +72,7 @@ fn main() -> Result<()> {
     let json_path = parse_value(&args, "--json")?;
     let no_skip = args.iter().any(|a| a == "--no-skip");
     let estimate = args.iter().any(|a| a == "--estimate");
+    let burst = args.iter().any(|a| a == "--burst");
 
     if args.iter().any(|a| a == "--list") {
         print_list();
@@ -85,7 +89,7 @@ fn main() -> Result<()> {
 
     // The single Session every cluster-simulator experiment runs
     // through; its accumulated RunReports become the --json document.
-    let session = Session::new(ClusterConfig::terapool(9))
+    let session = Session::new(ClusterConfig::terapool(9).with_burst(burst))
         .scale(scale)
         .threads(threads)
         .fast_forward(!no_skip)
@@ -95,7 +99,7 @@ fn main() -> Result<()> {
     // Dispatch, but write the --json document even when the command
     // fails: a failing `validate` is exactly when CI needs the report
     // (the Failed verdicts are in it).
-    let outcome = dispatch(&cmd, scale, threads, &session, &mut reports);
+    let outcome = dispatch(&cmd, scale, threads, burst, &session, &mut reports);
     reports.extend(session.take_reports());
     if let Some(path) = json_path {
         std::fs::write(&path, reports_to_json(&reports))?;
@@ -108,6 +112,7 @@ fn dispatch(
     cmd: &str,
     scale: Scale,
     threads: usize,
+    burst: bool,
     session: &Session,
     reports: &mut Vec<RunReport>,
 ) -> Result<()> {
@@ -141,7 +146,7 @@ fn dispatch(
             coordinator::headline(session).print();
         }
         "validate" => validate(scale, threads, reports)?,
-        "sweep" => sweep(session)?,
+        "sweep" => sweep(session, burst)?,
         "ablate-txtable" => ablate_txtable(session),
         "ablate-addrmap" => ablate_addrmap(session),
         "ablate-spill" => ablate_spill(session),
@@ -309,13 +314,13 @@ fn validate(scale: Scale, threads: usize, reports: &mut Vec<RunReport>) -> Resul
 /// the analytic fast path, and hold the two documents together with
 /// `tools/report_diff.py --rtol 0.10` (census-backed fields are
 /// compared exactly; cycles/stalls/AMAT to the stated bound).
-fn sweep(s: &Session) -> Result<()> {
+fn sweep(s: &Session, burst: bool) -> Result<()> {
     use terapool::report::{f2, int, Table};
     let configs = [
-        ClusterConfig::tiny(),
-        ClusterConfig::mempool(),
-        ClusterConfig::occamy(),
-        ClusterConfig::terapool(9),
+        ClusterConfig::tiny().with_burst(burst),
+        ClusterConfig::mempool().with_burst(burst),
+        ClusterConfig::occamy().with_burst(burst),
+        ClusterConfig::terapool(9).with_burst(burst),
     ];
     let mut t = Table::new(
         "Sweep — Table-6 configs × kernels (Session run path)",

@@ -147,6 +147,41 @@ impl AddressMap {
         let off = word as usize - self.seq_words_total;
         (off % self.num_banks) / banks_per_subgroup
     }
+
+    /// Split an `n`-word burst at `word` into its **beat runs**: maximal
+    /// sub-ranges whose words map to consecutive banks of one Tile at a
+    /// single row — exactly the window one bank-arbitration grant can
+    /// cover. `sink(base, len)` receives each run's base bank location
+    /// and beat count in address order; the run lengths sum to `n`, and
+    /// run `k`'s base equals `map(word + sum of earlier lengths)`.
+    ///
+    /// Splits happen at a bank-row wrap, at a Tile boundary (a request is
+    /// arbitrated entirely inside its destination Tile's domain), and at
+    /// the interleaved region's bank-space wrap. This is the *single*
+    /// definition of burst beat grouping: `cluster::route_action` builds
+    /// one interconnect request per run, and the estimate path's traffic
+    /// census replays the same split, so engine and census counters agree
+    /// bit for bit.
+    pub fn map_burst(&self, word: u32, n: u8, mut sink: impl FnMut(BankAddr, u8)) {
+        debug_assert!(n >= 1);
+        let mut run_base = self.map(word);
+        let mut run_len: u8 = 1;
+        let mut prev = run_base;
+        for k in 1..n as u32 {
+            let at = self.map(word + k);
+            let same_tile = at.bank as usize / self.banks_per_tile
+                == run_base.bank as usize / self.banks_per_tile;
+            if at.row == prev.row && at.bank == prev.bank + 1 && same_tile {
+                run_len += 1;
+            } else {
+                sink(run_base, run_len);
+                run_base = at;
+                run_len = 1;
+            }
+            prev = at;
+        }
+        sink(run_base, run_len);
+    }
 }
 
 /// One Tile's slice of the banked L1: `banks_per_tile` banks, bank-major.
@@ -528,6 +563,41 @@ mod tests {
             ];
             for w in probes {
                 assert_eq!(m.unmap(m.map(w)), w, "{}: word {w}", cfg.name);
+            }
+        }
+    }
+
+    /// Burst runs partition the word range, stay within one Tile, and
+    /// cover consecutive banks at one row — over both regions and at
+    /// every boundary a burst can straddle.
+    #[test]
+    fn map_burst_runs_partition_and_stay_in_tile() {
+        for cfg in [ClusterConfig::tiny(), ClusterConfig::terapool(9)] {
+            let m = AddressMap::new(&cfg);
+            let bpt = cfg.banks_per_tile();
+            let nb = cfg.num_banks() as u32;
+            let probes = [
+                m.interleaved_base(),                    // aligned interleaved
+                m.interleaved_base() + bpt as u32 - 2,   // straddles a Tile boundary
+                m.interleaved_base() + nb - 2,           // straddles the bank-space wrap
+                0,                                       // sequential region
+                cfg.seq_words_per_tile as u32 - 2,       // seq Tile boundary
+            ];
+            for base in probes {
+                for n in 1..=4u8 {
+                    let mut covered = Vec::new();
+                    m.map_burst(base, n, |run, len| {
+                        let tile = run.bank as usize / bpt;
+                        for k in 0..len as u32 {
+                            let at = BankAddr { bank: run.bank + k, row: run.row };
+                            assert_eq!(at.bank as usize / bpt, tile, "run leaves its Tile");
+                            covered.push(at);
+                        }
+                    });
+                    let want: Vec<BankAddr> =
+                        (0..n as u32).map(|k| m.map(base + k)).collect();
+                    assert_eq!(covered, want, "{}: base {base} n {n}", cfg.name);
+                }
             }
         }
     }

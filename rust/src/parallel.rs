@@ -556,12 +556,14 @@ pub fn worker_loop(
                     let tile = (base + i) / ctx.pes_per_tile;
                     match route_action(now, gpe, tile, action, &ctx.l1.map, ctx.icn.topo()) {
                         RoutedAction::None => {}
-                        RoutedAction::Mem { req, master_port } => {
-                            births += 1;
+                        RoutedAction::Mem { reqs } => {
                             let d = &mut domains[tile - ctx.tile_lo];
-                            match master_port {
-                                None => d.ingest_local(req),
-                                Some(p) => d.ingest_master(p, req),
+                            for (req, master_port) in reqs.into_iter().flatten() {
+                                births += 1;
+                                match master_port {
+                                    None => d.ingest_local(req),
+                                    Some(p) => d.ingest_master(p, req),
+                                }
                             }
                         }
                         RoutedAction::Dma(op) => match op {

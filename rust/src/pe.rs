@@ -17,7 +17,7 @@
 //!   counter, then the core sleeps until the cluster's wake-up broadcast.
 
 use crate::interconnect::{ReqKind, Response};
-use crate::isa::{Op, OpClass, Program, CTRL_BUBBLE, NUM_REGS};
+use crate::isa::{Op, OpClass, Program, CTRL_BUBBLE, MAX_BURST_WORDS, NUM_REGS};
 
 /// Why the PE could not issue this cycle (Fig. 14a stall taxonomy).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,6 +41,12 @@ pub enum Action {
     Load { rd: u8, addr: u32 },
     /// Route a store to L1.
     Store { value: f32, addr: u32 },
+    /// Route a burst load of `n` words into `rd..rd+n` (one LSU
+    /// transaction-table entry for the whole burst).
+    LoadBurst { rd: u8, addr: u32, n: u8 },
+    /// Route a burst store of `n` words; the data was read from
+    /// `rs..rs+n` at issue, like [`Action::Store`] captures its value.
+    StoreBurst { addr: u32, n: u8, values: [f32; MAX_BURST_WORDS] },
     /// Route an atomic fetch-and-add to L1.
     AmoAdd { value: f32, addr: u32 },
     /// Barrier arrival: the cluster issues the Tile-local atomic and
@@ -219,6 +225,39 @@ impl Pe {
                 self.pc += 1;
                 Action::Store { value: self.regs[rs as usize], addr }
             }
+            Op::LdBurst { rd, n, addr } => {
+                // The whole destination window is one scoreboard unit:
+                // any in-flight owner of rd..rd+n is a WAW hazard.
+                let mask = ((1u32 << n) - 1) << rd;
+                if self.pending & mask != 0 {
+                    return self.stall(StallCause::Raw);
+                }
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.pending |= mask;
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                Action::LoadBurst { rd, addr, n }
+            }
+            Op::StBurst { rs, n, addr } => {
+                let mask = ((1u32 << n) - 1) << rs;
+                if self.pending & mask != 0 {
+                    return self.stall(StallCause::Raw);
+                }
+                if self.tx_inflight >= self.tx_cap {
+                    return self.stall(StallCause::Lsu);
+                }
+                self.tx_inflight += 1;
+                self.count_issue(&op);
+                self.pc += 1;
+                let mut values = [0.0; MAX_BURST_WORDS];
+                for k in 0..n as usize {
+                    values[k] = self.regs[rs as usize + k];
+                }
+                Action::StoreBurst { addr, n, values }
+            }
             Op::AtomAdd { rs, addr } => {
                 if self.is_pending(rs) {
                     return self.stall(StallCause::Raw);
@@ -335,10 +374,32 @@ impl Pe {
     /// acknowledgement. Touches only this PE's private state, so both the
     /// serial and the tile-parallel engine route responses through here
     /// (barrier-counter bookkeeping stays with the cluster).
+    ///
+    /// A burst's runs each answer once: every run writes back its beats
+    /// (reads) and frees their registers, but only the run flagged
+    /// `last` releases the shared transaction-table entry.
     pub fn apply_response(&mut self, r: &Response) {
         match r.kind {
-            ReqKind::Read { rd } => self.complete_load(rd, r.value),
-            ReqKind::Write | ReqKind::Amo => self.complete_ack(),
+            ReqKind::Read { rd } => {
+                for k in 0..r.words {
+                    let reg = rd + k;
+                    debug_assert!(self.is_pending(reg));
+                    // Bank accesses mirror beat 0 into wdata[0], so this
+                    // covers single-word responses too.
+                    self.regs[reg as usize] = r.wdata[k as usize];
+                    self.pending &= !(1 << reg);
+                }
+                if r.last {
+                    debug_assert!(self.tx_inflight > 0);
+                    self.tx_inflight -= 1;
+                }
+            }
+            ReqKind::Write => {
+                if r.last {
+                    self.complete_ack();
+                }
+            }
+            ReqKind::Amo => self.complete_ack(),
         }
     }
 
@@ -450,6 +511,64 @@ mod tests {
         assert!(matches!(pe.try_issue(), Action::Load { rd: 1, .. }));
         assert_eq!(pe.try_issue(), Action::None);
         assert_eq!(pe.stats.stall_raw, 1);
+    }
+
+    #[test]
+    fn burst_load_holds_one_tx_entry_and_window_raw() {
+        let mut pe = pe_with(vec![
+            Op::LdBurst { rd: 4, n: 4, addr: 100 },
+            Op::Add { rd: 1, ra: 6, rb: 6 }, // r6 inside the burst window
+            Op::Halt,
+        ]);
+        assert_eq!(pe.try_issue(), Action::LoadBurst { rd: 4, addr: 100, n: 4 });
+        assert_eq!(pe.outstanding(), 1, "whole burst = one table entry");
+        assert_eq!(pe.try_issue(), Action::None);
+        assert_eq!(pe.stats.stall_raw, 1, "window register still pending");
+        assert_eq!(pe.stats.loads, 1);
+    }
+
+    #[test]
+    fn burst_store_captures_window_values() {
+        let mut pe = pe_with(vec![
+            Op::LdImm { rd: 2, imm: 1.5 },
+            Op::LdImm { rd: 3, imm: 2.5 },
+            Op::StBurst { rs: 2, n: 2, addr: 40 },
+            Op::Halt,
+        ]);
+        pe.try_issue();
+        pe.try_issue();
+        assert_eq!(
+            pe.try_issue(),
+            Action::StoreBurst { addr: 40, n: 2, values: [1.5, 2.5, 0.0, 0.0] }
+        );
+        assert_eq!(pe.outstanding(), 1);
+    }
+
+    #[test]
+    fn split_burst_responses_retire_once() {
+        // A 4-word burst load split by the interconnect into a 3-beat run
+        // and a 1-beat run: the non-last run frees its registers but not
+        // the table entry; the last run frees the entry.
+        let mut pe = pe_with(vec![Op::LdBurst { rd: 4, n: 4, addr: 0 }, Op::Halt]);
+        pe.try_issue();
+        let run0 = Response {
+            core: 0,
+            kind: ReqKind::Read { rd: 4 },
+            value: 1.0,
+            latency: 1,
+            class: crate::interconnect::NumaClass::Local,
+            tag: 0,
+            words: 3,
+            last: false,
+            wdata: [1.0, 2.0, 3.0, 0.0],
+        };
+        pe.apply_response(&run0);
+        assert_eq!((pe.reg(4), pe.reg(5), pe.reg(6)), (1.0, 2.0, 3.0));
+        assert_eq!(pe.outstanding(), 1, "non-last run keeps the entry");
+        let run1 = Response { kind: ReqKind::Read { rd: 7 }, words: 1, last: true, wdata: [4.0; 4], ..run0 };
+        pe.apply_response(&run1);
+        assert_eq!(pe.reg(7), 4.0);
+        assert_eq!(pe.outstanding(), 0, "last run releases the entry");
     }
 
     #[test]

@@ -125,11 +125,14 @@ impl Json {
     }
 
     pub fn parse(text: &str) -> Result<Json> {
-        let bytes: Vec<char> = text.chars().collect();
-        let mut pos = 0usize;
-        let v = parse_value(&bytes, &mut pos)?;
-        skip_ws(&bytes, &mut pos);
-        ensure!(pos == bytes.len(), "trailing junk at char {pos}");
+        // Zero-copy cursor over the input bytes: every structural
+        // character in JSON is ASCII, so byte positions at delimiters
+        // are always char boundaries and string content can be sliced
+        // straight out of `text` (no per-char Vec of the whole doc).
+        let mut p = Parser { s: text, pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.s.len(), "trailing junk at byte {}", p.pos);
         Ok(v)
     }
 
@@ -202,113 +205,158 @@ fn render_str(s: &str, out: &mut String) {
     out.push('"');
 }
 
-fn skip_ws(b: &[char], pos: &mut usize) {
-    while *pos < b.len() && b[*pos].is_whitespace() {
-        *pos += 1;
-    }
+/// Byte cursor over the source text. `pos` is a byte index that only
+/// ever stops on ASCII structural characters (or the start of a UTF-8
+/// sequence inside a string, which is copied out as a whole `&str`
+/// slice), so all slicing below stays on char boundaries.
+struct Parser<'a> {
+    s: &'a str,
+    pos: usize,
 }
 
-fn parse_value(b: &[char], pos: &mut usize) -> Result<Json> {
-    skip_ws(b, pos);
-    let Some(&c) = b.get(*pos) else { bail!("unexpected end of JSON") };
-    match c {
-        'n' => parse_lit(b, pos, "null", Json::Null),
-        't' => parse_lit(b, pos, "true", Json::Bool(true)),
-        'f' => parse_lit(b, pos, "false", Json::Bool(false)),
-        '"' => parse_str(b, pos).map(Json::Str),
-        '[' => {
-            *pos += 1;
-            let mut items = Vec::new();
-            loop {
-                skip_ws(b, pos);
-                if b.get(*pos) == Some(&']') {
-                    *pos += 1;
-                    return Ok(Json::Arr(items));
-                }
-                if !items.is_empty() {
-                    ensure!(b.get(*pos) == Some(&','), "expected ',' in array at {pos}");
-                    *pos += 1;
-                }
-                items.push(parse_value(b, pos)?);
-            }
-        }
-        '{' => {
-            *pos += 1;
-            let mut pairs = Vec::new();
-            loop {
-                skip_ws(b, pos);
-                if b.get(*pos) == Some(&'}') {
-                    *pos += 1;
-                    return Ok(Json::Obj(pairs));
-                }
-                if !pairs.is_empty() {
-                    ensure!(b.get(*pos) == Some(&','), "expected ',' in object at {pos}");
-                    *pos += 1;
-                    skip_ws(b, pos);
-                }
-                let k = parse_str(b, pos)?;
-                skip_ws(b, pos);
-                ensure!(b.get(*pos) == Some(&':'), "expected ':' after key {k:?}");
-                *pos += 1;
-                pairs.push((k, parse_value(b, pos)?));
-            }
-        }
-        _ => {
-            let start = *pos;
-            while *pos < b.len() && "+-.eE0123456789".contains(b[*pos]) {
-                *pos += 1;
-            }
-            let tok: String = b[start..*pos].iter().collect();
-            tok.parse::<f64>()
-                .map(Json::Num)
-                .map_err(|_| err!("invalid JSON number {tok:?} at char {start}"))
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.s.as_bytes().get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        let b = self.s.as_bytes();
+        while self.pos < b.len() && b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
         }
     }
-}
 
-fn parse_lit(b: &[char], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
-    let end = *pos + lit.len();
-    ensure!(
-        end <= b.len() && b[*pos..end].iter().collect::<String>() == lit,
-        "invalid JSON literal at char {pos}"
-    );
-    *pos = end;
-    Ok(v)
-}
-
-fn parse_str(b: &[char], pos: &mut usize) -> Result<String> {
-    ensure!(b.get(*pos) == Some(&'"'), "expected string at char {pos}");
-    *pos += 1;
-    let mut s = String::new();
-    while let Some(&c) = b.get(*pos) {
-        *pos += 1;
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let Some(c) = self.peek() else { bail!("unexpected end of JSON") };
         match c {
-            '"' => return Ok(s),
-            '\\' => {
-                let Some(&e) = b.get(*pos) else { bail!("dangling escape") };
-                *pos += 1;
-                match e {
-                    '"' => s.push('"'),
-                    '\\' => s.push('\\'),
-                    '/' => s.push('/'),
-                    'n' => s.push('\n'),
-                    't' => s.push('\t'),
-                    'r' => s.push('\r'),
-                    'u' => {
-                        ensure!(*pos + 4 <= b.len(), "truncated \\u escape");
-                        let hex: String = b[*pos..*pos + 4].iter().collect();
-                        *pos += 4;
-                        let code = u32::from_str_radix(&hex, 16)
-                            .map_err(|_| err!("bad \\u escape {hex:?}"))?;
-                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => self.string().map(Json::Str),
+            b'[' => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                loop {
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        return Ok(Json::Arr(items));
                     }
-                    other => bail!("unsupported escape \\{other}"),
+                    if !items.is_empty() {
+                        ensure!(
+                            self.peek() == Some(b','),
+                            "expected ',' in array at byte {}",
+                            self.pos
+                        );
+                        self.pos += 1;
+                    }
+                    items.push(self.value()?);
                 }
             }
-            c => s.push(c),
+            b'{' => {
+                self.pos += 1;
+                let mut pairs = Vec::new();
+                loop {
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    if !pairs.is_empty() {
+                        ensure!(
+                            self.peek() == Some(b','),
+                            "expected ',' in object at byte {}",
+                            self.pos
+                        );
+                        self.pos += 1;
+                        self.skip_ws();
+                    }
+                    let k = self.string()?;
+                    self.skip_ws();
+                    ensure!(self.peek() == Some(b':'), "expected ':' after key {k:?}");
+                    self.pos += 1;
+                    pairs.push((k, self.value()?));
+                }
+            }
+            _ => {
+                let start = self.pos;
+                let b = self.s.as_bytes();
+                while self.pos < b.len() && b"+-.eE0123456789".contains(&b[self.pos]) {
+                    self.pos += 1;
+                }
+                let tok = &self.s[start..self.pos];
+                tok.parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| err!("invalid JSON number {tok:?} at byte {start}"))
+            }
         }
     }
-    bail!("unterminated string")
+
+    fn lit(&mut self, lit: &str, v: Json) -> Result<Json> {
+        let end = self.pos + lit.len();
+        ensure!(
+            end <= self.s.len() && &self.s.as_bytes()[self.pos..end] == lit.as_bytes(),
+            "invalid JSON literal at byte {}",
+            self.pos
+        );
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        ensure!(self.peek() == Some(b'"'), "expected string at byte {}", self.pos);
+        self.pos += 1;
+        let b = self.s.as_bytes();
+        let mut s = String::new();
+        let mut seg = self.pos; // start of the current unescaped run
+        while self.pos < b.len() {
+            match b[self.pos] {
+                b'"' => {
+                    s.push_str(&self.s[seg..self.pos]);
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    s.push_str(&self.s[seg..self.pos]);
+                    self.pos += 1;
+                    let Some(e) = self.peek() else { bail!("dangling escape") };
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'u' => {
+                            // str::get also rejects a slice that would
+                            // split a multi-byte char (bad escape body).
+                            let hex = self
+                                .s
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| err!("truncated \\u escape"))?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| err!("bad \\u escape {hex:?}"))?;
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => bail!("unsupported escape \\{}", other as char),
+                    }
+                    seg = self.pos;
+                }
+                // Multi-byte UTF-8 and plain ASCII both ride along in
+                // the current run; advance to the next char start.
+                _ => {
+                    self.pos += 1;
+                    while self.pos < b.len() && b[self.pos] & 0xC0 == 0x80 {
+                        self.pos += 1;
+                    }
+                }
+            }
+        }
+        bail!("unterminated string")
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -458,6 +506,18 @@ impl RunReport {
                 "reqs_per_class".into(),
                 Json::Arr(s.reqs_per_class.iter().map(|&x| Json::Num(x as f64)).collect()),
             ),
+            (
+                "burst_reqs_per_class".into(),
+                Json::Arr(
+                    s.burst_reqs_per_class.iter().map(|&x| Json::Num(x as f64)).collect(),
+                ),
+            ),
+            (
+                "burst_words_per_class".into(),
+                Json::Arr(
+                    s.burst_words_per_class.iter().map(|&x| Json::Num(x as f64)).collect(),
+                ),
+            ),
             ("ipc".into(), Json::Num(s.ipc())),
             ("gflops".into(), Json::Num(s.gflops())),
         ]);
@@ -502,8 +562,19 @@ impl RunReport {
             }
             Ok(out)
         };
+        // u64 counter arrays; absent fields (pre-burst documents) read
+        // as zeros so old reports stay parseable.
+        let arr4u = |key: &str| -> Result<[u64; 4]> {
+            if sj.get(key).is_none() {
+                return Ok([0; 4]);
+            }
+            let a = arr4(key)?;
+            Ok([a[0] as u64, a[1] as u64, a[2] as u64, a[3] as u64])
+        };
         let amat_per_class = arr4("amat_per_class")?;
         let rq = arr4("reqs_per_class")?;
+        let burst_reqs_per_class = arr4u("burst_reqs_per_class")?;
+        let burst_words_per_class = arr4u("burst_words_per_class")?;
         let stats = RunStats {
             cycles: sj.field_u64("cycles")?,
             instructions: sj.field_u64("instructions")?,
@@ -520,6 +591,8 @@ impl RunReport {
             amat: sj.field_f64("amat")?,
             amat_per_class,
             reqs_per_class: [rq[0] as u64, rq[1] as u64, rq[2] as u64, rq[3] as u64],
+            burst_reqs_per_class,
+            burst_words_per_class,
         };
         Ok(RunReport {
             workload: j.field_str("workload")?,
@@ -636,6 +709,64 @@ mod tests {
         assert!(Json::parse("[1, 2,]").is_err()); // trailing comma → value error
         assert!(Json::parse("{\"a\": 1} x").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn json_parses_multibyte_strings() {
+        let v = Json::Obj(vec![("s".into(), Json::Str("héllo → wörld ✓".into()))]);
+        let r = Json::parse(&v.render()).unwrap();
+        assert_eq!(r.field_str("s").unwrap(), "héllo → wörld ✓");
+        assert_eq!(Json::parse("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+        assert!(Json::parse("\"abc\\u12\"").is_err()); // truncated escape
+    }
+
+    #[test]
+    fn run_report_burst_fields_round_trip_and_default() {
+        let rep = RunReport {
+            workload: "axpy-n1024".into(),
+            kind: "axpy".into(),
+            config: "tiny".into(),
+            fingerprint: "abcd".into(),
+            scale: "fast".into(),
+            engine_threads: 1,
+            max_cycles: 1000,
+            stats: RunStats {
+                cycles: 10,
+                instructions: 20,
+                flops: 30,
+                num_pes: 4,
+                freq_mhz: 500.0,
+                stall_raw: 1,
+                stall_lsu: 2,
+                stall_ctrl: 3,
+                stall_synch: 4,
+                loads: 5,
+                stores: 6,
+                atomics: 7,
+                amat: 1.5,
+                amat_per_class: [1.0, 2.0, 3.0, 4.0],
+                reqs_per_class: [8, 0, 0, 1],
+                burst_reqs_per_class: [2, 0, 0, 0],
+                burst_words_per_class: [8, 0, 0, 0],
+            },
+            dma_bytes: None,
+            verdict: Verdict::NotChecked,
+            estimate: None,
+        };
+        assert_eq!(RunReport::from_json(&rep.to_json()).unwrap(), rep);
+        // Pre-burst documents (no burst arrays) parse with zeroed
+        // counters instead of failing.
+        let Json::Obj(mut pairs) = rep.to_json() else { unreachable!() };
+        for (k, v) in pairs.iter_mut() {
+            if k == "stats" {
+                if let Json::Obj(sp) = v {
+                    sp.retain(|(sk, _)| !sk.starts_with("burst_"));
+                }
+            }
+        }
+        let old = RunReport::from_json(&Json::Obj(pairs)).unwrap();
+        assert_eq!(old.stats.burst_reqs_per_class, [0; 4]);
+        assert_eq!(old.stats.burst_words_per_class, [0; 4]);
     }
 
     #[test]

@@ -123,6 +123,59 @@ fn spmmadd_identical_on_all_table6_configs() {
     }
 }
 
+/// Burst-on differentials: with `cfg.burst` the kernels issue multi-word
+/// requests whose beats claim consecutive bank ports as one unit, and
+/// the split/merge of those requests across shard boundaries is exactly
+/// where a non-deterministic engine would diverge first. Serial vs
+/// 1/8/16 threads on every Table-6 config, for the three burst-emitting
+/// kernels, bit-identical stats (including the burst split counters)
+/// and memory image.
+#[test]
+fn burst_runs_identical_on_all_table6_configs() {
+    for cfg in table6_configs() {
+        let cfg = cfg.with_burst(true);
+        let kernels: Vec<Box<dyn Workload>> = vec![
+            Box::new(axpy::Axpy::with(axpy::AxpyParams {
+                n: cfg.num_banks() * 4,
+                alpha: 2.0,
+            })),
+            Box::new(dotp::Dotp::with(dotp::DotpParams { n: cfg.num_banks() * 4 })),
+            Box::new(spmmadd::Spmmadd::with(spmmadd::SpmmaddParams {
+                rows: cfg.num_pes().min(512),
+                cols: 256,
+                nnz_per_row: 4,
+                seed: 0xD1FF,
+            })),
+        ];
+        for w in &kernels {
+            let (serial_stats, serial_out) = run_engine(&cfg, &**w, None);
+            assert!(
+                serial_stats.burst_reqs_per_class.iter().sum::<u64>() > 0,
+                "{} / {}: burst mode produced no burst traffic",
+                cfg.name,
+                w.kind()
+            );
+            for &threads in &[1usize, 8, 16] {
+                let (par_stats, par_out) = run_engine(&cfg, &**w, Some(threads));
+                assert_eq!(
+                    serial_stats,
+                    par_stats,
+                    "{} / {}: burst stats diverge at {threads} threads",
+                    cfg.name,
+                    w.kind()
+                );
+                assert_eq!(
+                    serial_out,
+                    par_out,
+                    "{} / {}: burst image diverges at {threads} threads",
+                    cfg.name,
+                    w.kind()
+                );
+            }
+        }
+    }
+}
+
 /// The Fig. 14b double-buffer pipeline: DMA start/wait chains overlapping
 /// compute across rounds — the richest interleaving of the coordinator's
 /// DMA control path with the sharded memory step. `DbResult` carries the

@@ -42,6 +42,14 @@ EXACT_FIELDS = [
     "stats.reqs_per_class[1]",
     "stats.reqs_per_class[2]",
     "stats.reqs_per_class[3]",
+    "stats.burst_reqs_per_class[0]",
+    "stats.burst_reqs_per_class[1]",
+    "stats.burst_reqs_per_class[2]",
+    "stats.burst_reqs_per_class[3]",
+    "stats.burst_words_per_class[0]",
+    "stats.burst_words_per_class[1]",
+    "stats.burst_words_per_class[2]",
+    "stats.burst_words_per_class[3]",
 ]
 
 # Timing-derived fields: tolerate --rtol relative drift (config changes,
@@ -93,7 +101,15 @@ def key_of(report: dict, key_fields: list[str]) -> tuple:
 
 
 def drift(old, new, rtol: float, atol: float) -> tuple[float, bool]:
-    """(relative drift, within_tolerance) for a field pair."""
+    """(relative drift, within_tolerance) for a field pair.
+
+    Both the reported drift and the pass/fail check use the symmetric
+    denominator ``max(|old|, |new|)``: the check must judge exactly the
+    number it prints, and a zero (or near-zero) baseline must not turn
+    every nonzero measurement into an automatic failure while the table
+    claims a finite drift (that combination previously made the printed
+    drift and the verdict disagree).
+    """
     if old is None and new is None:
         return 0.0, True
     if old is None or new is None:
@@ -103,7 +119,7 @@ def drift(old, new, rtol: float, atol: float) -> tuple[float, bool]:
         return 0.0, True
     denom = max(abs(old), abs(new))
     rel = abs(new - old) / denom if denom > 0 else float("inf")
-    return rel, abs(new - old) <= atol + rtol * abs(old)
+    return rel, abs(new - old) <= atol + rtol * denom
 
 
 def main() -> int:
