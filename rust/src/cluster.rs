@@ -495,8 +495,8 @@ impl Cluster {
 
         use crate::dma::{hbm_image_read, hbm_image_write, DmaEvent};
         use crate::parallel::{
-            worker_loop, ControlBlock, CycleSummary, DmaJob, PoolShutdown, SpinBarrier,
-            WorkerChannel, WorkerCtx,
+            await_summary, worker_loop, ControlBlock, CycleSummary, DmaJob, PoolShutdown,
+            SpinBarrier, WorkerChannel, WorkerCtx,
         };
 
         let num_tiles = self.cfg.num_tiles();
@@ -555,7 +555,14 @@ impl Cluster {
             seed_xfer: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             ..ControlBlock::default()
         };
-        for r in icn.take_pending_responses() {
+        // Scratch pair for the pending-event hand-off, reused as the
+        // post-scope restore buffers below: the interconnect's own
+        // carry-over queues keep their capacity (drain_pending appends
+        // and leaves them empty) and no per-run Vecs are thrown away.
+        let mut pend_resp: Vec<Response> = Vec::new();
+        let mut pend_xfer: Vec<XferEvent> = Vec::new();
+        icn.drain_pending(&mut pend_resp, &mut pend_xfer);
+        for r in pend_resp.drain(..) {
             // Arrival counts land here (the cycle the response is
             // delivered — exactly when the serial engine would bookkeep
             // it); the waiting-list half is registered by the owning
@@ -569,7 +576,7 @@ impl Cluster {
                 .unwrap()
                 .push(r);
         }
-        for ev in icn.take_pending_xfers() {
+        for ev in pend_xfer.drain(..) {
             seed_events += 1;
             cb0.seed_xfer[ev.dst_tile as usize / tiles_per_worker]
                 .get_mut()
@@ -814,7 +821,15 @@ impl Cluster {
                 // phase 2 + summary reduction, all inside the workers ---
                 now_shared.store(now, Ordering::SeqCst);
                 barrier.wait();
-                barrier.wait();
+                // Fused completion wait: instead of a second barrier
+                // crossing, observe the summary tree's root ready-stamp.
+                // Every worker's stamp is transitively awaited along the
+                // root's subtree chain (Release/Acquire), so once this
+                // returns, all workers have published their mailboxes,
+                // updated `inflight`, dropped their ctrl read guards and
+                // are on their way back to the cycle-top rendezvous —
+                // the pre-phase above can mutate freely.
+                await_summary(&channels[0].summary_ready, now, &failed);
                 if failed.load(Ordering::SeqCst) {
                     // _shutdown drains the pool during the unwind.
                     panic!("parallel engine: a worker thread panicked");
@@ -860,8 +875,10 @@ impl Cluster {
             barriers.entry(id).or_default().waiting.push(pe);
         }
         dma_waiters.extend(cb_rest.seed_dma_waiters);
-        let mut rest_resp: Vec<Response> = Vec::new();
-        let mut rest_xfer: Vec<XferEvent> = Vec::new();
+        // Recycle the seed scratch (emptied above) as the restore
+        // buffers instead of allocating a fresh pair per run.
+        let mut rest_resp = pend_resp;
+        let mut rest_xfer = pend_xfer;
         for cell in &cb_rest.seed_resp {
             rest_resp.append(&mut cell.lock().unwrap());
         }

@@ -17,6 +17,7 @@ use crate::memory::L1Memory;
 use crate::physical::{area, congestion, eda, energy, scaling, soa};
 use crate::report::{f1, f2, f3, int, pct, Table};
 use crate::session::{Job, Session};
+use crate::topology::Topology;
 
 use super::Scale;
 
@@ -472,6 +473,47 @@ pub fn headline(sess: &Session) -> Table {
     // HBML.
     let (gbps, util) = hbml_sweep_point(900.0, DdrRate::G3_6, scale.pick(896 * 1024, 64 * 1024));
     t.row(vec!["HBML @900 MHz GB/s".into(), "896 (97%)".into(), format!("{} ({})", f1(gbps), pct(util))]);
+    t
+}
+
+// ------------------------------------------------------------------
+// Scale-out — scale-up vs scale-out at equal total PE count
+// ------------------------------------------------------------------
+
+/// One big TeraPool cluster vs 2/4 smaller clusters at the same total
+/// PE count ([`Topology::split`]), every variant through the system
+/// engine so the staging/merge overhead accounting is uniform: measured
+/// total cycles, the compute/overhead split, inter-cluster link
+/// traffic, shared-bus traffic, and aggregate GFLOP/s.
+pub fn fig_scaleout(s: &Session) -> Table {
+    let base = ClusterConfig::terapool(9);
+    let mut t = Table::new(
+        "Scale-out — one big cluster vs 2/4 smaller at equal total PE count",
+        &[
+            "System", "Clusters", "PEs", "Cycles", "Compute", "Overhead %",
+            "Link words", "Bus words", "GFLOP/s",
+        ],
+    );
+    for parts in [1usize, 2, 4] {
+        let topo = Topology::split(&base, parts).expect("terapool splits 1/2/4-way");
+        for kind in ["gemm", "fft"] {
+            let r = s.system(&topo, kind).expect("scale-out system run");
+            let info = r.system.as_ref().expect("system runs carry the system section");
+            let st = &r.stats;
+            let overhead = (info.stage_cycles + info.merge_cycles) as f64 / st.cycles as f64;
+            t.row(vec![
+                r.workload.clone(),
+                int(info.clusters.len() as u64),
+                int(st.num_pes as u64),
+                int(st.cycles),
+                int(info.compute_cycles),
+                pct(overhead),
+                int(info.link_words),
+                int(info.bus_words),
+                f1(st.gflops()),
+            ]);
+        }
+    }
     t
 }
 

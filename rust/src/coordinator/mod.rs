@@ -33,6 +33,8 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("scaling", "Sec. 2 Kung balance under scale-up"),
     ("headline", "headline numbers vs paper"),
     ("all", "every experiment above, in order"),
+    ("fig-scaleout", "scale-up vs scale-out: 1 vs 2/4 clusters at equal PEs"),
+    ("system", "chunked GEMM + FFT across a --topology system (checked)"),
     ("validate", "kernels vs host references + AOT goldens"),
     ("ablate-txtable", "LSU transaction-table depth ablation"),
     ("ablate-addrmap", "sequential-region size ablation"),

@@ -18,6 +18,15 @@ pub enum ErrorKind {
     /// The cluster hit `max_cycles` before `done()`: the run did not
     /// finish, so its output image is garbage and must not be compared.
     MaxCyclesExceeded,
+    /// A system topology description failed validation (unknown link
+    /// endpoint, zero-width link, mesh/link contradictions, unreachable
+    /// cluster, ...) — a typed error so the CLI and the rejection-table
+    /// tests can match the class instead of the message.
+    BadTopology,
+    /// The requested combination is declaratively out of scope for the
+    /// chosen run path (e.g. the analytic estimate census on a
+    /// multi-cluster system run) — refused, never silently approximated.
+    Unsupported,
 }
 
 /// A human-readable error with a machine-matchable [`ErrorKind`].
@@ -51,6 +60,16 @@ impl Error {
             ErrorKind::MaxCyclesExceeded,
             format!("{what}: did not finish within {max_cycles} cycles (possible deadlock)"),
         )
+    }
+
+    /// `BadTopology` with a description of the offending line/rule.
+    pub fn bad_topology(msg: impl Into<String>) -> Self {
+        Error::with_kind(ErrorKind::BadTopology, format!("topology: {}", msg.into()))
+    }
+
+    /// `Unsupported` for a refused run-path combination.
+    pub fn unsupported(msg: impl Into<String>) -> Self {
+        Error::with_kind(ErrorKind::Unsupported, msg.into())
     }
 
     pub fn kind(&self) -> ErrorKind {

@@ -788,11 +788,13 @@ impl Interconnect {
     /// Hand the serial engine's carry-over buffers to a parallel run
     /// (mixed-engine stepping: responses already drained but not yet
     /// delivered, and transfer events awaiting the next-cycle merge).
-    pub(crate) fn take_pending_responses(&mut self) -> Vec<Response> {
-        std::mem::take(&mut self.pending_resp)
-    }
-    pub(crate) fn take_pending_xfers(&mut self) -> Vec<XferEvent> {
-        std::mem::take(&mut self.xfer_buf)
+    /// Appends into caller-owned scratch in stream order and leaves the
+    /// internal queues empty *with their capacity intact* — the hot-path
+    /// variant of `mem::take`, which would discard the allocations on
+    /// every run (Table-6 scale: one pair per `try_run_threads` call).
+    pub(crate) fn drain_pending(&mut self, resp: &mut Vec<Response>, xfers: &mut Vec<XferEvent>) {
+        resp.append(&mut self.pending_resp);
+        xfers.append(&mut self.xfer_buf);
     }
 
     /// Inverse hand-off: a parallel run that exited with undelivered

@@ -120,22 +120,66 @@ impl Workload for Fft {
 }
 
 pub fn build(cfg: &ClusterConfig, p: &FftParams) -> Staged {
+    build_band(cfg, p, 0, 1, true).0
+}
+
+/// Placement of one cluster's frame band inside the full batch — what
+/// the system layer needs for the twiddle halo broadcast and the
+/// re/im-plane merge into the main-memory image.
+#[derive(Debug, Clone, Copy)]
+pub struct FftBand {
+    /// First transform frame owned by this band.
+    pub f0: usize,
+    /// Frames in this band.
+    pub frames: usize,
+    pub re_base: u32,
+    pub im_base: u32,
+    pub tw_re_base: u32,
+    pub tw_im_base: u32,
+    /// Words per twiddle plane (`copies * n`).
+    pub tw_words: usize,
+}
+
+/// [`build`] restricted to frame band `part` of `parts`: the cluster
+/// transforms frames `[f0, f0 + frames)` out of the full batch, with
+/// band-sized re/im planes. The twiddle table is staged locally only
+/// when `stage_tw` (cluster 0 of a system run); the other clusters
+/// receive it over the inter-cluster links. For `parts > 1` the replica
+/// count scales with the cluster's PE count (`npes/64`, clamped to
+/// [1, TW_COPIES]) instead of the flat TW_COPIES — a split cluster has
+/// proportionally fewer PEs hammering the table *and* proportionally
+/// less L1 to hold replicas in; `parts == 1` keeps the legacy flat
+/// count so single-cluster runs stay bit-identical.
+pub fn build_band(
+    cfg: &ClusterConfig,
+    p: &FftParams,
+    part: usize,
+    parts: usize,
+    stage_tw: bool,
+) -> (Staged, FftBand) {
     let n = p.n;
     let mut m = 0;
     while 1usize << (2 * m) < n {
         m += 1;
     }
     assert_eq!(1usize << (2 * m), n, "FFT length must be a power of 4");
+    let band = chunk_range(p.batch, part, parts);
+    let (f0, lb) = (band.start, band.end - band.start);
+    assert!(lb > 0, "band {part}/{parts} of {} frames is empty", p.batch);
     let npes = cfg.num_pes();
 
-    // Replicate the twiddle table: PEs index copy `pe % TW_COPIES`,
+    // Replicate the twiddle table: PEs index copy `pe % tw_copies`,
     // rotating the hot entries across banks (real deployments hold the
     // per-stage twiddles in registers or Tile-private memory; a shared
     // single-copy table would serialize every butterfly on bank 0).
-    let tw_copies = TW_COPIES.min(npes).max(1);
+    let tw_copies = if parts == 1 {
+        TW_COPIES.min(npes).max(1)
+    } else {
+        TW_COPIES.min(npes.div_ceil(64)).max(1)
+    };
     let mut alloc = Alloc::new(cfg);
-    let xr = alloc.alloc((p.batch * n) as u32);
-    let xi = alloc.alloc((p.batch * n) as u32);
+    let xr = alloc.alloc((lb * n) as u32);
+    let xi = alloc.alloc((lb * n) as u32);
     let twr = alloc.alloc((tw_copies * n) as u32);
     let twi = alloc.alloc((tw_copies * n) as u32);
 
@@ -158,7 +202,7 @@ pub fn build(cfg: &ClusterConfig, p: &FftParams) -> Staged {
     }
 
     let bpf = n / 4; // butterflies per transform per stage
-    let total_bf = p.batch * bpf;
+    let total_bf = lb * bpf;
 
     let mut programs = Vec::with_capacity(npes);
     for pe in 0..npes {
@@ -258,7 +302,7 @@ pub fn build(cfg: &ClusterConfig, p: &FftParams) -> Staged {
         // Final pass: in-place base-4 digit-reversal (an involution —
         // each PE swaps its share of k < rev(k) pairs).
         let swap_pairs: Vec<usize> = (0..n).filter(|&k| digit_reverse(k, m) > k).collect();
-        let total_swaps = p.batch * swap_pairs.len();
+        let total_swaps = lb * swap_pairs.len();
         for g in chunk_range(total_swaps, pe, npes) {
             let (f, si) = (g / swap_pairs.len(), g % swap_pairs.len());
             let k = swap_pairs[si];
@@ -283,22 +327,40 @@ pub fn build(cfg: &ClusterConfig, p: &FftParams) -> Staged {
     // Butterfly FLOP count: per butterfly 3 cmul (6 mul + 6 add/sub eqv →
     // using FMA: 34 f32 ops) — report the classic 8·N·log4(N) complex-op
     // convention scaled to real ops.
-    let flops = (p.batch * m * bpf) as u64 * 34;
+    let flops = (lb * m * bpf) as u64 * 34;
 
-    Staged {
-        name: format!("fft-{}x{}", p.batch, n),
+    let mut inputs = vec![
+        (xr, input_re(p)[f0 * n..(f0 + lb) * n].to_vec()),
+        (xi, input_im(p)[f0 * n..(f0 + lb) * n].to_vec()),
+    ];
+    if stage_tw {
+        inputs.push((twr, tw_re));
+        inputs.push((twi, tw_im));
+    }
+    let name = if parts == 1 {
+        format!("fft-{}x{}", p.batch, n)
+    } else {
+        format!("fft-{}x{}[{part}/{parts}]", p.batch, n)
+    };
+    let staged = Staged {
+        name,
         programs,
-        inputs: vec![
-            (xr, input_re(p)),
-            (xi, input_im(p)),
-            (twr, tw_re),
-            (twi, tw_im),
-        ],
+        inputs,
         output_base: xr,
-        output_len: p.batch * n, // re plane; im plane follows at xi
+        output_len: lb * n, // re plane; im plane follows at xi
         flops,
         dma: None,
-    }
+    };
+    let band = FftBand {
+        f0,
+        frames: lb,
+        re_base: xr,
+        im_base: xi,
+        tw_re_base: twr,
+        tw_im_base: twi,
+        tw_words: tw_copies * n,
+    };
+    (staged, band)
 }
 
 /// Word base of the imaginary output plane (planes are allocated

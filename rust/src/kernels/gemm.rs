@@ -90,15 +90,52 @@ impl Workload for Gemm {
 }
 
 pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> Staged {
+    build_band(cfg, p, 0, 1, true).0
+}
+
+/// Placement of one cluster's block-row band inside the full problem —
+/// what the system layer needs to wire the band into the scale-out
+/// schedule (where the shared B lives for the halo broadcast, which C
+/// rows to merge into the main-memory image).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmBand {
+    /// First C row owned by this band.
+    pub row0: usize,
+    /// C rows in this band.
+    pub rows: usize,
+    pub a_base: u32,
+    pub b_base: u32,
+    pub c_base: u32,
+}
+
+/// [`build`] restricted to block-row band `part` of `parts`: the cluster
+/// computes C rows `[row0, row0 + rows)` from its own A band and a full
+/// copy of B. The A band and (when `stage_b`) B are staged locally;
+/// non-root clusters of a system run pass `stage_b = false` and receive
+/// B over the inter-cluster links instead (same bytes — staging is the
+/// functional delivery, the links carry the timing/traffic). Layout is
+/// compact (band-sized A and C), so split clusters with proportionally
+/// smaller L1s still fit the full-scale problem.
+pub fn build_band(
+    cfg: &ClusterConfig,
+    p: &GemmParams,
+    part: usize,
+    parts: usize,
+    stage_b: bool,
+) -> (Staged, GemmBand) {
     assert!(p.m % BM == 0 && p.n % BN == 0, "4x4 blocking requires 4|M, 4|N");
+    let blocks_m_total = p.m / BM;
+    let band = chunk_range(blocks_m_total, part, parts);
+    let blocks_m = band.end - band.start;
+    assert!(blocks_m > 0, "band {part}/{parts} of {blocks_m_total} block-rows is empty");
+    let (row0, rows) = (band.start * BM, blocks_m * BM);
     let npes = cfg.num_pes();
 
     let mut alloc = Alloc::new(cfg);
-    let ab = alloc.alloc((p.m * p.k) as u32);
+    let ab = alloc.alloc((rows * p.k) as u32);
     let bb = alloc.alloc((p.k * p.n) as u32);
-    let cb = alloc.alloc((p.m * p.n) as u32);
+    let cb = alloc.alloc((rows * p.n) as u32);
 
-    let blocks_m = p.m / BM;
     let blocks_n = p.n / BN;
     let nblocks = blocks_m * blocks_n;
 
@@ -121,6 +158,8 @@ pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> Staged {
             for kk0 in 0..p.k {
                 let kk = (kk0 + phase) % p.k;
                 for u in 0..BM {
+                    // Band-local row: the A/C arrays hold only this
+                    // band's rows.
                     let row = bi * BM + u;
                     t.ld(R_A + u as u8, ab + (row * p.k + kk) as u32);
                 }
@@ -149,15 +188,26 @@ pub fn build(cfg: &ClusterConfig, p: &GemmParams) -> Staged {
         programs.push(t);
     }
 
-    Staged {
-        name: format!("gemm-{}x{}x{}", p.m, p.n, p.k),
-        programs,
-        inputs: vec![(ab, input_a(p)), (bb, input_b(p))],
-        output_base: cb,
-        output_len: p.m * p.n,
-        flops: 2 * (p.m * p.n * p.k) as u64,
-        dma: None,
+    let a_band = input_a(p)[row0 * p.k..(row0 + rows) * p.k].to_vec();
+    let mut inputs = vec![(ab, a_band)];
+    if stage_b {
+        inputs.push((bb, input_b(p)));
     }
+    let name = if parts == 1 {
+        format!("gemm-{}x{}x{}", p.m, p.n, p.k)
+    } else {
+        format!("gemm-{}x{}x{}[{part}/{parts}]", p.m, p.n, p.k)
+    };
+    let staged = Staged {
+        name,
+        programs,
+        inputs,
+        output_base: cb,
+        output_len: rows * p.n,
+        flops: 2 * (rows * p.n * p.k) as u64,
+        dma: None,
+    };
+    (staged, GemmBand { row0, rows, a_base: ab, b_base: bb, c_base: cb })
 }
 
 /// Host-side reference.

@@ -36,6 +36,15 @@
 //!   interconnect numbers, validation verdict, JSON-serializable), and
 //!   batches of workload×config jobs fan out across host threads with
 //!   bit-identical-to-sequential results;
+//! * the **scale-out system layer** ([`topology`], [`system`],
+//!   [`session::Session::system`]): a declarative multi-cluster topology
+//!   (text format under `examples/`, programmatic [`Topology::split`]),
+//!   point-to-point / 2-D-mesh inter-cluster links and one off-chip
+//!   memory node on a shared bus; kernels are chunked data-parallel
+//!   across the clusters (band staging, halo broadcasts, deterministic
+//!   merge) and the compute phase steps cluster-parallel on host
+//!   threads, bit-identical to serial system stepping — regenerates the
+//!   scale-up-vs-scale-out comparison (`fig-scaleout`);
 //! * **physical-design models** calibrated on the paper's GF12 data:
 //!   routing congestion, GE area, per-instruction energy + EDP, EDA effort
 //!   ([`physical`]) — regenerates Table 3/Fig. 3 and Figs. 11–13;
@@ -73,8 +82,11 @@ pub mod rng;
 pub mod runtime;
 pub mod session;
 pub mod stats;
+pub mod system;
+pub mod topology;
 
 pub use config::{ClusterConfig, Scale};
 pub use kernels::Workload;
 pub use report::RunReport;
 pub use session::{Job, Session};
+pub use topology::Topology;

@@ -31,10 +31,11 @@ use terapool::{bail, ensure};
 
 const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N] [--json PATH]
        terapool sweep [--fast] [--estimate] [--json PATH]
+       terapool system [--topology PATH] [--fast] [--threads N]
        terapool --list
 experiments:
   table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
-  table5 table6 scaling headline all validate sweep
+  table5 table6 scaling headline fig-scaleout system all validate sweep
   ablate-txtable ablate-addrmap ablate-spill
 options:
   --fast        reduced problem sizes (smoke runs, CI)
@@ -56,6 +57,12 @@ options:
   --burst       enable TCDM burst access (ClusterConfig::burst): kernels
                 that support it issue multi-word loads/stores moving up
                 to MAX_BURST_WORDS consecutive-bank words per port grant
+  --topology P  system topology file for `terapool system` (declarative
+                clusters + inter-cluster links + memory node; default
+                examples/quad.topo). The multi-cluster run chunks GEMM
+                and FFT data-parallel across the clusters, checks the
+                merged memory image against the host references, and
+                reports per-cluster / per-link / bus breakdowns
   --list        enumerate registered workloads and experiments";
 
 fn main() -> Result<()> {
@@ -73,6 +80,7 @@ fn main() -> Result<()> {
     let no_skip = args.iter().any(|a| a == "--no-skip");
     let estimate = args.iter().any(|a| a == "--estimate");
     let burst = args.iter().any(|a| a == "--burst");
+    let topology = parse_value(&args, "--topology")?;
 
     if args.iter().any(|a| a == "--list") {
         print_list();
@@ -99,7 +107,16 @@ fn main() -> Result<()> {
     // Dispatch, but write the --json document even when the command
     // fails: a failing `validate` is exactly when CI needs the report
     // (the Failed verdicts are in it).
-    let outcome = dispatch(&cmd, scale, threads, burst, &session, &mut reports);
+    let outcome = dispatch(
+        &cmd,
+        scale,
+        threads,
+        burst,
+        no_skip,
+        topology.as_deref(),
+        &session,
+        &mut reports,
+    );
     reports.extend(session.take_reports());
     if let Some(path) = json_path {
         std::fs::write(&path, reports_to_json(&reports))?;
@@ -108,11 +125,14 @@ fn main() -> Result<()> {
     outcome
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     cmd: &str,
     scale: Scale,
     threads: usize,
     burst: bool,
+    no_skip: bool,
+    topology: Option<&str>,
     session: &Session,
     reports: &mut Vec<RunReport>,
 ) -> Result<()> {
@@ -145,6 +165,8 @@ fn dispatch(
             coordinator::scaling_analysis().print();
             coordinator::headline(session).print();
         }
+        "fig-scaleout" => coordinator::fig_scaleout(session).print(),
+        "system" => system_cmd(scale, threads, no_skip, topology, reports)?,
         "validate" => validate(scale, threads, reports)?,
         "sweep" => sweep(session, burst)?,
         "ablate-txtable" => ablate_txtable(session),
@@ -173,7 +195,10 @@ fn parse_value(args: &[String], flag: &str) -> Result<Option<String>> {
 
 /// Is `args[i]` the value operand of a preceding value-taking option?
 fn is_option_value(args: &[String], i: usize) -> bool {
-    i > 0 && (args[i - 1] == "--threads" || args[i - 1] == "--json")
+    i > 0
+        && (args[i - 1] == "--threads"
+            || args[i - 1] == "--json"
+            || args[i - 1] == "--topology")
 }
 
 /// `--list`: everything the registry and the experiment index know.
@@ -185,6 +210,74 @@ fn print_list() {
     println!("\nexperiments:");
     for (name, what) in coordinator::EXPERIMENTS {
         println!("  {name:16} {what}");
+    }
+}
+
+/// `terapool system`: load (or default) the topology, run chunked GEMM
+/// and FFT data-parallel across its clusters with host-reference
+/// checking on, print the per-cluster / per-link / bus breakdowns, and
+/// fail on any `Failed` verdict. Reports land in `reports` before any
+/// failure propagates so `--json` carries them.
+fn system_cmd(
+    scale: Scale,
+    threads: usize,
+    no_skip: bool,
+    topology: Option<&str>,
+    reports: &mut Vec<RunReport>,
+) -> Result<()> {
+    let path = std::path::PathBuf::from(topology.unwrap_or("examples/quad.topo"));
+    let topo = terapool::topology::Topology::load(&path)?;
+    println!("system: {}", topo.describe());
+    // The session's own ClusterConfig is irrelevant here — system runs
+    // simulate the topology's cluster configs.
+    let s = Session::new(ClusterConfig::terapool(9))
+        .scale(scale)
+        .threads(threads)
+        .fast_forward(!no_skip)
+        .check(true);
+    let mut failures = 0usize;
+    for kind in ["gemm", "fft"] {
+        let r = s.system(&topo, kind)?;
+        print_system_report(&r);
+        if r.verdict.is_failure() {
+            failures += 1;
+        }
+    }
+    reports.extend(s.take_reports());
+    ensure!(failures == 0, "system: {failures} kernel(s) failed their host reference");
+    Ok(())
+}
+
+fn print_system_report(r: &RunReport) {
+    let info = r.system.as_ref().expect("system runs carry the system section");
+    println!(
+        "\n{}: {} cycles (stage {} + compute {} + merge {}), {} [{}]",
+        r.workload,
+        r.stats.cycles,
+        info.stage_cycles,
+        info.compute_cycles,
+        info.merge_cycles,
+        r.verdict.status(),
+        r.verdict.detail(),
+    );
+    println!(
+        "  aggregate: {} PEs, {:.1} GFLOP/s, bus {} words / {} busy cycles",
+        r.stats.num_pes,
+        r.stats.gflops(),
+        info.bus_words,
+        info.bus_busy_cycles
+    );
+    for c in &info.clusters {
+        println!(
+            "  cluster {:>4}: {:>5} PEs  {:>9} cycles  {:>11} instr",
+            c.name, c.num_pes, c.cycles, c.instructions
+        );
+    }
+    for l in &info.links {
+        println!(
+            "  link {:>10}: {:>7} words  {:>6} busy cycles",
+            l.name, l.words, l.busy_cycles
+        );
     }
 }
 

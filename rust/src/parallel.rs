@@ -62,10 +62,12 @@ use crate::stats::IdCounts;
 /// examples): the host's cores, capped at 16. With the pre-phase sharded
 /// (owner-computes delivery, distributed barriers/DMA, mailbox transfer
 /// scatter) the coordinator's per-cycle work is O(threads); what bounds
-/// scaling now is the two barrier crossings plus the summary-tree depth,
-/// whose cost grows with the worker count while each worker's share of
-/// the domain work shrinks. Past ~16 workers the crossings outweigh the
-/// shrinking shares on every realistic simulated cycle length.
+/// scaling now is the cycle-top barrier crossing plus the summary-tree
+/// depth (cycle *completion* is observed through the root summary stamp,
+/// not a second crossing), whose cost grows with the worker count while
+/// each worker's share of the domain work shrinks. Past ~16 workers the
+/// synchronization outweighs the shrinking shares on every realistic
+/// simulated cycle length.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -75,7 +77,10 @@ pub fn default_threads() -> usize {
 
 /// Sense-reversing spin barrier: far cheaper per crossing than
 /// `std::sync::Barrier` (no mutex/condvar), which matters because the
-/// engine crosses it twice per simulated cycle.
+/// engine crosses it once per simulated cycle — the cycle-top rendezvous
+/// that releases the workers into the cycle. (Cycle *completion* needs no
+/// second crossing: the coordinator observes it through the summary
+/// tree's root ready-stamp, see [`await_summary`].)
 pub struct SpinBarrier {
     n: usize,
     count: AtomicUsize,
@@ -122,11 +127,14 @@ impl SpinBarrier {
 /// coordinator unwinds from a panic (e.g. a routing assert in the
 /// pre-phase). Without it, workers parked at the cycle-top rendezvous
 /// would spin forever and `std::thread::scope` would never finish
-/// joining, turning a clean panic into a hang. Every coordinator panic
-/// site has the workers parked at that rendezvous (they only run strictly
-/// between the two barrier crossings), so the single release here is
-/// always paired. `parallel::tests::pool_shutdown_releases_workers_on_
-/// coordinator_panic` pins the invariant.
+/// joining, turning a clean panic into a hang. At every coordinator panic
+/// site the workers are either parked at that rendezvous or finishing the
+/// cycle body on their way back to it (nothing in the body can block
+/// indefinitely: the only inter-worker wait, the summary-tree fold,
+/// escapes via `failed`), so the single release here is always paired
+/// with each worker's next cycle-top arrival. `parallel::tests::
+/// pool_shutdown_releases_workers_on_coordinator_panic` pins the
+/// invariant.
 pub struct PoolShutdown<'a> {
     stop: &'a AtomicBool,
     barrier: &'a SpinBarrier,
@@ -374,7 +382,16 @@ fn apply_response_owned(
 
 /// Spin until `ready` publishes `cycle`, with an escape hatch when a
 /// sibling worker failed (its summary will never arrive).
-fn await_summary(ready: &AtomicU64, cycle: u64, failed: &AtomicBool) {
+///
+/// Workers use it to fold child subtrees; the coordinator uses it on the
+/// *root* stamp (`channels[0].summary_ready`) as the cycle-completion
+/// wait, replacing what used to be a second full barrier crossing. The
+/// Acquire load pairs with each worker's Release store, and because every
+/// worker's stamp is transitively awaited along the root's subtree chain,
+/// observing the root stamp orders *all* workers' cycle work (mailbox
+/// publishes, `inflight` updates, ctrl read-guard drops) before whatever
+/// the caller does next.
+pub fn await_summary(ready: &AtomicU64, cycle: u64, failed: &AtomicBool) {
     let mut spins = 0u32;
     while ready.load(Ordering::Acquire) != cycle {
         if failed.load(Ordering::Relaxed) {
@@ -665,8 +682,10 @@ pub fn worker_loop(
             // the race.
             ch.summary_ready.store(now, Ordering::SeqCst);
         }
-
-        barrier.wait();
+        // No bottom crossing: the coordinator observes cycle completion
+        // through the root summary stamp and cannot release the next
+        // cycle-top rendezvous before every worker has stamped, so
+        // looping straight back to `barrier.wait()` is race-free.
     }
 }
 
@@ -758,20 +777,20 @@ mod tests {
             for _ in 0..W {
                 s.spawn(|| {
                     loop {
-                        // Same two-crossing protocol as worker_loop.
+                        // Same single-crossing protocol as worker_loop:
+                        // one cycle-top rendezvous, then the cycle body
+                        // (empty here), then straight back to the top.
                         barrier.wait();
                         if stop.load(Ordering::SeqCst) {
                             break;
                         }
-                        barrier.wait();
                     }
                     exited.fetch_add(1, Ordering::SeqCst);
                 });
             }
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let _shutdown = PoolShutdown::new(&stop, &barrier);
-                // One healthy cycle, then a pre-phase panic.
-                barrier.wait();
+                // One healthy cycle release, then a pre-phase panic.
                 barrier.wait();
                 panic!("coordinator pre-phase failure");
             }));

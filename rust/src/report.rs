@@ -452,6 +452,135 @@ impl EstimateInfo {
     }
 }
 
+/// One cluster's slice of a multi-cluster system run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemClusterInfo {
+    pub name: String,
+    pub num_pes: usize,
+    /// Compute cycles of this cluster's chunk (its own clock).
+    pub cycles: u64,
+    pub instructions: u64,
+    pub flops: u64,
+}
+
+/// One inter-cluster link's traffic during a system run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemLinkInfo {
+    /// Display name, e.g. `c0<->c1`.
+    pub name: String,
+    /// Words moved across the link (both directions).
+    pub words: u64,
+    /// Cycles the link spent transmitting.
+    pub busy_cycles: u64,
+}
+
+/// The system-level section of a multi-cluster run report: topology
+/// identity, per-cluster and per-link breakdowns, shared-bus traffic and
+/// the stage/compute/merge timeline split — what `fig-scaleout` plots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemInfo {
+    /// Topology name (document name or `Topology::split` tag).
+    pub topology: String,
+    pub clusters: Vec<SystemClusterInfo>,
+    pub links: Vec<SystemLinkInfo>,
+    /// Words moved over the shared main-memory bus (staging + merge).
+    pub bus_words: u64,
+    /// Cycles the shared bus spent granting words.
+    pub bus_busy_cycles: u64,
+    /// System cycles until every cluster could start compute (staging +
+    /// halo broadcasts + the start barrier).
+    pub stage_cycles: u64,
+    /// System cycles from compute start to the last cluster finishing.
+    pub compute_cycles: u64,
+    /// System cycles from the last compute finish to the last merge
+    /// word landing in the memory node.
+    pub merge_cycles: u64,
+    /// Total words moved over inter-cluster links.
+    pub link_words: u64,
+}
+
+impl SystemInfo {
+    fn to_json(&self) -> Json {
+        let clusters = self
+            .clusters
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(c.name.clone())),
+                    ("num_pes".into(), Json::Num(c.num_pes as f64)),
+                    ("cycles".into(), Json::Num(c.cycles as f64)),
+                    ("instructions".into(), Json::Num(c.instructions as f64)),
+                    ("flops".into(), Json::Num(c.flops as f64)),
+                ])
+            })
+            .collect();
+        let links = self
+            .links
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(l.name.clone())),
+                    ("words".into(), Json::Num(l.words as f64)),
+                    ("busy_cycles".into(), Json::Num(l.busy_cycles as f64)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("topology".into(), Json::Str(self.topology.clone())),
+            ("clusters".into(), Json::Arr(clusters)),
+            ("links".into(), Json::Arr(links)),
+            ("bus_words".into(), Json::Num(self.bus_words as f64)),
+            ("bus_busy_cycles".into(), Json::Num(self.bus_busy_cycles as f64)),
+            ("stage_cycles".into(), Json::Num(self.stage_cycles as f64)),
+            ("compute_cycles".into(), Json::Num(self.compute_cycles as f64)),
+            ("merge_cycles".into(), Json::Num(self.merge_cycles as f64)),
+            ("link_words".into(), Json::Num(self.link_words as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SystemInfo> {
+        let clusters = j
+            .get("clusters")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("missing system.clusters array"))?
+            .iter()
+            .map(|c| {
+                Ok(SystemClusterInfo {
+                    name: c.field_str("name")?,
+                    num_pes: c.field_u64("num_pes")? as usize,
+                    cycles: c.field_u64("cycles")?,
+                    instructions: c.field_u64("instructions")?,
+                    flops: c.field_u64("flops")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let links = j
+            .get("links")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("missing system.links array"))?
+            .iter()
+            .map(|l| {
+                Ok(SystemLinkInfo {
+                    name: l.field_str("name")?,
+                    words: l.field_u64("words")?,
+                    busy_cycles: l.field_u64("busy_cycles")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SystemInfo {
+            topology: j.field_str("topology")?,
+            clusters,
+            links,
+            bus_words: j.field_u64("bus_words")?,
+            bus_busy_cycles: j.field_u64("bus_busy_cycles")?,
+            stage_cycles: j.field_u64("stage_cycles")?,
+            compute_cycles: j.field_u64("compute_cycles")?,
+            merge_cycles: j.field_u64("merge_cycles")?,
+            link_words: j.field_u64("link_words")?,
+        })
+    }
+}
+
 /// Everything one `Session` run produces: identity (workload instance +
 /// registry kind + config name + config fingerprint + scale), engine
 /// choice, the full [`RunStats`] (including per-class AMAT / request
@@ -479,6 +608,10 @@ pub struct RunReport {
     /// Calibration provenance when the stats came from the analytic
     /// fast path rather than a cycle-accurate run.
     pub estimate: Option<EstimateInfo>,
+    /// Per-cluster/per-link breakdown when the run was a multi-cluster
+    /// system run (`Session::system`); `None` for single-cluster runs.
+    /// Absent in pre-scale-out documents, which still parse.
+    pub system: Option<SystemInfo>,
 }
 
 impl RunReport {
@@ -542,6 +675,13 @@ impl RunReport {
                 "estimate".into(),
                 match &self.estimate {
                     Some(e) => e.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "system".into(),
+                match &self.system {
+                    Some(s) => s.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -613,6 +753,11 @@ impl RunReport {
             estimate: match j.get("estimate") {
                 Some(Json::Null) | None => None,
                 Some(v) => Some(EstimateInfo::from_json(v)?),
+            },
+            // Absent in pre-scale-out documents: parses as None.
+            system: match j.get("system") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(SystemInfo::from_json(v)?),
             },
         })
     }
@@ -752,6 +897,7 @@ mod tests {
             dma_bytes: None,
             verdict: Verdict::NotChecked,
             estimate: None,
+            system: None,
         };
         assert_eq!(RunReport::from_json(&rep.to_json()).unwrap(), rep);
         // Pre-burst documents (no burst arrays) parse with zeroed
@@ -764,9 +910,34 @@ mod tests {
                 }
             }
         }
+        // Pre-scale-out documents also lack the `system` field.
+        pairs.retain(|(k, _)| k != "system");
         let old = RunReport::from_json(&Json::Obj(pairs)).unwrap();
         assert_eq!(old.stats.burst_reqs_per_class, [0; 4]);
         assert_eq!(old.stats.burst_words_per_class, [0; 4]);
+        assert_eq!(old.system, None);
+    }
+
+    #[test]
+    fn system_info_round_trips() {
+        let rep = SystemInfo {
+            topology: "quad".into(),
+            clusters: vec![SystemClusterInfo {
+                name: "c0".into(),
+                num_pes: 256,
+                cycles: 1000,
+                instructions: 2000,
+                flops: 3000,
+            }],
+            links: vec![SystemLinkInfo { name: "c0<->c1".into(), words: 64, busy_cycles: 8 }],
+            bus_words: 4096,
+            bus_busy_cycles: 256,
+            stage_cycles: 300,
+            compute_cycles: 900,
+            merge_cycles: 120,
+            link_words: 64,
+        };
+        assert_eq!(SystemInfo::from_json(&rep.to_json()).unwrap(), rep);
     }
 
     #[test]

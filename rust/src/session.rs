@@ -40,6 +40,7 @@ use crate::config::{ClusterConfig, Scale};
 use crate::errors::Result;
 use crate::kernels::{self, Workload};
 use crate::report::{EstimateInfo, RunReport, Verdict};
+use crate::topology::Topology;
 
 /// A config delta applied to a copy of a [`Job`]'s base config at run
 /// time.
@@ -276,6 +277,7 @@ impl Session {
             dma_bytes: cl.dma.as_ref().map(|d| d.total_bytes()),
             verdict,
             estimate: None,
+            system: None,
         })
     }
 
@@ -326,7 +328,61 @@ impl Session {
                 model_residual: residual,
                 stated_rtol: 0.10,
             }),
+            system: None,
         })
+    }
+
+    /// Run one chunked workload kind (`"gemm"` or `"fft"`) data-parallel
+    /// across the clusters of `topo`: stage every cluster's band, pay the
+    /// shared-bus staging + inter-cluster halo broadcasts, run all
+    /// clusters to completion (serially in lockstep, or cluster-parallel
+    /// across this session's host threads — bit-identical by
+    /// construction, pinned by `tests/system_equiv.rs`), then merge each
+    /// band into the off-chip memory node over the arbitrated bus. The
+    /// report's `system` section carries the per-cluster, per-link and
+    /// bus breakdowns.
+    ///
+    /// The analytic estimate census is defined over a single cluster's
+    /// interconnect; a multi-cluster run is refused with a typed
+    /// [`ErrorKind::Unsupported`](crate::errors::ErrorKind) instead of
+    /// silently estimating cluster 0.
+    pub fn system(&self, topo: &Topology, kind: &str) -> Result<RunReport> {
+        if self.estimating {
+            return Err(crate::errors::Error::unsupported(format!(
+                "the analytic estimate census does not extend to multi-cluster system \
+                 runs ({} clusters in {:?}); re-run without --estimate",
+                topo.clusters.len(),
+                topo.name
+            )));
+        }
+        let kernel = crate::system::resolve_kernel(kind, self.scale)?;
+        let run = crate::system::run_system(
+            topo,
+            &kernel,
+            self.threads,
+            self.max_cycles,
+            self.fast_forward,
+            self.checking,
+        )
+        .map_err(|e| e.prefixed(&topo.name))?;
+        let report = RunReport {
+            workload: run.name.clone(),
+            kind: kind.to_string(),
+            config: topo.name.clone(),
+            fingerprint: topo.fingerprint(),
+            scale: self.scale.tag().to_string(),
+            engine_threads: self.threads,
+            max_cycles: self.max_cycles,
+            stats: run.stats.clone(),
+            // The shared-bus traffic is the system's main-memory
+            // movement — the scale-out analogue of the HBML byte count.
+            dma_bytes: Some(run.info.bus_words * 4),
+            verdict: run.verdict.clone(),
+            estimate: None,
+            system: Some(run.info.clone()),
+        };
+        self.reports.lock().unwrap().push(report.clone());
+        Ok(report)
     }
 }
 
@@ -376,6 +432,16 @@ mod tests {
         assert!(info.model_residual >= 0.0);
         assert_eq!(info.stated_rtol, 0.10);
         assert!(rx.estimate.is_none(), "cycle-accurate runs carry none");
+    }
+
+    #[test]
+    fn system_runs_are_refused_on_the_estimate_path() {
+        let cfg = ClusterConfig::tiny();
+        let topo = Topology::split(&cfg, 1).unwrap();
+        let s = Session::new(cfg).scale(Scale::Fast).estimating(true);
+        let e = s.system(&topo, "gemm").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Unsupported);
+        assert!(s.reports().is_empty());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! The system layer: a [`Topology`] of TeraPool clusters stepped as one
+//! scale-out machine (ROADMAP item 1). One kernel is chunked
+//! data-parallel across the clusters; the system scheduler pays for
+//! every word that crosses a chip boundary:
+//!
+//! 1. **Staging** — each cluster's private inputs stream in from the
+//!    off-chip memory node over the *shared* main-memory bus
+//!    (round-robin arbitration, one grant of `memory.width` words per
+//!    cycle, plus the access latency once per stream).
+//! 2. **Halo broadcast** — operands shared by every cluster (the GEMM B
+//!    matrix, the FFT twiddle table) are staged once, on cluster 0, and
+//!    forwarded to the others over the inter-cluster links
+//!    (store-and-forward per hop: occupy `⌈words/width⌉` cycles, then
+//!    the hop latency; links are FIFO, transfers are processed in fixed
+//!    ascending-destination order over [`Topology::route`]'s
+//!    deterministic BFS routes).
+//! 3. **Start barrier** — compute starts globally at `T0 = max` over
+//!    every cluster's readiness: the synchronization cost the
+//!    scale-out analysis quantifies.
+//! 4. **Compute** — every cluster runs its chunk to completion on the
+//!    serial reference engine. Chunks exchange *no* mid-kernel traffic
+//!    (all inter-cluster movement is confined to phases 1–2 and 5), so
+//!    run-to-completion and cycle-lockstep interleavings commute, and
+//!    stepping the clusters **cluster-parallel on host threads**
+//!    ([`crate::parallel::scatter`]) is bit-identical to the serial
+//!    order — `rust/tests/system_equiv.rs` pins this at 1/2/4 threads.
+//! 5. **Merge** — each cluster's output band streams back to the memory
+//!    node over the shared bus (same arbiter), becoming eligible when
+//!    that cluster finishes. The merged image lives in the memory node
+//!    (a host-side buffer), *not* some designated cluster's L1: a split
+//!    cluster's L1 cannot hold the full-problem output, and the memory
+//!    node is what a host would read.
+//!
+//! Everything here is deterministic by construction: fixed phase order,
+//! fixed arbitration order (ascending round-robin), fixed routes, and
+//! compute phases that share no state across clusters.
+
+use std::sync::Mutex;
+
+use crate::cluster::{Cluster, RunStats};
+use crate::config::Scale;
+use crate::errors::{Error, Result};
+use crate::kernels::{allclose_verdict, chunk_range, fft, gemm, Staged};
+use crate::parallel::scatter;
+use crate::report::{SystemClusterInfo, SystemInfo, SystemLinkInfo, Verdict};
+use crate::topology::Topology;
+
+/// A kernel the system layer knows how to chunk across clusters. The
+/// single-cluster [`crate::kernels::Workload`] registry stays the source
+/// of truth for the *math*; this enum only names the kernels whose
+/// builders expose band staging (`build_band`).
+#[derive(Debug, Clone, Copy)]
+pub enum SystemKernel {
+    Gemm(gemm::GemmParams),
+    Fft(fft::FftParams),
+}
+
+/// Resolve a registry kind to a chunked system kernel at `scale`'s
+/// default problem size. Kinds without a band builder are a typed
+/// `UnknownWorkload` error.
+pub fn resolve_kernel(kind: &str, scale: Scale) -> Result<SystemKernel> {
+    match kind {
+        "gemm" => {
+            let e = scale.pick(256, 128);
+            Ok(SystemKernel::Gemm(gemm::GemmParams { m: e, n: e, k: e }))
+        }
+        "fft" => Ok(SystemKernel::Fft(fft::FftParams {
+            batch: scale.pick(64, 16),
+            n: scale.pick(4096, 1024),
+        })),
+        other => Err(Error::unknown_workload(other, &["gemm", "fft"])),
+    }
+}
+
+/// A finished system run: what [`crate::session::Session::system`]
+/// reports, plus the merged memory-node image for differential tests.
+#[derive(Debug, Clone)]
+pub struct SystemRun {
+    /// `<kernel>@<topology>`, e.g. `gemm-256x256x256@quad`.
+    pub name: String,
+    /// Aggregate stats: `cycles` is the full system timeline
+    /// (staging + compute + merge), counters are sums over clusters,
+    /// AMAT is the request-count-weighted average.
+    pub stats: RunStats,
+    pub info: SystemInfo,
+    pub verdict: Verdict,
+    /// The memory node's final image — the merged system output.
+    pub output: Vec<f32>,
+}
+
+/// One shared-operand broadcast from cluster 0 to `dst`.
+struct Bcast {
+    dst: usize,
+    /// Words the links carry: the *unique* operand words (each cluster
+    /// re-replicates locally where the kernel wants replicas).
+    words: u64,
+    deliver: Deliver,
+}
+
+/// How a broadcast's payload lands functionally in the destination L1.
+enum Deliver {
+    /// Copy `words` f32 verbatim from cluster 0's `src_base`.
+    Copy { src_base: u32, dst_base: u32, words: usize },
+    /// Gather the `n` canonical table entries out of cluster 0's
+    /// copy-interleaved layout and re-interleave for the destination's
+    /// replica count (replica counts scale with cluster size, so the
+    /// two ends of a link may disagree).
+    Replicate { src_base: u32, src_copies: usize, dst_base: u32, dst_copies: usize, n: usize },
+}
+
+/// The staged chunking plan: per-cluster builds, broadcast and merge
+/// descriptors, and the memory-node image size.
+struct Plan {
+    /// Kernel instance name (without the topology suffix).
+    name: String,
+    staged: Vec<Staged>,
+    bcasts: Vec<Bcast>,
+    /// Per cluster: (L1 base, words, offset into the memory image).
+    merges: Vec<Vec<(u32, usize, usize)>>,
+    out_len: usize,
+}
+
+/// Refuse chunkings that would leave a cluster with an empty band — a
+/// typed `Unsupported`, mirroring the estimate-census refusal: the
+/// combination is declaratively out of scope, never silently reshaped.
+fn ensure_chunks(total: usize, parts: usize, what: &str) -> Result<()> {
+    for c in 0..parts {
+        if chunk_range(total, c, parts).is_empty() {
+            return Err(Error::unsupported(format!(
+                "{what}: {total} bands cannot cover {parts} clusters (cluster {c}'s \
+                 band would be empty); use fewer clusters or a bigger problem"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn stage(topo: &Topology, kernel: &SystemKernel) -> Result<Plan> {
+    let parts = topo.clusters.len();
+    Ok(match kernel {
+        SystemKernel::Gemm(p) => {
+            let name = format!("gemm-{}x{}x{}", p.m, p.n, p.k);
+            ensure_chunks(p.m / 4, parts, &name)?;
+            let mut staged = Vec::with_capacity(parts);
+            let mut bands = Vec::with_capacity(parts);
+            for c in 0..parts {
+                let (s, b) = gemm::build_band(&topo.clusters[c].cfg, p, c, parts, c == 0);
+                staged.push(s);
+                bands.push(b);
+            }
+            let bcasts = (1..parts)
+                .map(|d| Bcast {
+                    dst: d,
+                    words: (p.k * p.n) as u64,
+                    deliver: Deliver::Copy {
+                        src_base: bands[0].b_base,
+                        dst_base: bands[d].b_base,
+                        words: p.k * p.n,
+                    },
+                })
+                .collect();
+            let merges = bands
+                .iter()
+                .map(|b| vec![(b.c_base, b.rows * p.n, b.row0 * p.n)])
+                .collect();
+            Plan { name, staged, bcasts, merges, out_len: p.m * p.n }
+        }
+        SystemKernel::Fft(p) => {
+            let name = format!("fft-{}x{}", p.batch, p.n);
+            ensure_chunks(p.batch, parts, &name)?;
+            let mut staged = Vec::with_capacity(parts);
+            let mut bands = Vec::with_capacity(parts);
+            for c in 0..parts {
+                let (s, b) = fft::build_band(&topo.clusters[c].cfg, p, c, parts, c == 0);
+                staged.push(s);
+                bands.push(b);
+            }
+            let mut bcasts = Vec::new();
+            for d in 1..parts {
+                let (src, dst) = (&bands[0], &bands[d]);
+                for (sb, db) in [
+                    (src.tw_re_base, dst.tw_re_base),
+                    (src.tw_im_base, dst.tw_im_base),
+                ] {
+                    bcasts.push(Bcast {
+                        dst: d,
+                        words: p.n as u64,
+                        deliver: Deliver::Replicate {
+                            src_base: sb,
+                            src_copies: src.tw_words / p.n,
+                            dst_base: db,
+                            dst_copies: dst.tw_words / p.n,
+                            n: p.n,
+                        },
+                    });
+                }
+            }
+            // Memory image: the re planes of all frames, then the im
+            // planes (a single cluster instead lays im directly after
+            // its own re plane — the system image is the host-facing
+            // canonical layout).
+            let merges = bands
+                .iter()
+                .map(|b| {
+                    vec![
+                        (b.re_base, b.frames * p.n, b.f0 * p.n),
+                        (b.im_base, b.frames * p.n, (p.batch + b.f0) * p.n),
+                    ]
+                })
+                .collect();
+            Plan { name, staged, bcasts, merges, out_len: 2 * p.batch * p.n }
+        }
+    })
+}
+
+/// Outcome of one shared-bus episode (staging or merge).
+struct BusOutcome {
+    /// Per-source cycle its last word has landed (grant + access
+    /// latency); sources with no words keep their `avail` time.
+    finish: Vec<u64>,
+    /// Cycles the bus spent granting.
+    busy: u64,
+    /// Words moved in this episode.
+    words: u64,
+}
+
+/// The shared main-memory bus: source `c` becomes eligible at
+/// `avail[c]` with `words[c]` words to move; each cycle the bus grants
+/// up to `width` words to **one** eligible source, round-robin starting
+/// after the previous grantee. Deterministic: ties break on ascending
+/// index from the rotating pointer.
+fn bus_sim(avail: &[u64], words: &[u64], width: usize, latency: u64) -> BusOutcome {
+    let n = avail.len();
+    let mut rem = words.to_vec();
+    let mut finish = avail.to_vec();
+    let width = width.max(1) as u64;
+    let (mut busy, mut t, mut rr) = (0u64, 0u64, 0usize);
+    while rem.iter().any(|&r| r > 0) {
+        if !(0..n).any(|c| rem[c] > 0 && avail[c] <= t) {
+            // Idle until the earliest pending source is available.
+            t = (0..n).filter(|&c| rem[c] > 0).map(|c| avail[c]).min().unwrap();
+            continue;
+        }
+        let pick = (0..n)
+            .map(|i| (rr + i) % n)
+            .find(|&c| rem[c] > 0 && avail[c] <= t)
+            .unwrap();
+        rem[pick] = rem[pick].saturating_sub(width);
+        busy += 1;
+        if rem[pick] == 0 {
+            finish[pick] = t + 1 + latency;
+        }
+        rr = (pick + 1) % n;
+        t += 1;
+    }
+    BusOutcome { finish, busy, words: words.iter().sum() }
+}
+
+/// Run `kernel` chunked across the clusters of `topo`. See the module
+/// docs for the five phases; `host_threads > 1` steps the compute phase
+/// cluster-parallel (bit-identical). `max_cycles` bounds each cluster's
+/// compute chunk (typed `MaxCyclesExceeded`, prefixed with the cluster
+/// name). `checking` compares the merged memory image against the
+/// kernel's host reference.
+pub fn run_system(
+    topo: &Topology,
+    kernel: &SystemKernel,
+    host_threads: usize,
+    max_cycles: u64,
+    fast_forward: bool,
+    checking: bool,
+) -> Result<SystemRun> {
+    let parts = topo.clusters.len();
+    let plan = stage(topo, kernel)?;
+
+    // Phase 1 — staging: every cluster's functionally-staged words
+    // stream from the memory node over the shared bus.
+    let stage_words: Vec<u64> = plan
+        .staged
+        .iter()
+        .map(|s| s.inputs.iter().map(|(_, d)| d.len() as u64).sum())
+        .collect();
+    let stage_avail = vec![0u64; parts];
+    let stage_bus = bus_sim(&stage_avail, &stage_words, topo.memory.width, topo.memory.latency);
+
+    let mut clusters: Vec<Cluster> = Vec::with_capacity(parts);
+    for (c, staged) in plan.staged.into_iter().enumerate() {
+        assert!(staged.dma.is_none(), "system runs are L1-resident (no HBML plan)");
+        let (mut cl, _io) = staged.into_cluster(topo.clusters[c].cfg.clone());
+        cl.fast_forward = fast_forward;
+        clusters.push(cl);
+    }
+
+    // Phase 2 — halo broadcasts over the links, in fixed (ascending
+    // destination, plane) order; a transfer leaves cluster 0 once its
+    // staging finished, holds each route hop for ⌈words/width⌉ cycles
+    // (FIFO per link), then pays the hop latency.
+    let mut link_words = vec![0u64; topo.links.len()];
+    let mut link_busy = vec![0u64; topo.links.len()];
+    let mut link_free = vec![0u64; topo.links.len()];
+    let mut arrival = vec![0u64; parts];
+    for b in &plan.bcasts {
+        let mut ready = stage_bus.finish[0];
+        for li in topo.route(0, b.dst)? {
+            let l = &topo.links[li];
+            let occ = b.words.div_ceil(l.width as u64).max(1);
+            let start = ready.max(link_free[li]);
+            link_free[li] = start + occ;
+            ready = start + occ + l.latency;
+            link_words[li] += b.words;
+            link_busy[li] += occ;
+        }
+        arrival[b.dst] = arrival[b.dst].max(ready);
+        // Functional delivery (the timing above is the cost model; the
+        // bytes move here).
+        match b.deliver {
+            Deliver::Copy { src_base, dst_base, words } => {
+                let data = clusters[0].l1.read_slice(src_base, words);
+                clusters[b.dst].l1.write_slice(dst_base, &data);
+            }
+            Deliver::Replicate { src_base, src_copies, dst_base, dst_copies, n } => {
+                let src = clusters[0].l1.read_slice(src_base, src_copies * n);
+                let mut out = vec![0.0f32; dst_copies * n];
+                for e in 0..n {
+                    let v = src[e * src_copies];
+                    for c in 0..dst_copies {
+                        out[e * dst_copies + c] = v;
+                    }
+                }
+                clusters[b.dst].l1.write_slice(dst_base, &out);
+            }
+        }
+    }
+
+    // Phase 3 — the system start barrier.
+    let t0 = (0..parts)
+        .map(|c| stage_bus.finish[c].max(arrival[c]))
+        .max()
+        .unwrap_or(0);
+
+    // Phase 4 — compute, cluster-parallel across host threads. With
+    // `host_threads <= 1` `scatter` degenerates to an in-order loop on
+    // this thread — the serial reference order of the differential
+    // suite. Chunks share no state, so the results cannot depend on the
+    // interleaving.
+    let cells: Vec<Mutex<Cluster>> = clusters.into_iter().map(Mutex::new).collect();
+    let results: Vec<Result<RunStats>> = scatter(parts, host_threads, |i| {
+        let mut cl = cells[i].lock().unwrap();
+        cl.try_run_threads(max_cycles, 1)
+            .map_err(|e| e.prefixed(&topo.clusters[i].name))
+    });
+    let mut per: Vec<RunStats> = Vec::with_capacity(parts);
+    for r in results {
+        per.push(r?);
+    }
+    let clusters: Vec<Cluster> = cells
+        .into_iter()
+        .map(|m| m.into_inner().unwrap())
+        .collect();
+    let compute_cycles = per.iter().map(|s| s.cycles).max().unwrap_or(0);
+    let compute_done: Vec<u64> = per.iter().map(|s| t0 + s.cycles).collect();
+
+    // Phase 5 — merge each cluster's output band(s) into the memory
+    // node over the shared bus; a cluster's band is eligible once that
+    // cluster finished.
+    let merge_words: Vec<u64> = plan
+        .merges
+        .iter()
+        .map(|ms| ms.iter().map(|&(_, w, _)| w as u64).sum())
+        .collect();
+    let merge_bus = bus_sim(&compute_done, &merge_words, topo.memory.width, topo.memory.latency);
+    let t_end = merge_bus
+        .finish
+        .iter()
+        .zip(&compute_done)
+        .map(|(&f, &d)| f.max(d))
+        .max()
+        .unwrap_or(t0);
+
+    let mut output = vec![0.0f32; plan.out_len];
+    for (c, ms) in plan.merges.iter().enumerate() {
+        for &(base, words, off) in ms {
+            let data = clusters[c].l1.read_slice(base, words);
+            output[off..off + words].copy_from_slice(&data);
+        }
+    }
+
+    // Aggregate stats over the system timeline.
+    let mut agg = per[0].clone();
+    agg.cycles = t_end;
+    agg.num_pes = topo.total_pes();
+    let (mut w_total, mut w_class) = (0.0f64, [0.0f64; 4]);
+    let mut reqs_total = 0u64;
+    for (i, s) in per.iter().enumerate() {
+        if i > 0 {
+            agg.instructions += s.instructions;
+            agg.flops += s.flops;
+            agg.stall_raw += s.stall_raw;
+            agg.stall_lsu += s.stall_lsu;
+            agg.stall_ctrl += s.stall_ctrl;
+            agg.stall_synch += s.stall_synch;
+            agg.loads += s.loads;
+            agg.stores += s.stores;
+            agg.atomics += s.atomics;
+            for k in 0..4 {
+                agg.reqs_per_class[k] += s.reqs_per_class[k];
+                agg.burst_reqs_per_class[k] += s.burst_reqs_per_class[k];
+                agg.burst_words_per_class[k] += s.burst_words_per_class[k];
+            }
+        }
+        for k in 0..4 {
+            w_class[k] += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
+            w_total += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
+            reqs_total += s.reqs_per_class[k];
+        }
+    }
+    agg.amat = if reqs_total > 0 { w_total / reqs_total as f64 } else { 0.0 };
+    for k in 0..4 {
+        agg.amat_per_class[k] = if agg.reqs_per_class[k] > 0 {
+            w_class[k] / agg.reqs_per_class[k] as f64
+        } else {
+            0.0
+        };
+    }
+
+    let info = SystemInfo {
+        topology: topo.name.clone(),
+        clusters: (0..parts)
+            .map(|c| SystemClusterInfo {
+                name: topo.clusters[c].name.clone(),
+                num_pes: per[c].num_pes,
+                cycles: per[c].cycles,
+                instructions: per[c].instructions,
+                flops: per[c].flops,
+            })
+            .collect(),
+        links: (0..topo.links.len())
+            .map(|i| SystemLinkInfo {
+                name: topo.link_name(i),
+                words: link_words[i],
+                busy_cycles: link_busy[i],
+            })
+            .collect(),
+        bus_words: stage_bus.words + merge_bus.words,
+        bus_busy_cycles: stage_bus.busy + merge_bus.busy,
+        stage_cycles: t0,
+        compute_cycles,
+        merge_cycles: t_end.saturating_sub(t0 + compute_cycles),
+        link_words: link_words.iter().sum(),
+    };
+
+    let verdict = if !checking {
+        Verdict::NotChecked
+    } else {
+        match kernel {
+            SystemKernel::Gemm(p) => {
+                allclose_verdict(&output, &gemm::reference(p), 2e-2, "system gemm vs host reference")
+            }
+            SystemKernel::Fft(p) => {
+                if p.batch * p.n * p.n > (1 << 29) {
+                    // The O(n²) host DFT is intractable at this size.
+                    Verdict::NotChecked
+                } else {
+                    let (re, im) = fft::reference(p);
+                    let bn = p.batch * p.n;
+                    match allclose_verdict(&output[..bn], &re, 5e-2, "system fft re-plane vs host DFT") {
+                        Verdict::Passed { .. } => allclose_verdict(
+                            &output[bn..],
+                            &im,
+                            5e-2,
+                            "system fft re+im planes vs host DFT",
+                        ),
+                        failed => failed,
+                    }
+                }
+            }
+        }
+    };
+
+    Ok(SystemRun {
+        name: format!("{}@{}", plan.name, topo.name),
+        stats: agg,
+        info,
+        verdict,
+        output,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::errors::ErrorKind;
+
+    const BUDGET: u64 = 10_000_000;
+
+    #[test]
+    fn dual_cluster_gemm_matches_the_host_reference() {
+        let topo = Topology::split(&ClusterConfig::tiny(), 2).unwrap();
+        let k = SystemKernel::Gemm(gemm::GemmParams { m: 16, n: 16, k: 16 });
+        let run = run_system(&topo, &k, 1, BUDGET, true, true).unwrap();
+        assert!(matches!(run.verdict, Verdict::Passed { .. }), "{:?}", run.verdict);
+        assert_eq!(run.output.len(), 16 * 16);
+        // Two clusters, one p2p link carrying one B broadcast.
+        assert_eq!(run.info.clusters.len(), 2);
+        assert_eq!(run.info.links.len(), 1);
+        assert_eq!(run.info.link_words, 16 * 16);
+        assert!(run.info.stage_cycles > 0);
+        assert!(run.info.merge_cycles > 0);
+        // The timeline decomposes exactly.
+        assert_eq!(
+            run.stats.cycles,
+            run.info.stage_cycles + run.info.compute_cycles + run.info.merge_cycles
+        );
+        // Bus traffic = staged inputs + merged outputs: two A bands
+        // (128 words each) + B (256) + two C bands (128 each).
+        assert_eq!(run.info.bus_words, 128 + 256 + 128 + 128 + 128);
+    }
+
+    #[test]
+    fn quad_cluster_fft_matches_the_host_reference() {
+        let topo = Topology::split(&ClusterConfig::tiny(), 4).unwrap();
+        let k = SystemKernel::Fft(fft::FftParams { batch: 4, n: 64 });
+        let run = run_system(&topo, &k, 1, BUDGET, true, true).unwrap();
+        assert!(matches!(run.verdict, Verdict::Passed { .. }), "{:?}", run.verdict);
+        assert_eq!(run.output.len(), 2 * 4 * 64);
+        // Twiddle broadcasts: two canonical 64-word planes to each of
+        // the three non-root clusters (multi-hop routes re-count words
+        // per link crossed, so the sum is at least the unique payload).
+        assert!(run.info.link_words >= 3 * 2 * 64, "{}", run.info.link_words);
+    }
+
+    #[test]
+    fn single_cluster_system_matches_the_standalone_engine() {
+        let cfg = ClusterConfig::tiny();
+        let p = gemm::GemmParams { m: 16, n: 16, k: 16 };
+        let topo = Topology::split(&cfg, 1).unwrap();
+        let run = run_system(&topo, &SystemKernel::Gemm(p), 1, BUDGET, true, false).unwrap();
+        let (mut cl, _io) = gemm::build(&cfg, &p).into_cluster(cfg.clone());
+        cl.fast_forward = true;
+        let stats = cl.try_run(BUDGET).unwrap();
+        // The compute chunk is byte-identical to a standalone run; only
+        // the system timeline adds staging/merge around it.
+        assert_eq!(run.info.clusters[0].cycles, stats.cycles);
+        assert_eq!(run.info.clusters[0].instructions, stats.instructions);
+        assert_eq!(run.info.link_words, 0);
+    }
+
+    #[test]
+    fn overchunked_problems_are_refused_typed() {
+        // 8 block-rows of gemm m=32 cannot cover a tiny 8-way split at
+        // m=8 (2 block-rows < 8 clusters).
+        let topo = Topology::split(&ClusterConfig::tiny(), 8).unwrap();
+        let k = SystemKernel::Gemm(gemm::GemmParams { m: 8, n: 16, k: 16 });
+        let e = run_system(&topo, &k, 1, BUDGET, true, false).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Unsupported);
+        let k = SystemKernel::Fft(fft::FftParams { batch: 4, n: 64 });
+        let e = run_system(&topo, &k, 1, BUDGET, true, false).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Unsupported);
+    }
+
+    #[test]
+    fn resolve_kernel_is_typed() {
+        assert!(matches!(
+            resolve_kernel("gemm", Scale::Fast),
+            Ok(SystemKernel::Gemm(p)) if p.m == 128
+        ));
+        assert!(matches!(
+            resolve_kernel("fft", Scale::Full),
+            Ok(SystemKernel::Fft(p)) if p.batch == 64 && p.n == 4096
+        ));
+        assert_eq!(
+            resolve_kernel("axpy", Scale::Fast).unwrap_err().kind(),
+            ErrorKind::UnknownWorkload
+        );
+    }
+}

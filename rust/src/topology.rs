@@ -1,0 +1,740 @@
+//! Declarative system topology: N TeraPool clusters, point-to-point or
+//! 2-D-mesh inter-cluster links, and one off-chip main-memory node
+//! fronting the shared HBM bus (the scale-out system of ROADMAP item 1,
+//! in the style of the MemPool scale-out analysis and the Stream
+//! `tpu_like_quad_core` topology configs).
+//!
+//! The text format is line-oriented (`#` starts a comment):
+//!
+//! ```text
+//! system quad                      # optional document name
+//! cluster c0 preset=terapool9 groups=1
+//! cluster c1 preset=terapool9 groups=1
+//! cluster c2 preset=terapool9 groups=1
+//! cluster c3 preset=terapool9 groups=1
+//! mesh 2x2 latency=32 width=8      # OR explicit `link A B ...` lines
+//! memory hbm latency=64 width=16   # the off-chip node (optional line)
+//! ```
+//!
+//! `link A B [latency=CYCLES] [width=WORDS]` declares one bidirectional
+//! point-to-point link; `mesh CxR` generates the row-major 2-D grid over
+//! the declared clusters instead. The two are mutually exclusive: once a
+//! mesh is declared, extra `link` lines would add chords — cycles beyond
+//! the grid — and the file is rejected rather than silently reshaped.
+//! Every validation failure is a typed [`ErrorKind::BadTopology`]
+//! (`errors::ErrorKind`), so callers and the rejection-table tests match
+//! the class, not the message.
+//!
+//! A `Topology` is purely declarative: the stepping/traffic semantics
+//! live in [`crate::system`].
+
+use crate::config::{ClusterConfig, Hierarchy};
+use crate::errors::{Error, Result};
+
+/// Default inter-cluster link latency (cycles per hop): a die-to-die /
+/// chiplet-crossing pipeline, an order of magnitude above the in-cluster
+/// remote-Group latency.
+pub const DEFAULT_LINK_LATENCY: u64 = 32;
+/// Default inter-cluster link width (32-bit words per cycle per link).
+pub const DEFAULT_LINK_WIDTH: usize = 8;
+/// Default main-memory (shared HBM bus) access latency in cycles.
+pub const DEFAULT_MEM_LATENCY: u64 = 64;
+/// Default main-memory bus width (words per cycle, shared by all
+/// clusters — the arbitration target).
+pub const DEFAULT_MEM_WIDTH: usize = 16;
+
+/// One named cluster instance of the system.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub cfg: ClusterConfig,
+}
+
+/// One bidirectional inter-cluster link (endpoints are cluster indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkSpec {
+    pub a: usize,
+    pub b: usize,
+    /// Pipeline latency per traversal (cycles).
+    pub latency: u64,
+    /// Transfer width (words per cycle).
+    pub width: usize,
+}
+
+/// The single off-chip main-memory node fronting the shared HBM bus.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemorySpec {
+    pub name: String,
+    /// Access latency charged once per transfer (cycles).
+    pub latency: u64,
+    /// Bus width (words per cycle), shared by all clusters.
+    pub width: usize,
+}
+
+impl Default for MemorySpec {
+    fn default() -> Self {
+        MemorySpec {
+            name: "mem".to_string(),
+            latency: DEFAULT_MEM_LATENCY,
+            width: DEFAULT_MEM_WIDTH,
+        }
+    }
+}
+
+/// A validated system topology. Construction (parse / [`Topology::split`])
+/// always runs the full validation pass, so holding a `Topology` implies
+/// the invariants: non-empty unique cluster set, links between declared
+/// distinct clusters, no duplicate links, mesh exactly covering the
+/// cluster set, every cluster reachable from cluster 0.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub clusters: Vec<ClusterSpec>,
+    pub links: Vec<LinkSpec>,
+    /// `Some((cols, rows))` when the link set is a generated 2-D mesh.
+    pub mesh: Option<(usize, usize)>,
+    pub memory: MemorySpec,
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::bad_topology(msg)
+}
+
+/// Resolve a `preset=` value to a base cluster config.
+fn preset(name: &str) -> Result<ClusterConfig> {
+    Ok(match name {
+        "tiny" => ClusterConfig::tiny(),
+        "mempool" => ClusterConfig::mempool(),
+        "occamy" => ClusterConfig::occamy(),
+        "terapool" | "terapool9" => ClusterConfig::terapool(9),
+        "terapool7" => ClusterConfig::terapool(7),
+        "terapool11" => ClusterConfig::terapool(11),
+        other => {
+            return Err(bad(format!(
+                "unknown cluster preset {other:?} \
+                 (known: tiny, mempool, occamy, terapool7, terapool9, terapool11)"
+            )))
+        }
+    })
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "1" | "true" | "on" => Ok(true),
+        "0" | "false" | "off" => Ok(false),
+        _ => Err(bad(format!("expected a boolean, got {v:?}"))),
+    }
+}
+
+/// Split a `key=value` token.
+fn keyval(tok: &str) -> Result<(&str, &str)> {
+    tok.split_once('=')
+        .ok_or_else(|| bad(format!("expected key=value, got {tok:?}")))
+}
+
+impl Topology {
+    /// Parse the text format. `name` is the fallback document name when
+    /// no `system` line is present (the CLI passes the file stem).
+    pub fn parse(text: &str, name: &str) -> Result<Topology> {
+        let mut doc_name: Option<String> = None;
+        let mut clusters: Vec<ClusterSpec> = Vec::new();
+        let mut raw_links: Vec<(String, String, u64, usize)> = Vec::new();
+        let mut mesh: Option<(usize, usize, u64, usize)> = None;
+        let mut memory: Option<MemorySpec> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |e: Error| e.prefixed(&format!("line {}", lineno + 1));
+            let mut toks = line.split_whitespace();
+            match toks.next().unwrap() {
+                "system" => {
+                    let n = toks.next().ok_or_else(|| at(bad("system needs a name")))?;
+                    doc_name = Some(n.to_string());
+                }
+                "cluster" => {
+                    let cname = toks
+                        .next()
+                        .ok_or_else(|| at(bad("cluster needs a name")))?
+                        .to_string();
+                    let mut cfg: Option<ClusterConfig> = None;
+                    let mut groups: Option<usize> = None;
+                    let mut burst: Option<bool> = None;
+                    for tok in toks {
+                        let (k, v) = keyval(tok).map_err(at)?;
+                        match k {
+                            "preset" => cfg = Some(preset(v).map_err(at)?),
+                            "groups" => {
+                                groups =
+                                    Some(v.parse().map_err(|_| {
+                                        at(bad(format!("bad groups value {v:?}")))
+                                    })?)
+                            }
+                            "burst" => burst = Some(parse_bool(v).map_err(at)?),
+                            _ => return Err(at(bad(format!("unknown cluster option {k:?}")))),
+                        }
+                    }
+                    let mut cfg = cfg
+                        .ok_or_else(|| at(bad(format!("cluster {cname:?} needs preset=..."))))?;
+                    if let Some(g) = groups {
+                        if g == 0 {
+                            return Err(at(bad("groups must be >= 1")));
+                        }
+                        cfg.hierarchy.groups = g;
+                        cfg.name = format!("{}-g{}", cfg.name, g);
+                    }
+                    if let Some(b) = burst {
+                        cfg.burst = b;
+                    }
+                    clusters.push(ClusterSpec { name: cname, cfg });
+                }
+                "link" => {
+                    let a = toks
+                        .next()
+                        .ok_or_else(|| at(bad("link needs two endpoints")))?;
+                    let b = toks
+                        .next()
+                        .ok_or_else(|| at(bad("link needs two endpoints")))?;
+                    let (mut lat, mut width) = (DEFAULT_LINK_LATENCY, DEFAULT_LINK_WIDTH);
+                    for tok in toks {
+                        let (k, v) = keyval(tok).map_err(at)?;
+                        match k {
+                            "latency" => {
+                                lat = v.parse().map_err(|_| {
+                                    at(bad(format!("bad latency value {v:?}")))
+                                })?
+                            }
+                            "width" => {
+                                width = v.parse().map_err(|_| {
+                                    at(bad(format!("bad width value {v:?}")))
+                                })?
+                            }
+                            _ => return Err(at(bad(format!("unknown link option {k:?}")))),
+                        }
+                    }
+                    raw_links.push((a.to_string(), b.to_string(), lat, width));
+                }
+                "mesh" => {
+                    if mesh.is_some() {
+                        return Err(at(bad("duplicate mesh declaration")));
+                    }
+                    let dims = toks.next().ok_or_else(|| at(bad("mesh needs CxR dims")))?;
+                    let (c, r) = dims
+                        .split_once('x')
+                        .ok_or_else(|| at(bad(format!("mesh dims must be CxR, got {dims:?}"))))?;
+                    let cols: usize = c
+                        .parse()
+                        .map_err(|_| at(bad(format!("bad mesh dims {dims:?}"))))?;
+                    let rows: usize = r
+                        .parse()
+                        .map_err(|_| at(bad(format!("bad mesh dims {dims:?}"))))?;
+                    let (mut lat, mut width) = (DEFAULT_LINK_LATENCY, DEFAULT_LINK_WIDTH);
+                    for tok in toks {
+                        let (k, v) = keyval(tok).map_err(at)?;
+                        match k {
+                            "latency" => {
+                                lat = v.parse().map_err(|_| {
+                                    at(bad(format!("bad latency value {v:?}")))
+                                })?
+                            }
+                            "width" => {
+                                width = v.parse().map_err(|_| {
+                                    at(bad(format!("bad width value {v:?}")))
+                                })?
+                            }
+                            _ => return Err(at(bad(format!("unknown mesh option {k:?}")))),
+                        }
+                    }
+                    mesh = Some((cols, rows, lat, width));
+                }
+                "memory" => {
+                    if memory.is_some() {
+                        return Err(at(bad("duplicate memory node (exactly one is allowed)")));
+                    }
+                    let mname = toks
+                        .next()
+                        .ok_or_else(|| at(bad("memory needs a name")))?
+                        .to_string();
+                    let mut spec = MemorySpec {
+                        name: mname,
+                        ..MemorySpec::default()
+                    };
+                    for tok in toks {
+                        let (k, v) = keyval(tok).map_err(at)?;
+                        match k {
+                            "latency" => {
+                                spec.latency = v.parse().map_err(|_| {
+                                    at(bad(format!("bad latency value {v:?}")))
+                                })?
+                            }
+                            "width" => {
+                                spec.width = v.parse().map_err(|_| {
+                                    at(bad(format!("bad width value {v:?}")))
+                                })?
+                            }
+                            _ => return Err(at(bad(format!("unknown memory option {k:?}")))),
+                        }
+                    }
+                    memory = Some(spec);
+                }
+                other => return Err(at(bad(format!("unknown directive {other:?}")))),
+            }
+        }
+
+        // Resolve link endpoints by cluster name.
+        let index_of = |n: &str| -> Result<usize> {
+            clusters
+                .iter()
+                .position(|c| c.name == n)
+                .ok_or_else(|| bad(format!("link endpoint {n:?} names no declared cluster")))
+        };
+        let mut links: Vec<LinkSpec> = Vec::new();
+        for (a, b, latency, width) in &raw_links {
+            links.push(LinkSpec {
+                a: index_of(a)?,
+                b: index_of(b)?,
+                latency: *latency,
+                width: *width,
+            });
+        }
+        let mut mesh_dims = None;
+        if let Some((cols, rows, lat, width)) = mesh {
+            if !raw_links.is_empty() {
+                return Err(bad(
+                    "mesh and explicit link lines are mutually exclusive: extra links \
+                     would add chords (cycles) to the declared grid",
+                ));
+            }
+            if cols * rows != clusters.len() {
+                return Err(bad(format!(
+                    "mesh {cols}x{rows} covers {} nodes but {} clusters are declared",
+                    cols * rows,
+                    clusters.len()
+                )));
+            }
+            if cols == 0 || rows == 0 {
+                return Err(bad("mesh dims must be >= 1"));
+            }
+            // Row-major grid links, ascending: right neighbor then down
+            // neighbor of each node.
+            for r in 0..rows {
+                for c in 0..cols {
+                    let id = r * cols + c;
+                    if c + 1 < cols {
+                        links.push(LinkSpec { a: id, b: id + 1, latency: lat, width });
+                    }
+                    if r + 1 < rows {
+                        links.push(LinkSpec { a: id, b: id + cols, latency: lat, width });
+                    }
+                }
+            }
+            mesh_dims = Some((cols, rows));
+        }
+
+        let topo = Topology {
+            name: doc_name.unwrap_or_else(|| name.to_string()),
+            clusters,
+            links,
+            mesh: mesh_dims,
+            memory: memory.unwrap_or_default(),
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Load and parse a topology file; the file stem is the fallback
+    /// document name.
+    pub fn load(path: &std::path::Path) -> Result<Topology> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("cannot read {}: {e}", path.display())))?;
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("system");
+        Self::parse(&text, stem).map_err(|e| e.prefixed(&path.display().to_string()))
+    }
+
+    /// Programmatic constructor for the scale-up-vs-scale-out experiment:
+    /// split `base` into `parts` equal clusters at the same total PE
+    /// count, wiring them point-to-point (2), as a 2-D mesh (perfect
+    /// squares), or as a ring (otherwise). `parts` must divide the
+    /// hierarchy along the Group → SubGroup → Tile levels.
+    pub fn split(base: &ClusterConfig, parts: usize) -> Result<Topology> {
+        if parts == 0 {
+            return Err(bad("cannot split a cluster into 0 parts"));
+        }
+        let h = split_hierarchy(base.hierarchy, parts).ok_or_else(|| {
+            bad(format!(
+                "cannot split {} ({} PEs) into {parts} equal clusters along its hierarchy",
+                base.name,
+                base.num_pes()
+            ))
+        })?;
+        let mut cfg = base.clone();
+        cfg.hierarchy = h;
+        if parts > 1 {
+            cfg.name = format!("{}/{}way", base.name, parts);
+        }
+        let clusters: Vec<ClusterSpec> = (0..parts)
+            .map(|i| ClusterSpec { name: format!("c{i}"), cfg: cfg.clone() })
+            .collect();
+        let mut links = Vec::new();
+        let mut mesh = None;
+        let side = (1..=parts).find(|s| s * s == parts);
+        if parts == 2 {
+            links.push(LinkSpec {
+                a: 0,
+                b: 1,
+                latency: DEFAULT_LINK_LATENCY,
+                width: DEFAULT_LINK_WIDTH,
+            });
+        } else if let Some(s) = side.filter(|_| parts > 1) {
+            for r in 0..s {
+                for c in 0..s {
+                    let id = r * s + c;
+                    if c + 1 < s {
+                        links.push(LinkSpec {
+                            a: id,
+                            b: id + 1,
+                            latency: DEFAULT_LINK_LATENCY,
+                            width: DEFAULT_LINK_WIDTH,
+                        });
+                    }
+                    if r + 1 < s {
+                        links.push(LinkSpec {
+                            a: id,
+                            b: id + s,
+                            latency: DEFAULT_LINK_LATENCY,
+                            width: DEFAULT_LINK_WIDTH,
+                        });
+                    }
+                }
+            }
+            mesh = Some((s, s));
+        } else if parts > 2 {
+            for i in 0..parts {
+                links.push(LinkSpec {
+                    a: i,
+                    b: (i + 1) % parts,
+                    latency: DEFAULT_LINK_LATENCY,
+                    width: DEFAULT_LINK_WIDTH,
+                });
+            }
+        }
+        let topo = Topology {
+            name: format!("{}-x{}", base.name, parts),
+            clusters,
+            links,
+            mesh,
+            memory: MemorySpec::default(),
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// The invariant pass behind every constructor.
+    fn validate(&self) -> Result<()> {
+        if self.clusters.is_empty() {
+            return Err(bad("a system needs at least one cluster"));
+        }
+        for (i, c) in self.clusters.iter().enumerate() {
+            if self.clusters[..i].iter().any(|o| o.name == c.name) {
+                return Err(bad(format!("duplicate cluster name {:?}", c.name)));
+            }
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            if l.a >= self.clusters.len() || l.b >= self.clusters.len() {
+                return Err(bad(format!(
+                    "link {i} endpoint out of range ({} clusters)",
+                    self.clusters.len()
+                )));
+            }
+            if l.a == l.b {
+                return Err(bad(format!(
+                    "link {i} connects cluster {:?} to itself",
+                    self.clusters[l.a].name
+                )));
+            }
+            if l.width == 0 {
+                return Err(bad(format!("{}: zero-width link (no bandwidth)", self.link_name(i))));
+            }
+            if l.latency == 0 {
+                return Err(bad(format!(
+                    "{}: zero-latency link (a hop costs at least one cycle)",
+                    self.link_name(i)
+                )));
+            }
+            if self.links[..i]
+                .iter()
+                .any(|o| (o.a, o.b) == (l.a, l.b) || (o.b, o.a) == (l.a, l.b))
+            {
+                return Err(bad(format!("duplicate link {}", self.link_name(i))));
+            }
+        }
+        if self.memory.width == 0 {
+            return Err(bad("zero-width memory bus (no bandwidth)"));
+        }
+        // Reachability: the merge/broadcast schedule routes everything
+        // through the link graph, so an unreachable cluster is a dead
+        // declaration, not a degenerate schedule.
+        if self.clusters.len() > 1 {
+            let mut seen = vec![false; self.clusters.len()];
+            let mut queue = vec![0usize];
+            seen[0] = true;
+            while let Some(c) = queue.pop() {
+                for l in &self.links {
+                    for (x, y) in [(l.a, l.b), (l.b, l.a)] {
+                        if x == c && !seen[y] {
+                            seen[y] = true;
+                            queue.push(y);
+                        }
+                    }
+                }
+            }
+            if let Some(i) = seen.iter().position(|s| !s) {
+                return Err(bad(format!(
+                    "cluster {:?} is unreachable from {:?} over the declared links",
+                    self.clusters[i].name, self.clusters[0].name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total PE count across all clusters.
+    pub fn total_pes(&self) -> usize {
+        self.clusters.iter().map(|c| c.cfg.num_pes()).sum()
+    }
+
+    /// Display name of link `id`: `"c0<->c1"`.
+    pub fn link_name(&self, id: usize) -> String {
+        let l = &self.links[id];
+        format!("{}<->{}", self.clusters[l.a].name, self.clusters[l.b].name)
+    }
+
+    /// Deterministic shortest route from cluster `src` to `dst` as a
+    /// sequence of link ids. BFS with ascending link-id expansion, so
+    /// equal-length routes tie-break on the lowest link ids — every
+    /// engine asking for the same route gets the same answer, which the
+    /// system layer's determinism proof leans on.
+    pub fn route(&self, src: usize, dst: usize) -> Result<Vec<usize>> {
+        if src == dst {
+            return Ok(Vec::new());
+        }
+        let n = self.clusters.len();
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; n]; // (node, link)
+        let mut seen = vec![false; n];
+        seen[src] = true;
+        let mut frontier = vec![src];
+        while !frontier.is_empty() && !seen[dst] {
+            let mut next = Vec::new();
+            for &c in &frontier {
+                for (li, l) in self.links.iter().enumerate() {
+                    for (x, y) in [(l.a, l.b), (l.b, l.a)] {
+                        if x == c && !seen[y] {
+                            seen[y] = true;
+                            prev[y] = Some((c, li));
+                            next.push(y);
+                        }
+                    }
+                }
+            }
+            frontier = next;
+        }
+        if !seen[dst] {
+            return Err(bad(format!(
+                "no route from {:?} to {:?}",
+                self.clusters[src].name, self.clusters[dst].name
+            )));
+        }
+        let mut path = Vec::new();
+        let mut cur = dst;
+        while cur != src {
+            let (p, li) = prev[cur].unwrap();
+            path.push(li);
+            cur = p;
+        }
+        path.reverse();
+        Ok(path)
+    }
+
+    /// One-line human summary: `quad: 4x terapool-1-3-5-9-g1 (1024 PEs), 4 links (2x2 mesh), mem hbm`.
+    pub fn describe(&self) -> String {
+        let shape = match self.mesh {
+            Some((c, r)) => format!("{} links ({c}x{r} mesh)", self.links.len()),
+            None => format!("{} links", self.links.len()),
+        };
+        format!(
+            "{}: {}x {} ({} PEs), {}, mem {} (lat {}, {} w/cy)",
+            self.name,
+            self.clusters.len(),
+            self.clusters[0].cfg.name,
+            self.total_pes(),
+            shape,
+            self.memory.name,
+            self.memory.latency,
+            self.memory.width
+        )
+    }
+
+    /// Stable FNV-1a fingerprint over the canonical `Debug` rendering —
+    /// same contract as [`ClusterConfig::fingerprint`]: equal
+    /// fingerprints imply bit-identical system simulations.
+    pub fn fingerprint(&self) -> String {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// Divide the hierarchy by `parts` along Group → SubGroup → Tile levels
+/// (greedy gcd at each level); `None` when `parts` does not divide the
+/// shape exactly.
+fn split_hierarchy(mut h: Hierarchy, parts: usize) -> Option<Hierarchy> {
+    fn gcd(mut a: usize, mut b: usize) -> usize {
+        while b != 0 {
+            let t = a % b;
+            a = b;
+            b = t;
+        }
+        a
+    }
+    let mut rem = parts;
+    for level in [
+        &mut h.groups,
+        &mut h.subgroups_per_group,
+        &mut h.tiles_per_subgroup,
+    ] {
+        let g = gcd(*level, rem);
+        *level /= g;
+        rem /= g;
+    }
+    (rem == 1).then_some(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errors::ErrorKind;
+
+    const QUAD: &str = "\
+        system quad\n\
+        cluster c0 preset=tiny\n\
+        cluster c1 preset=tiny\n\
+        cluster c2 preset=tiny\n\
+        cluster c3 preset=tiny\n\
+        mesh 2x2 latency=16 width=4\n\
+        memory hbm latency=32 width=8\n";
+
+    #[test]
+    fn quad_mesh_parses_and_routes() {
+        let t = Topology::parse(QUAD, "fallback").unwrap();
+        assert_eq!(t.name, "quad");
+        assert_eq!(t.clusters.len(), 4);
+        assert_eq!(t.mesh, Some((2, 2)));
+        // 2x2 mesh: 4 links — (0,1), (0,2), (1,3), (2,3).
+        assert_eq!(t.links.len(), 4);
+        assert_eq!(t.memory.width, 8);
+        // Corner-to-corner route is two hops and deterministic: the
+        // ascending tie-break picks 0->1->3 over 0->2->3.
+        let path = t.route(0, 3).unwrap();
+        assert_eq!(path.len(), 2);
+        assert_eq!(
+            (t.links[path[0]].a, t.links[path[0]].b),
+            (0, 1),
+            "tie-break must pick the lowest link ids"
+        );
+        assert_eq!(t.route(2, 2).unwrap(), Vec::<usize>::new());
+        assert_eq!(t.total_pes(), 4 * ClusterConfig::tiny().num_pes());
+    }
+
+    #[test]
+    fn defaults_fill_in_and_fingerprint_is_stable() {
+        let text = "cluster a preset=tiny\ncluster b preset=tiny\nlink a b\n";
+        let t = Topology::parse(text, "duo").unwrap();
+        assert_eq!(t.name, "duo");
+        assert_eq!(t.links[0].latency, DEFAULT_LINK_LATENCY);
+        assert_eq!(t.links[0].width, DEFAULT_LINK_WIDTH);
+        assert_eq!(t.memory.name, "mem");
+        assert_eq!(t.fingerprint(), Topology::parse(text, "duo").unwrap().fingerprint());
+        assert_ne!(t.fingerprint(), Topology::parse(QUAD, "x").unwrap().fingerprint());
+    }
+
+    /// The rejection table: every malformed document is a typed
+    /// `BadTopology`, never a panic or a silently repaired system.
+    #[test]
+    fn malformed_topologies_are_rejected_with_typed_errors() {
+        let cases: &[(&str, &str)] = &[
+            // Bad link endpoints.
+            ("cluster a preset=tiny\nlink a ghost\n", "names no declared cluster"),
+            ("cluster a preset=tiny\nlink a a\n", "to itself"),
+            // Cycles where a mesh is declared (chord links + mesh).
+            (
+                "cluster a preset=tiny\ncluster b preset=tiny\n\
+                 cluster c preset=tiny\ncluster d preset=tiny\n\
+                 mesh 2x2\nlink a d\n",
+                "mutually exclusive",
+            ),
+            // Zero bandwidth.
+            ("cluster a preset=tiny\ncluster b preset=tiny\nlink a b width=0\n", "zero-width"),
+            ("cluster a preset=tiny\nmemory m width=0\n", "zero-width memory"),
+            // Zero-latency hop.
+            ("cluster a preset=tiny\ncluster b preset=tiny\nlink a b latency=0\n", "zero-latency"),
+            // Mesh dims vs cluster count.
+            ("cluster a preset=tiny\ncluster b preset=tiny\nmesh 2x2\n", "covers 4 nodes"),
+            // Duplicates.
+            ("cluster a preset=tiny\ncluster a preset=tiny\n", "duplicate cluster"),
+            (
+                "cluster a preset=tiny\ncluster b preset=tiny\nlink a b\nlink b a\n",
+                "duplicate link",
+            ),
+            ("cluster a preset=tiny\nmemory m\nmemory n\n", "duplicate memory"),
+            // Disconnected system.
+            ("cluster a preset=tiny\ncluster b preset=tiny\n", "unreachable"),
+            // Unknown syntax.
+            ("flux a b\n", "unknown directive"),
+            ("cluster a preset=warp9\n", "unknown cluster preset"),
+            ("cluster a\n", "needs preset"),
+            ("", "at least one cluster"),
+        ];
+        for (text, needle) in cases {
+            let err = Topology::parse(text, "t").expect_err(text);
+            assert_eq!(err.kind(), ErrorKind::BadTopology, "{text}");
+            assert!(
+                err.to_string().contains(needle),
+                "{text:?}: {err} (wanted {needle:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn split_covers_p2p_mesh_and_ring() {
+        let base = ClusterConfig::terapool(9);
+        let one = Topology::split(&base, 1).unwrap();
+        assert_eq!(one.clusters.len(), 1);
+        assert!(one.links.is_empty());
+        let two = Topology::split(&base, 2).unwrap();
+        assert_eq!(two.links.len(), 1);
+        assert_eq!(two.total_pes(), base.num_pes());
+        assert_eq!(two.clusters[0].cfg.hierarchy.groups, 2);
+        let four = Topology::split(&base, 4).unwrap();
+        assert_eq!(four.mesh, Some((2, 2)));
+        assert_eq!(four.total_pes(), base.num_pes());
+        assert_eq!(four.clusters[0].cfg.hierarchy.groups, 1);
+        // tiny is 4C-2T-2SG-2G: an 8-way split exists (2 groups × 2
+        // subgroups × 2 tiles) and wires as a ring.
+        let eight = Topology::split(&ClusterConfig::tiny(), 8).unwrap();
+        assert_eq!(eight.links.len(), 8);
+        assert_eq!(eight.total_pes(), ClusterConfig::tiny().num_pes());
+        // A non-dividing split is a typed rejection.
+        let err = Topology::split(&base, 3).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BadTopology);
+    }
+}

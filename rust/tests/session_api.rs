@@ -9,7 +9,9 @@
 //!   batch (including a DMA-carrying double-buffered job) produces
 //!   byte-identical `RunReport`s at 1/2/4/8 host threads;
 //! * **typed timeouts** — a run that hits `max_cycles` surfaces
-//!   `ErrorKind::MaxCyclesExceeded` instead of comparing garbage.
+//!   `ErrorKind::MaxCyclesExceeded` instead of comparing garbage;
+//! * **failure isolation** — one job timing out mid-batch must not
+//!   poison its siblings: they report bit-identically to solo runs.
 
 use terapool::config::{ClusterConfig, Scale};
 use terapool::errors::ErrorKind;
@@ -216,4 +218,53 @@ fn max_cycles_is_surfaced_not_compared() {
     // nothing may land in the report log.)
     assert_eq!(rs[1].as_ref().unwrap_err().kind(), ErrorKind::MaxCyclesExceeded);
     assert!(quick.reports().is_empty());
+}
+
+/// One job hitting `max_cycles` mid-batch must not poison its
+/// siblings: they finish, verify, and report **bit-identically** to
+/// running them alone, and only the successes land in the session's
+/// report log (in job order). The budget is probed at runtime so the
+/// test pins behaviour, not magic cycle counts.
+#[test]
+fn batch_failure_is_isolated_to_the_failing_job() {
+    let cfg = ClusterConfig::tiny();
+    let fast = || {
+        Job::new(
+            cfg.clone(),
+            Box::new(axpy::Axpy::with(axpy::AxpyParams { n: cfg.num_banks() * 4, alpha: 2.0 })),
+        )
+    };
+    let slow = || {
+        Job::new(cfg.clone(), Box::new(gemm::Gemm::with(gemm::GemmParams { m: 16, n: 16, k: 64 })))
+    };
+
+    // Probe both run lengths under a generous budget, then pick one
+    // strictly between them so exactly the gemm job times out.
+    let probe = Session::new(cfg.clone()).scale(Scale::Fast).check(true);
+    let solo: Vec<_> = probe
+        .run_batch(&[fast(), slow()])
+        .into_iter()
+        .map(|r| r.expect("probe job runs"))
+        .collect();
+    let (fast_cycles, slow_cycles) = (solo[0].stats.cycles, solo[1].stats.cycles);
+    assert!(slow_cycles > fast_cycles + 2, "probe separation: {fast_cycles} vs {slow_cycles}");
+    let budget = fast_cycles + (slow_cycles - fast_cycles) / 2;
+
+    let s = Session::new(cfg.clone()).scale(Scale::Fast).threads(2).max_cycles(budget).check(true);
+    let rs = s.run_batch(&[fast(), slow(), fast()]);
+    assert_eq!(rs.len(), 3);
+    // The slow job surfaces a typed timeout...
+    assert_eq!(rs[1].as_ref().unwrap_err().kind(), ErrorKind::MaxCyclesExceeded);
+    // ...while both siblings match their solo runs bit for bit
+    // (`max_cycles` is recorded in the report, so compare the
+    // simulation-derived fields, not the whole document).
+    for i in [0usize, 2] {
+        let r = rs[i].as_ref().expect("sibling jobs must still run");
+        assert_eq!(r.stats, solo[0].stats, "sibling {i} diverged from its solo run");
+        assert_eq!(r.verdict, solo[0].verdict);
+        assert_eq!(r.fingerprint, solo[0].fingerprint);
+    }
+    // Only the successes land in the report log, in job order.
+    let logged: Vec<String> = s.reports().iter().map(|r| r.kind.clone()).collect();
+    assert_eq!(logged, ["axpy", "axpy"]);
 }

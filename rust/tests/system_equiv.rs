@@ -1,0 +1,91 @@
+//! Differential suite for the system engine (the scale-out analogue of
+//! `parallel_equiv.rs`): stepping the clusters of a system run
+//! **cluster-parallel on host threads** must be bit-identical to the
+//! serial in-order stepping — same aggregate `RunStats`, same
+//! `SystemInfo` breakdown (per-cluster, per-link, bus, timeline split),
+//! same merged memory-node image, same verdict. The system phases
+//! (staging, broadcast, merge) are simulated on the coordinating thread
+//! in fixed order, and the compute chunks share no state, so the only
+//! way this can fail is a real determinism bug.
+
+use terapool::config::ClusterConfig;
+use terapool::kernels::{fft::FftParams, gemm::GemmParams};
+use terapool::report::Verdict;
+use terapool::system::{run_system, SystemKernel, SystemRun};
+use terapool::topology::Topology;
+
+const BUDGET: u64 = 10_000_000;
+
+fn run_at(threads: usize, kernel: &SystemKernel, topo: &Topology) -> SystemRun {
+    run_system(topo, kernel, threads, BUDGET, true, true).expect("system run finishes")
+}
+
+#[test]
+fn system_stepping_is_bit_identical_across_host_threads() {
+    let cases: &[(SystemKernel, usize)] = &[
+        (SystemKernel::Gemm(GemmParams { m: 32, n: 16, k: 16 }), 4),
+        (SystemKernel::Fft(FftParams { batch: 8, n: 64 }), 4),
+        (SystemKernel::Gemm(GemmParams { m: 16, n: 16, k: 16 }), 2),
+    ];
+    for (kernel, parts) in cases {
+        let topo = Topology::split(&ClusterConfig::tiny(), *parts).expect("tiny splits");
+        let serial = run_at(1, kernel, &topo);
+        assert!(
+            matches!(serial.verdict, Verdict::Passed { .. }),
+            "{}: {:?}",
+            serial.name,
+            serial.verdict
+        );
+        for threads in [2usize, 4] {
+            let parallel = run_at(threads, kernel, &topo);
+            assert_eq!(serial.name, parallel.name);
+            assert_eq!(
+                serial.stats, parallel.stats,
+                "{}: aggregate stats diverge at {threads} host threads",
+                serial.name
+            );
+            assert_eq!(
+                serial.info, parallel.info,
+                "{}: system breakdown diverges at {threads} host threads",
+                serial.name
+            );
+            assert_eq!(
+                serial.output, parallel.output,
+                "{}: memory-node image diverges at {threads} host threads",
+                serial.name
+            );
+            assert_eq!(serial.verdict, parallel.verdict);
+        }
+    }
+}
+
+/// Fast-forward must stay bit-identical inside system runs too (each
+/// cluster chunk skips its own idle spans; the system timeline is
+/// arithmetic on top).
+#[test]
+fn system_fast_forward_is_bit_identical() {
+    let topo = Topology::split(&ClusterConfig::tiny(), 2).expect("tiny splits");
+    let kernel = SystemKernel::Gemm(GemmParams { m: 16, n: 16, k: 16 });
+    let skipped = run_system(&topo, &kernel, 2, BUDGET, true, true).unwrap();
+    let stepped = run_system(&topo, &kernel, 2, BUDGET, false, true).unwrap();
+    assert_eq!(skipped.stats, stepped.stats);
+    assert_eq!(skipped.info, stepped.info);
+    assert_eq!(skipped.output, stepped.output);
+}
+
+/// The example topology files shipped for the CLI must parse and carry
+/// the advertised shape (quad: 4×256 PEs on a 2x2 mesh; dual: 2×512
+/// over one p2p link — both 1024 total).
+#[test]
+fn example_topology_files_parse() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples");
+    let quad = Topology::load(&dir.join("quad.topo")).expect("quad.topo parses");
+    assert_eq!(quad.clusters.len(), 4);
+    assert_eq!(quad.mesh, Some((2, 2)));
+    assert_eq!(quad.total_pes(), 1024);
+    let dual = Topology::load(&dir.join("dual.topo")).expect("dual.topo parses");
+    assert_eq!(dual.clusters.len(), 2);
+    assert_eq!(dual.links.len(), 1);
+    assert_eq!(dual.total_pes(), 1024);
+    assert_eq!(dual.memory.name, "hbm");
+}
