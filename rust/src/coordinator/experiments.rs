@@ -517,6 +517,34 @@ pub fn fig_scaleout(s: &Session) -> Table {
     t
 }
 
+// ------------------------------------------------------------------
+// Design-space sweep — estimate-guided Pareto refinement
+// ------------------------------------------------------------------
+
+/// The `examples/terapool.sweep` grid, built programmatically (the
+/// coordinator cannot assume a checkout layout): the three characterized
+/// operating points × banking factor {paper, halved} × burst {off, on}
+/// × {axpy, dotp} = 24 points, explored with the estimator at the
+/// session's scale, Pareto-refined over (estimated cycles, area GE),
+/// frontier re-measured cycle-accurately and held to the 10% drift
+/// bound. Runs unchecked (no checkpoint file) — the resumable path is
+/// the `sweep-space` CLI entry.
+pub fn fig_sweep(s: &Session) -> crate::errors::Result<Table> {
+    let spec = crate::sweep::SweepSpec {
+        name: "fig-sweep".into(),
+        scale: s.current_scale(),
+        rtol: crate::sweep::DEFAULT_RTOL,
+        presets: vec!["terapool7".into(), "terapool9".into(), "terapool11".into()],
+        groups: vec![None],
+        banking: vec![None, Some(2)],
+        burst: vec![false, true],
+        workloads: vec!["axpy".into(), "dotp".into()],
+    };
+    spec.validate()?;
+    let report = crate::sweep::run_sweep(&spec, s.host_threads(), None, |_| Ok(()))?;
+    Ok(report.table())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -39,4 +39,5 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("ablate-txtable", "LSU transaction-table depth ablation"),
     ("ablate-addrmap", "sequential-region size ablation"),
     ("ablate-spill", "spill-register latency vs frequency ablation"),
+    ("fig-sweep", "estimate-guided design-space sweep: Pareto frontier + drift"),
 ];

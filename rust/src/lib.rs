@@ -45,6 +45,12 @@
 //!   merge) and the compute phase steps cluster-parallel on host
 //!   threads, bit-identical to serial system stepping — regenerates the
 //!   scale-up-vs-scale-out comparison (`fig-scaleout`);
+//! * the **design-space sweep service** ([`sweep`]): a declarative config
+//!   grid (`examples/*.sweep`) explored with the calibrated estimator via
+//!   batched fan-out, Pareto-refined over (estimated cycles, area proxy),
+//!   with only frontier points re-run cycle-accurately — per-point failure
+//!   isolation, resumable checkpoints and an in-process estimate-drift
+//!   verdict per frontier point (`terapool sweep-space`, `fig-sweep`);
 //! * **physical-design models** calibrated on the paper's GF12 data:
 //!   routing congestion, GE area, per-instruction energy + EDP, EDA effort
 //!   ([`physical`]) — regenerates Table 3/Fig. 3 and Figs. 11–13;
@@ -82,6 +88,7 @@ pub mod rng;
 pub mod runtime;
 pub mod session;
 pub mod stats;
+pub mod sweep;
 pub mod system;
 pub mod topology;
 

@@ -31,12 +31,13 @@ use terapool::{bail, ensure};
 
 const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N] [--json PATH]
        terapool sweep [--fast] [--estimate] [--json PATH]
+       terapool sweep-space [--spec PATH] [--resume PATH] [--fast] [--json PATH]
        terapool system [--topology PATH] [--fast] [--threads N]
        terapool --list
 experiments:
   table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
-  table5 table6 scaling headline fig-scaleout system all validate sweep
-  ablate-txtable ablate-addrmap ablate-spill
+  table5 table6 scaling headline fig-scaleout fig-sweep system all validate
+  sweep sweep-space ablate-txtable ablate-addrmap ablate-spill
 options:
   --fast        reduced problem sizes (smoke runs, CI)
   --threads N   host-thread budget for the Session run path: kernel
@@ -57,6 +58,17 @@ options:
   --burst       enable TCDM burst access (ClusterConfig::burst): kernels
                 that support it issue multi-word loads/stores moving up
                 to MAX_BURST_WORDS consecutive-bank words per port grant
+  --spec PATH   sweep grid for `terapool sweep-space` (declarative
+                preset x groups/banking x burst x workload axes; default
+                examples/terapool.sweep). Every point is explored with
+                the calibrated estimator, only the Pareto frontier over
+                (estimated cycles, area GE) re-runs cycle-accurately,
+                and each frontier point's estimate is held to the spec
+                rtol against its measurement
+  --resume PATH checkpoint file for `terapool sweep-space`: read if it
+                exists (completed points are reused, never re-estimated),
+                rewritten after every batch — an interrupted sweep
+                resumed this way renders a byte-identical SweepReport
   --topology P  system topology file for `terapool system` (declarative
                 clusters + inter-cluster links + memory node; default
                 examples/quad.topo). The multi-cluster run chunks GEMM
@@ -81,6 +93,8 @@ fn main() -> Result<()> {
     let estimate = args.iter().any(|a| a == "--estimate");
     let burst = args.iter().any(|a| a == "--burst");
     let topology = parse_value(&args, "--topology")?;
+    let spec = parse_value(&args, "--spec")?;
+    let resume = parse_value(&args, "--resume")?;
 
     if args.iter().any(|a| a == "--list") {
         print_list();
@@ -94,6 +108,19 @@ fn main() -> Result<()> {
         .map(|(_, a)| a.clone())
         .next();
     let Some(cmd) = cmd else { bail!("{USAGE}") };
+
+    // The sweep service runs before the shared Session is built: its
+    // --json artifact is one combined SweepReport (which embeds every
+    // RunReport with provenance), not the flat RunReport list.
+    if cmd == "sweep-space" {
+        return sweep_space(
+            spec.as_deref(),
+            resume.as_deref(),
+            json_path.as_deref(),
+            fast,
+            threads,
+        );
+    }
 
     // The single Session every cluster-simulator experiment runs
     // through; its accumulated RunReports become the --json document.
@@ -166,6 +193,7 @@ fn dispatch(
             coordinator::headline(session).print();
         }
         "fig-scaleout" => coordinator::fig_scaleout(session).print(),
+        "fig-sweep" => coordinator::fig_sweep(session)?.print(),
         "system" => system_cmd(scale, threads, no_skip, topology, reports)?,
         "validate" => validate(scale, threads, reports)?,
         "sweep" => sweep(session, burst)?,
@@ -198,7 +226,9 @@ fn is_option_value(args: &[String], i: usize) -> bool {
     i > 0
         && (args[i - 1] == "--threads"
             || args[i - 1] == "--json"
-            || args[i - 1] == "--topology")
+            || args[i - 1] == "--topology"
+            || args[i - 1] == "--spec"
+            || args[i - 1] == "--resume")
 }
 
 /// `--list`: everything the registry and the experiment index know.
@@ -401,12 +431,70 @@ fn validate(scale: Scale, threads: usize, reports: &mut Vec<RunReport>) -> Resul
     Ok(())
 }
 
+/// `terapool sweep-space`: the estimate-guided design-space sweep
+/// service ([`terapool::sweep`]). `--spec` picks the grid, `--resume`
+/// makes the run checkpointed and resumable, `--json` writes the final
+/// combined `SweepReport`, `--fast` forces the spec's scale down. Fails
+/// *after* writing every artifact if any frontier point's estimate
+/// drifts beyond the spec rtol — same reports-before-bail contract as
+/// `system` and `validate`.
+fn sweep_space(
+    spec: Option<&str>,
+    resume: Option<&str>,
+    json_path: Option<&str>,
+    fast: bool,
+    threads: usize,
+) -> Result<()> {
+    use terapool::sweep::{run_sweep, SweepReport, SweepSpec};
+    let path = std::path::PathBuf::from(spec.unwrap_or("examples/terapool.sweep"));
+    let mut spec = SweepSpec::load(&path)?;
+    if fast {
+        spec.scale = Scale::Fast;
+    }
+    let prior = match resume {
+        Some(p) if std::path::Path::new(p).exists() => {
+            let rep = SweepReport::parse(&std::fs::read_to_string(p)?)?;
+            let done = rep
+                .points
+                .iter()
+                .filter(|r| r.estimated.is_some() || r.error.is_some())
+                .count();
+            println!("resuming from {p}: {done}/{} points already explored", rep.points.len());
+            Some(rep)
+        }
+        _ => None,
+    };
+    let report = run_sweep(&spec, threads, prior.as_ref(), |snap| {
+        if let Some(p) = resume {
+            std::fs::write(p, snap.render())?;
+        }
+        Ok(())
+    })?;
+    report.table().print();
+    if let Some(p) = resume {
+        std::fs::write(p, report.render())?;
+    }
+    if let Some(p) = json_path {
+        std::fs::write(p, report.render())?;
+        println!("\nwrote SweepReport ({} points) to {p}", report.points.len());
+    }
+    let drift = report.frontier_drift_failures();
+    ensure!(
+        drift == 0,
+        "sweep-space: {drift} frontier point(s) exceed the rtol {} drift bound",
+        report.rtol
+    );
+    Ok(())
+}
+
 /// Table-6 config × kernel sweep through the session's run path. One
 /// command serves both sides of the estimate-accuracy CI gate: run it
 /// plain for the cycle-accurate reference, run it with `--estimate` for
 /// the analytic fast path, and hold the two documents together with
 /// `tools/report_diff.py --rtol 0.10` (census-backed fields are
-/// compared exactly; cycles/stalls/AMAT to the stated bound).
+/// compared exactly; cycles/stalls/AMAT to the stated bound). The
+/// kernel list includes a double-buffered workload so the gate also
+/// pins the estimator's fluid DMA-timeline model.
 fn sweep(s: &Session, burst: bool) -> Result<()> {
     use terapool::report::{f2, int, Table};
     let configs = [
@@ -420,7 +508,7 @@ fn sweep(s: &Session, burst: bool) -> Result<()> {
         &["Config", "Kernel", "Cycles", "IPC", "AMAT", "Path"],
     );
     for cfg in &configs {
-        for kernel in ["axpy", "dotp"] {
+        for kernel in ["axpy", "dotp", "db-axpy"] {
             let r = s.run_on(cfg, &*kernels::lookup(kernel)?)?;
             let path = match &r.estimate {
                 Some(e) => format!("estimate (residual {:.3})", e.model_residual),

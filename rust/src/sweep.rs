@@ -1,0 +1,1052 @@
+//! The estimate-guided design-space sweep service (ROADMAP item 4).
+//!
+//! A serving layer above [`crate::session`]: a [`SweepSpec`] declares a
+//! config grid (preset × groups/banking overrides × burst × workloads at
+//! one scale) in a small text format (`examples/*.sweep`, parsed like
+//! `topology.rs` parses `.topo` files), and [`run_sweep`] explores it in
+//! three deterministic phases:
+//!
+//! 1. **Explore** — every point runs through `Session::estimating` via
+//!    `run_batch` fan-out: exact census, analytic timing, one fast-scale
+//!    calibration run per point.
+//! 2. **Refine** — the Pareto frontier over (estimated cycles, physical
+//!    cost proxy) is computed, and *only* frontier points re-run through
+//!    the cycle-accurate engine.
+//! 3. **Verify** — each frontier point's estimate is held against its
+//!    measurement with `tools/report_diff.py` semantics in-process
+//!    ([`drift_verdict`]): census-backed fields exactly, timing fields
+//!    to the spec's rtol.
+//!
+//! Serving-layer robustness rules:
+//!
+//! * **Per-point failure isolation** — a point that fails (unknown
+//!   workload, `MaxCyclesExceeded`, `Unsupported`, ...) is recorded as a
+//!   typed [`PointError`] and the sweep continues; sibling points are
+//!   bit-identical to solo runs (jobs are independent by construction).
+//! * **Resumable checkpoints** — [`run_sweep`] invokes a checkpoint
+//!   callback with the partial [`SweepReport`] after every batch; an
+//!   interrupted sweep resumes by passing the parsed checkpoint back as
+//!   `prior`: completed points are reused verbatim (no re-estimation),
+//!   guarded by the spec fingerprint.
+//! * **Determinism** — point order is fixed by axis declaration order;
+//!   the engine is bit-identical at any host-thread count; the frontier
+//!   is a pure function of the estimates; JSON rendering is
+//!   deterministic. A killed-and-resumed sweep therefore produces a
+//!   byte-identical `SweepReport`.
+//!
+//! The cost proxy is silicon area (`physical::area`, gate equivalents):
+//! it is defined for *every* config, which keeps the frontier axis
+//! comparable across presets. Run energy (`physical::energy`) is
+//! recorded as per-point provenance where the config sits on one of the
+//! characterized operating points (remote-group latency 7/9/11), but
+//! does not enter the frontier — mixing axes that only exist for some
+//! points would make dominance depend on which points happen to be
+//! characterized.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::{ClusterConfig, Scale};
+use crate::errors::{Error, ErrorKind, Result};
+use crate::kernels;
+use crate::physical::{area, energy};
+use crate::report::{Json, RunReport, Table};
+use crate::session::{Job, Session};
+
+/// Schema tag of the combined sweep document.
+pub const SCHEMA: &str = "terapool-sweepreport-v1";
+
+/// Default drift bound, matching `EstimateInfo::stated_rtol` and the CI
+/// estimate-accuracy gate.
+pub const DEFAULT_RTOL: f64 = 0.10;
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::with_kind(ErrorKind::BadTopology, format!("sweep: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------
+// SweepSpec — the declarative config grid
+// ---------------------------------------------------------------------
+
+/// A declarative design-space grid. Points expand in fixed nesting
+/// order — preset, then groups, then banking, then burst, then workload
+/// — each axis in declaration order; that order is the checkpoint and
+/// report identity, so it is part of the format's contract.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Problem scale every point runs at (`fast` keeps the grid cheap;
+    /// estimates are exact by construction at the calibration scale).
+    pub scale: Scale,
+    /// Drift bound for the frontier verify phase.
+    pub rtol: f64,
+    /// Cluster presets (the `topology.rs` preset namespace).
+    pub presets: Vec<String>,
+    /// `hierarchy.groups` overrides; `None` keeps the preset value.
+    pub groups: Vec<Option<usize>>,
+    /// `banking_factor` overrides; `None` keeps the preset value.
+    pub banking: Vec<Option<usize>>,
+    /// TCDM burst access on/off.
+    pub burst: Vec<bool>,
+    /// Registered workload kinds.
+    pub workloads: Vec<String>,
+}
+
+/// One fully-resolved grid point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Zero-based position in the expansion order.
+    pub index: usize,
+    /// Stable identity: `config-label/workload/scale-tag`.
+    pub key: String,
+    pub cfg: ClusterConfig,
+    pub workload: String,
+}
+
+fn parse_scale(v: &str) -> Result<Scale> {
+    match v {
+        "fast" => Ok(Scale::Fast),
+        "full" => Ok(Scale::Full),
+        _ => Err(bad(format!("scale must be fast or full, got {v:?}"))),
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "1" | "true" | "on" => Ok(true),
+        "0" | "false" | "off" => Ok(false),
+        _ => Err(bad(format!("expected a boolean, got {v:?}"))),
+    }
+}
+
+/// `default` keeps the preset value; anything else is a positive count.
+fn parse_override(axis: &str, v: &str) -> Result<Option<usize>> {
+    if v == "default" {
+        return Ok(None);
+    }
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(Some(n)),
+        _ => Err(bad(format!("axis {axis} wants `default` or a positive integer, got {v:?}"))),
+    }
+}
+
+fn no_dupes<T: PartialEq + std::fmt::Debug>(axis: &str, vals: &[T]) -> Result<()> {
+    for (i, v) in vals.iter().enumerate() {
+        if vals[..i].contains(v) {
+            return Err(bad(format!("axis {axis} repeats value {v:?} (point keys must be unique)")));
+        }
+    }
+    Ok(())
+}
+
+impl SweepSpec {
+    /// Parse the text format. `name` is the fallback document name when
+    /// no `sweep` line is present (the CLI passes the file stem).
+    pub fn parse(text: &str, name: &str) -> Result<SweepSpec> {
+        let mut spec = SweepSpec {
+            name: name.to_string(),
+            scale: Scale::Fast,
+            rtol: DEFAULT_RTOL,
+            presets: Vec::new(),
+            groups: Vec::new(),
+            banking: Vec::new(),
+            burst: Vec::new(),
+            workloads: Vec::new(),
+        };
+        let mut seen_axes: Vec<String> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |e: Error| e.prefixed(&format!("line {}", lineno + 1));
+            if let Some(rest) = line.strip_prefix("sweep ") {
+                spec.name = rest.trim().to_string();
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("axis ") {
+                let (axis, vals) = rest
+                    .split_once('=')
+                    .ok_or_else(|| at(bad("axis wants `axis <name> = v1, v2, ...`")))?;
+                let axis = axis.trim();
+                if seen_axes.iter().any(|a| a == axis) {
+                    return Err(at(bad(format!("axis {axis} declared twice"))));
+                }
+                seen_axes.push(axis.to_string());
+                let vals: Vec<&str> = vals
+                    .split(|c: char| c == ',' || c.is_whitespace())
+                    .filter(|v| !v.is_empty())
+                    .collect();
+                if vals.is_empty() {
+                    return Err(at(bad(format!("axis {axis} needs at least one value"))));
+                }
+                match axis {
+                    "preset" => spec.presets = vals.iter().map(|v| v.to_string()).collect(),
+                    "groups" => {
+                        spec.groups = vals
+                            .iter()
+                            .map(|&v| parse_override("groups", v))
+                            .collect::<Result<_>>()
+                            .map_err(at)?;
+                    }
+                    "banking" => {
+                        spec.banking = vals
+                            .iter()
+                            .map(|&v| parse_override("banking", v))
+                            .collect::<Result<_>>()
+                            .map_err(at)?;
+                    }
+                    "burst" => {
+                        spec.burst =
+                            vals.iter().map(|&v| parse_bool(v)).collect::<Result<_>>().map_err(at)?;
+                    }
+                    "workload" => spec.workloads = vals.iter().map(|v| v.to_string()).collect(),
+                    other => {
+                        return Err(at(bad(format!(
+                            "unknown axis {other:?} (known: preset, groups, banking, burst, \
+                             workload)"
+                        ))))
+                    }
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| at(bad(format!("expected key=value or axis line, got {line:?}"))))?;
+            match (k.trim(), v.trim()) {
+                ("scale", v) => spec.scale = parse_scale(v).map_err(at)?,
+                ("rtol", v) => {
+                    spec.rtol = v
+                        .parse::<f64>()
+                        .map_err(|_| at(bad(format!("rtol wants a number, got {v:?}"))))?;
+                }
+                (other, _) => {
+                    return Err(at(bad(format!(
+                        "unknown directive {other:?} (known: sweep, scale, rtol, axis)"
+                    ))))
+                }
+            }
+        }
+        // Optional axes default to a single no-override point.
+        if spec.groups.is_empty() {
+            spec.groups.push(None);
+        }
+        if spec.banking.is_empty() {
+            spec.banking.push(None);
+        }
+        if spec.burst.is_empty() {
+            spec.burst.push(false);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and parse a sweep file; the file stem is the fallback
+    /// document name.
+    pub fn load(path: &Path) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("cannot read {}: {e}", path.display())))?;
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("sweep");
+        Self::parse(&text, stem).map_err(|e| e.prefixed(&path.display().to_string()))
+    }
+
+    /// The invariant pass every constructor runs: axes non-empty and
+    /// duplicate-free, presets/workloads resolvable, rtol sane. Workload
+    /// rejections keep `kernels::lookup`'s typed `UnknownWorkload`.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "sweep: document needs a name");
+        if !(self.rtol.is_finite() && self.rtol > 0.0 && self.rtol <= 1.0) {
+            return Err(bad(format!("rtol must be in (0, 1], got {}", self.rtol)));
+        }
+        if self.presets.is_empty() {
+            return Err(bad("needs an `axis preset = ...` with at least one preset"));
+        }
+        if self.workloads.is_empty() {
+            return Err(bad("needs an `axis workload = ...` with at least one workload"));
+        }
+        for p in &self.presets {
+            crate::topology::preset(p).map_err(|e| e.prefixed("sweep"))?;
+        }
+        for w in &self.workloads {
+            kernels::lookup(w).map(|_| ()).map_err(|e| e.prefixed("sweep"))?;
+        }
+        for (axis, empty) in [
+            ("groups", self.groups.is_empty()),
+            ("banking", self.banking.is_empty()),
+            ("burst", self.burst.is_empty()),
+        ] {
+            if empty {
+                return Err(bad(format!("axis {axis} needs at least one value")));
+            }
+        }
+        no_dupes("preset", &self.presets)?;
+        no_dupes("groups", &self.groups)?;
+        no_dupes("banking", &self.banking)?;
+        no_dupes("burst", &self.burst)?;
+        no_dupes("workload", &self.workloads)?;
+        Ok(())
+    }
+
+    /// Expand the grid in the fixed nesting order. Config labels carry
+    /// the overrides (`terapool9+bf2+burst`) so every point key — and
+    /// every emitted `RunReport.config` — is unique within the sweep.
+    pub fn points(&self) -> Result<Vec<SweepPoint>> {
+        let mut pts = Vec::new();
+        for preset in &self.presets {
+            let base = crate::topology::preset(preset).map_err(|e| e.prefixed("sweep"))?;
+            for &groups in &self.groups {
+                for &banking in &self.banking {
+                    for &burst in &self.burst {
+                        let mut cfg = base.clone();
+                        let mut label = preset.clone();
+                        if let Some(g) = groups {
+                            cfg.hierarchy.groups = g;
+                            label.push_str(&format!("+g{g}"));
+                        }
+                        if let Some(bf) = banking {
+                            cfg.banking_factor = bf;
+                            label.push_str(&format!("+bf{bf}"));
+                        }
+                        cfg.burst = burst;
+                        if burst {
+                            label.push_str("+burst");
+                        }
+                        cfg.name = label.clone();
+                        for w in &self.workloads {
+                            pts.push(SweepPoint {
+                                index: pts.len(),
+                                key: format!("{label}/{w}/{}", self.scale.tag()),
+                                cfg: cfg.clone(),
+                                workload: w.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(pts)
+    }
+
+    /// FNV-1a over the debug rendering — the checkpoint guard: a resume
+    /// against a different grid is refused instead of silently mixing
+    /// incompatible points.
+    pub fn fingerprint(&self) -> String {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        format!("{h:016x}")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pareto frontier + physical cost proxy
+// ---------------------------------------------------------------------
+
+/// Non-domination flags over `(cycles, cost)` pairs, both minimized. A
+/// point leaves the frontier only when some other point is no worse on
+/// both axes and strictly better on at least one; exact ties stay on
+/// the frontier together (deterministic, order-independent).
+pub fn pareto_frontier(axes: &[(f64, f64)]) -> Vec<bool> {
+    axes.iter()
+        .map(|&(c, p)| {
+            !axes.iter().any(|&(cj, pj)| cj <= c && pj <= p && (cj < c || pj < p))
+        })
+        .collect()
+}
+
+/// The frontier's cost axis: silicon area in gate equivalents — defined
+/// for every config (unlike the energy model, which only characterizes
+/// the TeraPool operating points).
+pub fn cost_proxy(cfg: &ClusterConfig) -> f64 {
+    area::breakdown(cfg).total()
+}
+
+/// Estimated run energy where the config matches a characterized
+/// operating point (remote-group latency 7/9/11) — provenance only.
+fn point_energy(cfg: &ClusterConfig, stats: &crate::cluster::RunStats) -> Option<f64> {
+    matches!(cfg.latency.remote_group, 7 | 9 | 11)
+        .then(|| energy::EnergyModel::for_cluster(cfg).run_energy_j(stats))
+}
+
+// ---------------------------------------------------------------------
+// Drift verdict — report_diff.py semantics, in-process
+// ---------------------------------------------------------------------
+
+/// Estimated-vs-measured drift verdict for one point, mirroring
+/// `tools/report_diff.py`: EXACT fields admit zero drift, TOLERANT
+/// fields are held to `|est-meas| <= rtol · max(|est|, |meas|)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftVerdict {
+    pub pass: bool,
+    /// Largest relative drift over the tolerant fields.
+    pub worst_rel: f64,
+    pub worst_field: String,
+    pub failures: Vec<String>,
+}
+
+struct DriftAcc {
+    rtol: f64,
+    worst_rel: f64,
+    worst_field: String,
+    failures: Vec<String>,
+}
+
+impl DriftAcc {
+    fn exact_u64(&mut self, field: &str, meas: u64, est: u64) {
+        if meas != est {
+            self.failures.push(format!("{field}: exact field {meas} vs {est}"));
+        }
+    }
+    fn tol(&mut self, field: &str, meas: f64, est: f64) {
+        if meas == est || (meas.is_nan() && est.is_nan()) {
+            return;
+        }
+        let denom = meas.abs().max(est.abs());
+        let rel = if denom == 0.0 { 0.0 } else { (est - meas).abs() / denom };
+        if rel > self.worst_rel {
+            self.worst_rel = rel;
+            self.worst_field = field.to_string();
+        }
+        let ok = (est - meas).abs() <= self.rtol * denom;
+        if !ok {
+            self.failures.push(format!("{field}: {meas} vs {est} (rel {rel:.4})"));
+        }
+    }
+}
+
+/// Hold an estimated report against its cycle-accurate measurement (the
+/// reference side) at `rtol`.
+pub fn drift_verdict(est: &RunReport, meas: &RunReport, rtol: f64) -> DriftVerdict {
+    let mut a = DriftAcc { rtol, worst_rel: 0.0, worst_field: "-".into(), failures: Vec::new() };
+    let (m, e) = (&meas.stats, &est.stats);
+
+    if meas.fingerprint != est.fingerprint {
+        a.failures
+            .push(format!("fingerprint: {} vs {}", meas.fingerprint, est.fingerprint));
+    }
+    a.exact_u64("instructions", m.instructions, e.instructions);
+    a.exact_u64("flops", m.flops, e.flops);
+    a.exact_u64("num_pes", m.num_pes as u64, e.num_pes as u64);
+    a.exact_u64("loads", m.loads, e.loads);
+    a.exact_u64("stores", m.stores, e.stores);
+    a.exact_u64("atomics", m.atomics, e.atomics);
+    for c in 0..4 {
+        a.exact_u64(&format!("reqs_per_class[{c}]"), m.reqs_per_class[c], e.reqs_per_class[c]);
+        a.exact_u64(
+            &format!("burst_reqs_per_class[{c}]"),
+            m.burst_reqs_per_class[c],
+            e.burst_reqs_per_class[c],
+        );
+        a.exact_u64(
+            &format!("burst_words_per_class[{c}]"),
+            m.burst_words_per_class[c],
+            e.burst_words_per_class[c],
+        );
+    }
+
+    a.tol("cycles", m.cycles as f64, e.cycles as f64);
+    a.tol("stall_raw", m.stall_raw as f64, e.stall_raw as f64);
+    a.tol("stall_lsu", m.stall_lsu as f64, e.stall_lsu as f64);
+    a.tol("stall_ctrl", m.stall_ctrl as f64, e.stall_ctrl as f64);
+    a.tol("stall_synch", m.stall_synch as f64, e.stall_synch as f64);
+    a.tol("amat", m.amat, e.amat);
+    for c in 0..4 {
+        a.tol(&format!("amat_per_class[{c}]"), m.amat_per_class[c], e.amat_per_class[c]);
+    }
+    a.tol("ipc", m.ipc(), e.ipc());
+    a.tol("gflops", m.gflops(), e.gflops());
+    match (meas.dma_bytes, est.dma_bytes) {
+        (None, None) => {}
+        (Some(mb), Some(eb)) => a.tol("dma_bytes", mb as f64, eb as f64),
+        (mb, eb) => a.failures.push(format!("dma_bytes: {mb:?} vs {eb:?}")),
+    }
+
+    DriftVerdict {
+        pass: a.failures.is_empty(),
+        worst_rel: a.worst_rel,
+        worst_field: a.worst_field,
+        failures: a.failures,
+    }
+}
+
+// ---------------------------------------------------------------------
+// SweepReport — the combined document (and its checkpoint form)
+// ---------------------------------------------------------------------
+
+/// A typed per-point failure (the isolation record, never fatal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointError {
+    /// Stable kind tag (`unknown-workload`, `max-cycles-exceeded`, ...).
+    pub kind: String,
+    pub message: String,
+}
+
+impl PointError {
+    fn of(e: &Error) -> Self {
+        let kind = match e.kind() {
+            ErrorKind::Generic => "generic",
+            ErrorKind::UnknownWorkload => "unknown-workload",
+            ErrorKind::MaxCyclesExceeded => "max-cycles-exceeded",
+            ErrorKind::BadTopology => "bad-topology",
+            ErrorKind::Unsupported => "unsupported",
+        };
+        PointError { kind: kind.into(), message: e.to_string() }
+    }
+}
+
+/// One grid point's full provenance: estimate, failure record, frontier
+/// membership, measurement and drift verdict. `estimated`/`measured`
+/// embed complete [`RunReport`]s (`EstimateInfo` included), so the
+/// document is self-contained for downstream tooling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointRecord {
+    pub index: usize,
+    pub key: String,
+    pub config: String,
+    pub workload: String,
+    /// Area proxy (GE) — the frontier's cost axis.
+    pub cost_proxy: f64,
+    pub frontier: bool,
+    /// Estimated run energy (J), where characterized.
+    pub energy_j: Option<f64>,
+    pub estimated: Option<RunReport>,
+    pub measured: Option<RunReport>,
+    pub error: Option<PointError>,
+    pub drift: Option<DriftVerdict>,
+}
+
+/// The combined sweep document. The on-disk checkpoint is the same
+/// schema written mid-flight; [`run_sweep`] recomputes every derived
+/// field (frontier, energy, drift) from the embedded reports, so a
+/// resumed sweep renders byte-identically to an uninterrupted one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    pub name: String,
+    pub spec_fingerprint: String,
+    /// `Scale::tag()` of every point.
+    pub scale: String,
+    pub rtol: f64,
+    pub points: Vec<PointRecord>,
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+/// `None` for absent *or* null fields (the writer emits explicit nulls).
+fn opt_field(j: &Json, key: &str) -> Option<Json> {
+    match j.get(key) {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.clone()),
+    }
+}
+
+impl PointRecord {
+    fn to_json(&self) -> Json {
+        let rep = |o: &Option<RunReport>| o.as_ref().map(|r| r.to_json()).unwrap_or(Json::Null);
+        Json::Obj(vec![
+            ("index".into(), Json::Num(self.index as f64)),
+            ("key".into(), Json::Str(self.key.clone())),
+            ("config".into(), Json::Str(self.config.clone())),
+            ("workload".into(), Json::Str(self.workload.clone())),
+            ("cost_proxy_ge".into(), Json::Num(self.cost_proxy)),
+            ("frontier".into(), Json::Bool(self.frontier)),
+            ("energy_j".into(), opt_num(self.energy_j)),
+            (
+                "error".into(),
+                match &self.error {
+                    None => Json::Null,
+                    Some(e) => Json::Obj(vec![
+                        ("kind".into(), Json::Str(e.kind.clone())),
+                        ("message".into(), Json::Str(e.message.clone())),
+                    ]),
+                },
+            ),
+            (
+                "drift".into(),
+                match &self.drift {
+                    None => Json::Null,
+                    Some(d) => Json::Obj(vec![
+                        ("pass".into(), Json::Bool(d.pass)),
+                        ("worst_rel".into(), Json::Num(d.worst_rel)),
+                        ("worst_field".into(), Json::Str(d.worst_field.clone())),
+                        (
+                            "failures".into(),
+                            Json::Arr(d.failures.iter().map(|f| Json::Str(f.clone())).collect()),
+                        ),
+                    ]),
+                },
+            ),
+            ("estimated".into(), rep(&self.estimated)),
+            ("measured".into(), rep(&self.measured)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PointRecord> {
+        let rep = |key: &str| -> Result<Option<RunReport>> {
+            opt_field(j, key).map(|v| RunReport::from_json(&v)).transpose()
+        };
+        let error = match opt_field(j, "error") {
+            None => None,
+            Some(e) => Some(PointError { kind: e.field_str("kind")?, message: e.field_str("message")? }),
+        };
+        let drift = match opt_field(j, "drift") {
+            None => None,
+            Some(d) => Some(DriftVerdict {
+                pass: matches!(d.get("pass"), Some(Json::Bool(true))),
+                worst_rel: d.field_f64("worst_rel")?,
+                worst_field: d.field_str("worst_field")?,
+                failures: d
+                    .get("failures")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|f| f.as_str().map(str::to_string))
+                    .collect(),
+            }),
+        };
+        Ok(PointRecord {
+            index: j.field_u64("index")? as usize,
+            key: j.field_str("key")?,
+            config: j.field_str("config")?,
+            workload: j.field_str("workload")?,
+            cost_proxy: j.field_f64("cost_proxy_ge")?,
+            frontier: matches!(j.get("frontier"), Some(Json::Bool(true))),
+            energy_j: opt_field(j, "energy_j").and_then(|v| v.as_f64()),
+            estimated: rep("estimated")?,
+            measured: rep("measured")?,
+            error,
+            drift,
+        })
+    }
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        let explored = self.points.iter().filter(|p| p.estimated.is_some()).count();
+        let failed = self.points.iter().filter(|p| p.error.is_some()).count();
+        let frontier = self.points.iter().filter(|p| p.frontier).count();
+        Json::Obj(vec![
+            ("schema".into(), Json::Str(SCHEMA.into())),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("spec_fingerprint".into(), Json::Str(self.spec_fingerprint.clone())),
+            ("scale".into(), Json::Str(self.scale.clone())),
+            ("rtol".into(), Json::Num(self.rtol)),
+            ("total_points".into(), Json::Num(self.points.len() as f64)),
+            ("explored".into(), Json::Num(explored as f64)),
+            ("failed".into(), Json::Num(failed as f64)),
+            ("frontier_size".into(), Json::Num(frontier as f64)),
+            ("points".into(), Json::Arr(self.points.iter().map(PointRecord::to_json).collect())),
+        ])
+    }
+
+    /// Deterministic document rendering (the `--json` artifact and the
+    /// checkpoint bytes).
+    pub fn render(&self) -> String {
+        let mut s = self.to_json().render();
+        s.push('\n');
+        s
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepReport> {
+        let schema = j.field_str("schema")?;
+        ensure!(schema == SCHEMA, "sweep: unsupported document schema {schema:?} (want {SCHEMA})");
+        Ok(SweepReport {
+            name: j.field_str("name")?,
+            spec_fingerprint: j.field_str("spec_fingerprint")?,
+            scale: j.field_str("scale")?,
+            rtol: j.field_f64("rtol")?,
+            points: j
+                .get("points")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(PointRecord::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<SweepReport> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Frontier points whose drift verdict failed the rtol bound.
+    pub fn frontier_drift_failures(&self) -> usize {
+        self.points
+            .iter()
+            .filter(|p| p.frontier && p.drift.as_ref().is_some_and(|d| !d.pass))
+            .count()
+    }
+
+    /// Human summary, one row per point.
+    pub fn table(&self) -> Table {
+        use crate::report::{f2, int};
+        let mut t = Table::new(
+            &format!("Sweep {} — {} points, scale {}", self.name, self.points.len(), self.scale),
+            &["#", "Config", "Workload", "Est cycles", "Area MGE", "Frontier", "Meas cycles", "Drift"],
+        );
+        for p in &self.points {
+            let est = match (&p.estimated, &p.error) {
+                (Some(r), _) => int(r.stats.cycles),
+                (None, Some(e)) => format!("FAILED ({})", e.kind),
+                (None, None) => "-".into(),
+            };
+            let meas = p.measured.as_ref().map(|r| int(r.stats.cycles)).unwrap_or_else(|| "-".into());
+            let drift = match &p.drift {
+                Some(d) if d.pass => format!("ok (worst {:.4})", d.worst_rel),
+                Some(d) => format!("FAIL ({})", d.worst_field),
+                None => "-".into(),
+            };
+            t.row(vec![
+                int(p.index as u64),
+                p.config.clone(),
+                p.workload.clone(),
+                est,
+                f2(p.cost_proxy / 1e6),
+                if p.frontier { "*".into() } else { "".into() },
+                meas,
+                drift,
+            ]);
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------
+// run_sweep — the three-phase service loop
+// ---------------------------------------------------------------------
+
+/// Recompute every derived field from the embedded reports: frontier
+/// membership over the current estimates, provenance energy, drift
+/// verdicts. Pure — calling it again on the same records is a no-op,
+/// which is what makes checkpoints and final documents agree.
+fn finalize(spec: &SweepSpec, points: &[SweepPoint], records: &mut [PointRecord]) {
+    let est: Vec<(usize, f64, f64)> = records
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| {
+            r.estimated.as_ref().map(|e| (i, e.stats.cycles as f64, r.cost_proxy))
+        })
+        .collect();
+    let axes: Vec<(f64, f64)> = est.iter().map(|&(_, c, p)| (c, p)).collect();
+    let on = pareto_frontier(&axes);
+    for r in records.iter_mut() {
+        r.frontier = false;
+    }
+    for (k, &(i, _, _)) in est.iter().enumerate() {
+        records[i].frontier = on[k];
+    }
+    for (i, r) in records.iter_mut().enumerate() {
+        r.energy_j = r.estimated.as_ref().and_then(|e| point_energy(&points[i].cfg, &e.stats));
+        r.drift = match (&r.estimated, &r.measured) {
+            (Some(e), Some(m)) => Some(drift_verdict(e, m, spec.rtol)),
+            _ => None,
+        };
+    }
+}
+
+fn snapshot(spec: &SweepSpec, records: &[PointRecord]) -> SweepReport {
+    SweepReport {
+        name: spec.name.clone(),
+        spec_fingerprint: spec.fingerprint(),
+        scale: spec.scale.tag().into(),
+        rtol: spec.rtol,
+        points: records.to_vec(),
+    }
+}
+
+/// Run the sweep service over `spec`.
+///
+/// * `threads` — host-thread budget; points fan out through
+///   `Session::run_batch` in chunks of this size, with a checkpoint
+///   after every chunk.
+/// * `prior` — a parsed checkpoint (or finished report) to resume from:
+///   completed points are reused verbatim, keyed by point identity and
+///   guarded by the spec fingerprint.
+/// * `on_checkpoint` — invoked with the partial document after every
+///   batch; the CLI writes it to the `--resume` path. Checkpoint I/O
+///   errors abort the sweep (a serving layer must not pretend to be
+///   resumable when it is not).
+pub fn run_sweep(
+    spec: &SweepSpec,
+    threads: usize,
+    prior: Option<&SweepReport>,
+    mut on_checkpoint: impl FnMut(&SweepReport) -> Result<()>,
+) -> Result<SweepReport> {
+    let fingerprint = spec.fingerprint();
+    if let Some(p) = prior {
+        ensure!(
+            p.spec_fingerprint == fingerprint,
+            "sweep: checkpoint belongs to a different spec (fingerprint {} vs {fingerprint})",
+            p.spec_fingerprint
+        );
+    }
+    let points = spec.points()?;
+    ensure!(!points.is_empty(), "sweep: the grid is empty");
+
+    // Skeleton records, then seed completed work from the prior
+    // document — estimates, failures and measurements are reused
+    // verbatim; everything derived is recomputed by `finalize`.
+    let mut records: Vec<PointRecord> = points
+        .iter()
+        .map(|p| PointRecord {
+            index: p.index,
+            key: p.key.clone(),
+            config: p.cfg.name.clone(),
+            workload: p.workload.clone(),
+            cost_proxy: cost_proxy(&p.cfg),
+            frontier: false,
+            energy_j: None,
+            estimated: None,
+            measured: None,
+            error: None,
+            drift: None,
+        })
+        .collect();
+    if let Some(p) = prior {
+        let by_key: HashMap<&str, &PointRecord> =
+            p.points.iter().map(|r| (r.key.as_str(), r)).collect();
+        for r in &mut records {
+            if let Some(old) = by_key.get(r.key.as_str()) {
+                r.estimated = old.estimated.clone();
+                r.measured = old.measured.clone();
+                r.error = old.error.clone();
+            }
+        }
+    }
+
+    let threads = threads.max(1);
+    let base_cfg = points[0].cfg.clone();
+
+    // ---- phase 1: explore every pending point with the estimator ----
+    let est_session =
+        Session::new(base_cfg.clone()).scale(spec.scale).threads(threads).estimating(true);
+    let pending: Vec<usize> = records
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.estimated.is_none() && r.error.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    for chunk in pending.chunks(threads) {
+        let mut idxs = Vec::with_capacity(chunk.len());
+        let mut jobs = Vec::with_capacity(chunk.len());
+        for &i in chunk {
+            // A point that cannot even resolve its workload is recorded
+            // and skipped — failure isolation starts at job build.
+            match kernels::lookup(&records[i].workload) {
+                Err(e) => records[i].error = Some(PointError::of(&e)),
+                Ok(w) => {
+                    idxs.push(i);
+                    jobs.push(Job::new(points[i].cfg.clone(), w));
+                }
+            }
+        }
+        for (&i, res) in idxs.iter().zip(est_session.run_batch(&jobs)) {
+            match res {
+                Ok(rep) => records[i].estimated = Some(rep),
+                Err(e) => records[i].error = Some(PointError::of(&e)),
+            }
+        }
+        est_session.take_reports(); // the records own the reports
+        finalize(spec, &points, &mut records);
+        on_checkpoint(&snapshot(spec, &records))?;
+    }
+    finalize(spec, &points, &mut records);
+
+    // ---- phase 2: re-run only the Pareto frontier cycle-accurately --
+    let meas_session = Session::new(base_cfg).scale(spec.scale).threads(threads);
+    let pending: Vec<usize> = records
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.frontier && r.measured.is_none() && r.error.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    for chunk in pending.chunks(threads) {
+        let mut idxs = Vec::with_capacity(chunk.len());
+        let mut jobs = Vec::with_capacity(chunk.len());
+        for &i in chunk {
+            match kernels::lookup(&records[i].workload) {
+                Err(e) => records[i].error = Some(PointError::of(&e)),
+                Ok(w) => {
+                    idxs.push(i);
+                    jobs.push(Job::new(points[i].cfg.clone(), w));
+                }
+            }
+        }
+        for (&i, res) in idxs.iter().zip(meas_session.run_batch(&jobs)) {
+            match res {
+                Ok(rep) => records[i].measured = Some(rep),
+                // A frontier point failing its cycle-accurate re-run
+                // (e.g. MaxCyclesExceeded at full scale) is recorded,
+                // not fatal; it keeps its estimate and frontier flag.
+                Err(e) => records[i].error = Some(PointError::of(&e)),
+            }
+        }
+        meas_session.take_reports();
+        finalize(spec, &points, &mut records);
+        on_checkpoint(&snapshot(spec, &records))?;
+    }
+
+    // ---- phase 3: verify (drift verdicts land in finalize) ----------
+    finalize(spec, &points, &mut records);
+    Ok(snapshot(spec, &records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    const EXAMPLE: &str = include_str!("../../examples/terapool.sweep");
+
+    fn tiny_spec(workloads: &[&str]) -> SweepSpec {
+        SweepSpec {
+            name: "t".into(),
+            scale: Scale::Fast,
+            rtol: DEFAULT_RTOL,
+            presets: vec!["tiny".into()],
+            groups: vec![None],
+            banking: vec![None],
+            burst: vec![false],
+            workloads: workloads.iter().map(|w| w.to_string()).collect(),
+        }
+    }
+
+    #[test]
+    fn example_spec_parses_and_expands() {
+        let spec = SweepSpec::parse(EXAMPLE, "terapool").unwrap();
+        let pts = spec.points().unwrap();
+        assert!(pts.len() >= 24, "example grid must explore >= 24 points, got {}", pts.len());
+        // Point keys are the checkpoint identity: all unique, in fixed
+        // expansion order.
+        let mut keys: Vec<&str> = pts.iter().map(|p| p.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), pts.len(), "point keys must be unique");
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        assert_eq!(spec.fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_typed_errors() {
+        let ok_tail = "axis preset = tiny\naxis workload = axpy\n";
+        let cases: &[(&str, &str)] = &[
+            ("axis preset = nope\naxis workload = axpy\n", "unknown cluster preset"),
+            ("rtol = 5.0\naxis preset = tiny\naxis workload = axpy\n", "rtol must be in"),
+            ("rtol = zero\naxis preset = tiny\naxis workload = axpy\n", "rtol wants a number"),
+            ("scale = medium\naxis preset = tiny\naxis workload = axpy\n", "scale must be"),
+            ("axis banking = 0\naxis preset = tiny\naxis workload = axpy\n", "banking wants"),
+            ("axis burst = maybe\naxis preset = tiny\naxis workload = axpy\n", "expected a boolean"),
+            ("axis flavor = a\naxis preset = tiny\naxis workload = axpy\n", "unknown axis"),
+            ("frobnicate = 1\naxis preset = tiny\naxis workload = axpy\n", "unknown directive"),
+            ("axis preset = tiny\naxis preset = tiny\naxis workload = axpy\n", "declared twice"),
+            ("axis preset = tiny, tiny\naxis workload = axpy\n", "repeats value"),
+            ("axis preset =\naxis workload = axpy\n", "at least one value"),
+            ("axis workload = axpy\n", "axis preset"),
+            ("axis preset = tiny\n", "axis workload"),
+            ("just some words\n", "expected key=value"),
+        ];
+        for (text, needle) in cases {
+            let e = SweepSpec::parse(text, "bad").unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::BadTopology, "{text:?}: {e}");
+            assert!(e.to_string().contains(needle), "{text:?}: {e} (wanted {needle:?})");
+        }
+        // Unknown workloads keep the registry's typed error class.
+        let e = SweepSpec::parse(&format!("{ok_tail}axis groups = 1\n"), "ok")
+            .map(|mut s| {
+                s.workloads = vec!["bogus".into()];
+                s.validate().unwrap_err()
+            })
+            .unwrap();
+        assert_eq!(e.kind(), ErrorKind::UnknownWorkload);
+    }
+
+    #[test]
+    fn pareto_frontier_dominance_and_ties() {
+        // (cycles, cost): a dominates b; c trades off; d ties with a.
+        let axes = [(10.0, 5.0), (12.0, 6.0), (8.0, 9.0), (10.0, 5.0)];
+        assert_eq!(pareto_frontier(&axes), vec![true, false, true, true]);
+        assert_eq!(pareto_frontier(&[]), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn drift_verdict_mirrors_report_diff_semantics() {
+        let cfg = ClusterConfig::tiny();
+        let s = Session::new(cfg).scale(Scale::Fast);
+        let r = s.run(&*kernels::lookup("axpy").unwrap()).unwrap();
+
+        let v = drift_verdict(&r, &r, DEFAULT_RTOL);
+        assert!(v.pass, "{:?}", v.failures);
+        assert_eq!(v.worst_rel, 0.0);
+
+        // Tolerant field within the bound: passes, drift recorded.
+        let mut near = r.clone();
+        near.stats.cycles = r.stats.cycles + r.stats.cycles / 20; // +5%
+        let v = drift_verdict(&near, &r, DEFAULT_RTOL);
+        assert!(v.pass, "{:?}", v.failures);
+        // ipc/gflops are derived from cycles, so their relative drift
+        // ties with the cycles field to within an ulp — any of the
+        // three may win the worst-field slot.
+        assert!(v.worst_rel > 0.0);
+        assert!(["cycles", "ipc", "gflops"].contains(&v.worst_field.as_str()), "{}", v.worst_field);
+
+        // Tolerant field beyond the bound: fails.
+        let mut far = r.clone();
+        far.stats.cycles = r.stats.cycles * 2;
+        assert!(!drift_verdict(&far, &r, DEFAULT_RTOL).pass);
+
+        // Exact fields admit zero drift regardless of rtol.
+        let mut off = r.clone();
+        off.stats.instructions += 1;
+        let v = drift_verdict(&off, &r, 1.0);
+        assert!(!v.pass && v.failures.iter().any(|f| f.contains("instructions")));
+    }
+
+    #[test]
+    fn report_json_roundtrips_byte_identically() {
+        let spec = tiny_spec(&["axpy", "dotp"]);
+        let rep = run_sweep(&spec, 1, None, |_| Ok(())).unwrap();
+        let text = rep.render();
+        let back = SweepReport::parse(&text).unwrap();
+        assert_eq!(back.render(), text, "render → parse → render must be the identity");
+        assert_eq!(back.spec_fingerprint, rep.spec_fingerprint);
+        assert_eq!(back.points.len(), rep.points.len());
+    }
+
+    #[test]
+    fn frontier_points_are_measured_and_pass_drift_at_calibration_scale() {
+        let spec = tiny_spec(&["axpy", "dotp"]);
+        let rep = run_sweep(&spec, 2, None, |_| Ok(())).unwrap();
+        assert_eq!(rep.points.len(), 2);
+        let frontier: Vec<_> = rep.points.iter().filter(|p| p.frontier).collect();
+        assert!(!frontier.is_empty(), "some point must be non-dominated");
+        for p in &rep.points {
+            assert!(p.estimated.is_some(), "{}: estimate missing", p.key);
+            assert_eq!(p.measured.is_some(), p.frontier, "{}: only frontier points re-run", p.key);
+        }
+        // At the calibration scale the estimate is exact by
+        // construction — drift verdicts must pass with zero drift.
+        for p in frontier {
+            let d = p.drift.as_ref().expect("frontier points carry a drift verdict");
+            assert!(d.pass, "{}: {:?}", p.key, d.failures);
+            let e = p.estimated.as_ref().unwrap();
+            assert!(e.estimate.is_some(), "estimated reports carry EstimateInfo");
+        }
+        assert_eq!(rep.frontier_drift_failures(), 0);
+    }
+
+    #[test]
+    fn checkpoint_from_other_spec_is_refused() {
+        let spec = tiny_spec(&["axpy"]);
+        let rep = run_sweep(&spec, 1, None, |_| Ok(())).unwrap();
+        let other = tiny_spec(&["dotp"]);
+        let e = run_sweep(&other, 1, Some(&rep), |_| Ok(())).unwrap_err();
+        assert!(e.to_string().contains("different spec"), "{e}");
+    }
+}

@@ -100,8 +100,10 @@ fn bad(msg: impl Into<String>) -> Error {
     Error::bad_topology(msg)
 }
 
-/// Resolve a `preset=` value to a base cluster config.
-fn preset(name: &str) -> Result<ClusterConfig> {
+/// Resolve a `preset=` value to a base cluster config. Shared with the
+/// sweep-spec parser (`crate::sweep`), which sweeps the same preset
+/// namespace.
+pub(crate) fn preset(name: &str) -> Result<ClusterConfig> {
     Ok(match name {
         "tiny" => ClusterConfig::tiny(),
         "mempool" => ClusterConfig::mempool(),

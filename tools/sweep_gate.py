@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Sweep frontier drift gate (ISSUE 9 CI leg): hold every Pareto-frontier
+point of a ``terapool-sweepreport-v1`` document to its stated rtol by
+re-deriving the estimated-vs-measured comparison from the embedded
+``RunReport`` pairs with ``report_diff``'s field semantics (exact
+census-backed counters, tolerant timing fields) — and cross-check the
+document's own in-process drift verdicts against that independent
+rederivation, so a bug in either implementation fails loudly.
+
+The gate also enforces the sweep-service shape contract:
+
+* the grid explored at least ``--min-points`` points;
+* only frontier points carry cycle-accurate measurements (the refine
+  phase must not have re-run dominated points);
+* every estimated report carries ``EstimateInfo`` provenance.
+
+Usage:
+    python3 tools/sweep_gate.py fig_sweep.json
+    python3 tools/sweep_gate.py fig_sweep.json --min-points 24
+
+Exit codes: 0 all frontier points within rtol, 1 drift/shape violation,
+2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from report_diff import EXACT_FIELDS, TOLERANT_FIELDS, drift, lookup  # noqa: E402
+
+SCHEMA = "terapool-sweepreport-v1"
+
+
+def point_failures(point: dict, rtol: float) -> list[str]:
+    """Re-derive the drift comparison for one measured frontier point."""
+    est, meas = point["estimated"], point["measured"]
+    rows = []
+    for field in EXACT_FIELDS:
+        rel, ok = drift(lookup(meas, field), lookup(est, field), 0.0, 0.0)
+        if not ok:
+            rows.append(f"{field}: {lookup(meas, field)} -> {lookup(est, field)} EXACT-DRIFT")
+    for field in TOLERANT_FIELDS:
+        rel, ok = drift(lookup(meas, field), lookup(est, field), rtol, 0.0)
+        if not ok:
+            rows.append(f"{field}: {lookup(meas, field)} -> {lookup(est, field)} "
+                        f"({rel:.2%} rel, rtol {rtol})")
+    if est.get("fingerprint") != meas.get("fingerprint"):
+        rows.append(f"fingerprint: {meas.get('fingerprint')} -> {est.get('fingerprint')}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="terapool-sweepreport-v1 document (fig_sweep.json)")
+    ap.add_argument("--min-points", type=int, default=24,
+                    help="minimum explored grid size (default: %(default)s)")
+    args = ap.parse_args()
+
+    try:
+        doc = json.loads(Path(args.report).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"sweep-gate: {e}")
+        return 2
+    if doc.get("schema") != SCHEMA:
+        print(f"sweep-gate: schema {doc.get('schema')!r}, want {SCHEMA!r}")
+        return 2
+
+    rtol = float(doc["rtol"])
+    points = doc["points"]
+    explored = [p for p in points if p.get("estimated")]
+    failed = [p for p in points if p.get("error")]
+    frontier = [p for p in points if p.get("frontier")]
+    measured = [p for p in points if p.get("measured")]
+    print(f"sweep-gate: {doc['name']}: {len(points)} points "
+          f"({len(explored)} explored, {len(failed)} failed, "
+          f"{len(frontier)} on the frontier, {len(measured)} measured), rtol {rtol}")
+
+    failures = 0
+    if len(points) < args.min_points:
+        print(f"sweep-gate: FAIL: grid has {len(points)} points, want >= {args.min_points}")
+        failures += 1
+    for p in points:
+        if p.get("measured") and not p.get("frontier"):
+            print(f"sweep-gate: FAIL: {p['key']}: dominated point was re-run cycle-accurately")
+            failures += 1
+        if p.get("estimated") and not lookup(p["estimated"], "estimate"):
+            print(f"sweep-gate: FAIL: {p['key']}: estimated report lacks EstimateInfo")
+            failures += 1
+
+    for p in frontier:
+        if not p.get("measured"):
+            # A frontier point may legitimately lack a measurement only
+            # when its re-run failed — and then the error is on record.
+            if not p.get("error"):
+                print(f"sweep-gate: FAIL: {p['key']}: frontier point never measured")
+                failures += 1
+            else:
+                print(f"sweep-gate: note: {p['key']}: re-run failed "
+                      f"({p['error']['kind']}): {p['error']['message']}")
+            continue
+        rows = point_failures(p, rtol)
+        verdict = p.get("drift") or {}
+        if rows:
+            failures += 1
+            print(f"sweep-gate: FAIL: {p['key']}: {len(rows)} drifting field(s)")
+            for row in rows:
+                print(f"    {row}")
+        if bool(verdict.get("pass")) != (not rows):
+            failures += 1
+            print(f"sweep-gate: FAIL: {p['key']}: in-process verdict "
+                  f"(pass={verdict.get('pass')}) disagrees with the rederivation "
+                  f"({len(rows)} failure(s))")
+
+    if failures:
+        print(f"\nsweep-gate: FAIL — {failures} violation(s)")
+        return 1
+    print(f"\nsweep-gate: OK — {len(frontier)} frontier point(s) within rtol {rtol}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
