@@ -47,21 +47,19 @@ def test_missing_fields():
     assert drift(None, None, 0.0, 0.0) == (0.0, True)
 
 
-def _doc(cycles, stall_synch):
-    return {
-        "schema": "terapool-runreport-v1",
-        "reports": [
-            {
-                "workload": "axpy-n128",
-                "config": "tiny",
-                "scale": "fast",
-                "fingerprint": "f00d",
-                "engine_threads": 1,
-                "verdict": {"status": "not_checked", "detail": ""},
-                "stats": {"cycles": cycles, "stall_synch": stall_synch},
-            }
-        ],
+def _doc(cycles, stall_synch, system=None):
+    report = {
+        "workload": "axpy-n128",
+        "config": "tiny",
+        "scale": "fast",
+        "fingerprint": "f00d",
+        "engine_threads": 1,
+        "verdict": {"status": "not_checked", "detail": ""},
+        "stats": {"cycles": cycles, "stall_synch": stall_synch},
     }
+    if system is not None:
+        report["system"] = system
+    return {"schema": "terapool-runreport-v1", "reports": [report]}
 
 
 def test_cli_zero_baseline_within_atol_exits_clean(tmp_path):
@@ -102,3 +100,48 @@ def test_cli_real_drift_still_fails(tmp_path):
         text=True,
     )
     assert proc.returncode == 1, proc.stdout + proc.stderr
+
+
+def _run_diff(old_path, new_path, *extra):
+    return subprocess.run(
+        [sys.executable, str(TOOLS / "report_diff.py"), str(old_path), str(new_path), *extra],
+        capture_output=True,
+        text=True,
+    )
+
+
+OVERLAP = {"slices": 4, "exposed_bus_cycles": 100, "hidden_bus_cycles": 300}
+
+
+def test_overlap_counters_are_exact_when_present_in_both(tmp_path):
+    # The system.* counters are determinism-pinned: any difference is an
+    # EXACT-DRIFT failure even when --rtol would forgive it.
+    old, new = tmp_path / "old.json", tmp_path / "new.json"
+    drifted = dict(OVERLAP, hidden_bus_cycles=299)
+    old.write_text(json.dumps(_doc(1000, 0, system=OVERLAP)))
+    new.write_text(json.dumps(_doc(1000, 0, system=drifted)))
+    proc = _run_diff(old, new, "--rtol", "0.5")
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "system.hidden_bus_cycles" in proc.stdout
+    assert "EXACT-DRIFT" in proc.stdout
+
+
+def test_overlap_counters_are_skipped_when_absent_on_either_side(tmp_path):
+    # Old baselines predate the overlap fields; a new report that carries
+    # them must still diff cleanly against such a baseline (and vice
+    # versa) — absence is schema age, not drift.
+    old, new = tmp_path / "old.json", tmp_path / "new.json"
+    old.write_text(json.dumps(_doc(1000, 0)))
+    new.write_text(json.dumps(_doc(1000, 0, system=OVERLAP)))
+    proc = _run_diff(old, new)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = _run_diff(new, old)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_overlap_counters_matching_in_both_pass(tmp_path):
+    old, new = tmp_path / "old.json", tmp_path / "new.json"
+    old.write_text(json.dumps(_doc(1000, 0, system=OVERLAP)))
+    new.write_text(json.dumps(_doc(1000, 0, system=OVERLAP)))
+    proc = _run_diff(old, new)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

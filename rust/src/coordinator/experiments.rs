@@ -484,23 +484,43 @@ pub fn headline(sess: &Session) -> Table {
 /// PE count ([`Topology::split`]), every variant through the system
 /// engine so the staging/merge overhead accounting is uniform: measured
 /// total cycles, the compute/overhead split, inter-cluster link
-/// traffic, shared-bus traffic, and aggregate GFLOP/s.
+/// traffic, shared-bus traffic, and aggregate GFLOP/s. Every variant
+/// runs twice — overlap off (`slices = 1`, the phase-serial timeline)
+/// and overlap on (`slices = 4`, the pipelined engine) — and the table
+/// quantifies how much staging+merge bus time the pipeline hides
+/// (`Hidden %`, target ≥60% on the 4-way GEMM). Variants whose bands
+/// cannot cover 4 slices report the overlap columns as `-`.
 pub fn fig_scaleout(s: &Session) -> Table {
     let base = ClusterConfig::terapool(9);
     let mut t = Table::new(
         "Scale-out — one big cluster vs 2/4 smaller at equal total PE count",
         &[
             "System", "Clusters", "PEs", "Cycles", "Compute", "Overhead %",
-            "Link words", "Bus words", "GFLOP/s",
+            "Cycles S=4", "Hidden %", "Link words", "Bus words", "GFLOP/s",
         ],
     );
     for parts in [1usize, 2, 4] {
         let topo = Topology::split(&base, parts).expect("terapool splits 1/2/4-way");
         for kind in ["gemm", "fft"] {
-            let r = s.system(&topo, kind).expect("scale-out system run");
+            let r = s.system_sliced(&topo, kind, 1).expect("scale-out system run");
             let info = r.system.as_ref().expect("system runs carry the system section");
             let st = &r.stats;
             let overhead = (info.stage_cycles + info.merge_cycles) as f64 / st.cycles as f64;
+            // The overlap-on twin: same problem, 4 slices per cluster.
+            // An Unsupported refusal (band too small to slice) leaves
+            // the overlap columns empty rather than failing the figure.
+            let (c4, hid) = match s.system_sliced(&topo, kind, 4) {
+                Ok(r4) => {
+                    let i4 = r4.system.as_ref().expect("system runs carry the system section");
+                    let frac = if i4.bus_busy_cycles > 0 {
+                        i4.hidden_bus_cycles as f64 / i4.bus_busy_cycles as f64
+                    } else {
+                        0.0
+                    };
+                    (int(r4.stats.cycles), pct(frac))
+                }
+                Err(_) => ("-".into(), "-".into()),
+            };
             t.row(vec![
                 r.workload.clone(),
                 int(info.clusters.len() as u64),
@@ -508,6 +528,8 @@ pub fn fig_scaleout(s: &Session) -> Table {
                 int(st.cycles),
                 int(info.compute_cycles),
                 pct(overhead),
+                c4,
+                hid,
                 int(info.link_words),
                 int(info.bus_words),
                 f1(st.gflops()),
@@ -538,6 +560,7 @@ pub fn fig_sweep(s: &Session) -> crate::errors::Result<Table> {
         groups: vec![None],
         banking: vec![None, Some(2)],
         burst: vec![false, true],
+        freq: vec![None],
         workloads: vec!["axpy".into(), "dotp".into()],
     };
     spec.validate()?;

@@ -157,6 +157,26 @@ pub fn build_band(
     parts: usize,
     stage_tw: bool,
 ) -> (Staged, FftBand) {
+    build_band_slice(cfg, p, part, parts, 0, 1, stage_tw)
+}
+
+/// [`build_band`] restricted further to frame slice `slice` of `slices`
+/// within the band — the full band is the 1-slice case (exactly what
+/// [`build_band`] delegates to). Frames are independent transforms, so
+/// any frame partition computes bit-identical planes; the pipelined
+/// system engine runs a cluster's slices back-to-back, staging slice
+/// `t+1`'s frames while slice `t` computes. The twiddle replica count
+/// stays a function of `(cfg, parts)` alone, so every slice instance of
+/// a cluster lays its table out identically.
+pub fn build_band_slice(
+    cfg: &ClusterConfig,
+    p: &FftParams,
+    part: usize,
+    parts: usize,
+    slice: usize,
+    slices: usize,
+    stage_tw: bool,
+) -> (Staged, FftBand) {
     let n = p.n;
     let mut m = 0;
     while 1usize << (2 * m) < n {
@@ -164,8 +184,13 @@ pub fn build_band(
     }
     assert_eq!(1usize << (2 * m), n, "FFT length must be a power of 4");
     let band = chunk_range(p.batch, part, parts);
-    let (f0, lb) = (band.start, band.end - band.start);
-    assert!(lb > 0, "band {part}/{parts} of {} frames is empty", p.batch);
+    let sub = chunk_range(band.end - band.start, slice, slices);
+    let (f0, lb) = (band.start + sub.start, sub.end - sub.start);
+    assert!(
+        lb > 0,
+        "slice {slice}/{slices} of band {part}/{parts} of {} frames is empty",
+        p.batch
+    );
     let npes = cfg.num_pes();
 
     // Replicate the twiddle table: PEs index copy `pe % tw_copies`,
@@ -337,10 +362,11 @@ pub fn build_band(
         inputs.push((twr, tw_re));
         inputs.push((twi, tw_im));
     }
-    let name = if parts == 1 {
-        format!("fft-{}x{}", p.batch, n)
-    } else {
-        format!("fft-{}x{}[{part}/{parts}]", p.batch, n)
+    let shape = format!("fft-{}x{}", p.batch, n);
+    let name = match (parts, slices) {
+        (1, 1) => shape,
+        (_, 1) => format!("{shape}[{part}/{parts}]"),
+        _ => format!("{shape}[{part}/{parts}]~{slice}/{slices}"),
     };
     let staged = Staged {
         name,
@@ -431,6 +457,39 @@ mod tests {
                 got_i[i],
                 want_i[i]
             );
+        }
+    }
+
+    #[test]
+    fn fft_frame_slices_match_the_host_reference_frames() {
+        // Each frame slice of band 0 of 2 must transform exactly its
+        // frames of the full batch — the per-slice functional check the
+        // pipelined system engine relies on.
+        let cfg = ClusterConfig::tiny();
+        let p = FftParams { batch: 4, n: 64 };
+        let (want_r, want_i) = reference(&p);
+        for slice in 0..2 {
+            let (staged, band) = build_band_slice(&cfg, &p, 0, 2, slice, 2, true);
+            let (mut cl, io) = staged.into_cluster(cfg.clone());
+            cl.run(10_000_000);
+            let got_r = io.read_output(&cl).unwrap();
+            let got_i = cl.l1.read_slice(band.im_base, band.frames * p.n);
+            assert_eq!(got_r.len(), band.frames * p.n);
+            for i in 0..band.frames * p.n {
+                let gi = band.f0 * p.n + i;
+                assert!(
+                    (got_r[i] - want_r[gi]).abs() < 2e-2,
+                    "slice {slice} re[{i}] = {} want {}",
+                    got_r[i],
+                    want_r[gi]
+                );
+                assert!(
+                    (got_i[i] - want_i[gi]).abs() < 2e-2,
+                    "slice {slice} im[{i}] = {} want {}",
+                    got_i[i],
+                    want_i[gi]
+                );
+            }
         }
     }
 

@@ -108,14 +108,50 @@ pub struct GemmBand {
     pub c_base: u32,
 }
 
+/// Factor a slice count into the squarest `(row-slices, col-slices)`
+/// grid: the largest divisor ≤ √S times its cofactor (4 → 2×2, 2 → 1×2,
+/// 6 → 2×3). A 2-D grid is what lets the pipelined system engine hide
+/// the *shared* B staging too — B streams in one column panel at a
+/// time, whereas a 1-D row slicing would need the whole of B before the
+/// first slice can start.
+pub fn slice_grid(slices: usize) -> (usize, usize) {
+    let s = slices.max(1);
+    let mut sr = 1;
+    let mut d = 1;
+    while d * d <= s {
+        if s % d == 0 {
+            sr = d;
+        }
+        d += 1;
+    }
+    (sr, s / sr)
+}
+
+/// Placement of one (cluster, slice) tile inside the full problem: C
+/// rows `[row0, row0+rows)` × columns `[col0, col0+cols)`. The tile's
+/// A/B/C arrays are compact — A is `rows×k`, B the `k×cols` column
+/// panel at pitch `cols`, C the `rows×cols` tile (strided in the merged
+/// memory image at pitch `n`).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTile {
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+    pub a_base: u32,
+    pub b_base: u32,
+    pub c_base: u32,
+}
+
 /// [`build`] restricted to block-row band `part` of `parts`: the cluster
 /// computes C rows `[row0, row0 + rows)` from its own A band and a full
 /// copy of B. The A band and (when `stage_b`) B are staged locally;
-/// non-root clusters of a system run pass `stage_b = false` and receive
-/// B over the inter-cluster links instead (same bytes — staging is the
-/// functional delivery, the links carry the timing/traffic). Layout is
-/// compact (band-sized A and C), so split clusters with proportionally
-/// smaller L1s still fit the full-scale problem.
+/// non-root clusters of a phase-serial system run pass `stage_b = false`
+/// and receive B over the inter-cluster links instead (same bytes —
+/// staging is the functional delivery, the links carry the
+/// timing/traffic). Layout is compact (band-sized A and C), so split
+/// clusters with proportionally smaller L1s still fit the full-scale
+/// problem.
 pub fn build_band(
     cfg: &ClusterConfig,
     p: &GemmParams,
@@ -123,34 +159,69 @@ pub fn build_band(
     parts: usize,
     stage_b: bool,
 ) -> (Staged, GemmBand) {
+    let (s, t) = build_tile(cfg, p, part, parts, 0, 1, 0, 1, stage_b);
+    (s, GemmBand { row0: t.row0, rows: t.rows, a_base: t.a_base, b_base: t.b_base, c_base: t.c_base })
+}
+
+/// [`build_band`] restricted further to slice `(si, sj)` of an `sr×sc`
+/// grid over the band: row-slice `si` of the band's block-rows ×
+/// col-slice `sj` of the problem's block-columns. The full band is the
+/// 1×1 grid (that is exactly what [`build_band`] delegates to). Each
+/// tile is an independent `Staged` instance — the pipelined system
+/// engine runs a cluster's tiles back-to-back, staging tile `t+1` while
+/// tile `t` computes.
+#[allow(clippy::too_many_arguments)]
+pub fn build_tile(
+    cfg: &ClusterConfig,
+    p: &GemmParams,
+    part: usize,
+    parts: usize,
+    si: usize,
+    sr: usize,
+    sj: usize,
+    sc: usize,
+    stage_b: bool,
+) -> (Staged, GemmTile) {
     assert!(p.m % BM == 0 && p.n % BN == 0, "4x4 blocking requires 4|M, 4|N");
     let blocks_m_total = p.m / BM;
+    let blocks_n_total = p.n / BN;
     let band = chunk_range(blocks_m_total, part, parts);
-    let blocks_m = band.end - band.start;
-    assert!(blocks_m > 0, "band {part}/{parts} of {blocks_m_total} block-rows is empty");
-    let (row0, rows) = (band.start * BM, blocks_m * BM);
+    let rb = chunk_range(band.end - band.start, si, sr);
+    let cb_range = chunk_range(blocks_n_total, sj, sc);
+    let blocks_m = rb.end - rb.start;
+    let blocks_n = cb_range.end - cb_range.start;
+    assert!(
+        blocks_m > 0 && blocks_n > 0,
+        "tile ({si},{sj})/{sr}x{sc} of band {part}/{parts} is empty"
+    );
+    let (row0, rows) = ((band.start + rb.start) * BM, blocks_m * BM);
+    let (col0, cols) = (cb_range.start * BN, blocks_n * BN);
     let npes = cfg.num_pes();
 
     let mut alloc = Alloc::new(cfg);
     let ab = alloc.alloc((rows * p.k) as u32);
-    let bb = alloc.alloc((p.k * p.n) as u32);
-    let cb = alloc.alloc((rows * p.n) as u32);
+    let bb = alloc.alloc((p.k * cols) as u32);
+    let cb = alloc.alloc((rows * cols) as u32);
 
-    let blocks_n = p.n / BN;
     let nblocks = blocks_m * blocks_n;
 
     let mut programs = Vec::with_capacity(npes);
     for pe in 0..npes {
         let mut t = Program::new();
-        // Stagger each PE's K-loop starting phase. Without this, the PEs
-        // sharing a block-column fetch the *same* four B words in
-        // lockstep, hammering four banks per step (the classic broadcast
-        // hotspot; the paper's hand-tuned kernels use the same cyclic
-        // offset trick). FP accumulation order changes, not the result
-        // set (tolerances in the golden comparison absorb it).
-        let phase = (pe * 17) % p.k;
         for blk in chunk_range(nblocks, pe, npes) {
             let (bi, bj) = (blk / blocks_n, blk % blocks_n);
+            // Stagger the K-loop starting phase per 4×4 block. Without
+            // this, PEs sharing a block-column fetch the *same* four B
+            // words in lockstep, hammering four banks per step (the
+            // classic broadcast hotspot; the paper's hand-tuned kernels
+            // use the same cyclic offset trick). The phase is keyed on
+            // the block's *global* index — not the PE id — so each C
+            // element's FP accumulation order is a function of the
+            // block alone, invariant to how clusters/slices/PEs divide
+            // the blocks: the merged system image stays byte-identical
+            // at any slicing and any cluster count.
+            let gblk = (row0 / BM + bi) * blocks_n_total + (col0 / BN + bj);
+            let phase = (gblk * 17) % p.k;
             // Zero the accumulator block.
             for r in 0..(BM * BN) as u8 {
                 t.ld_imm(R_ACC + r, 0.0);
@@ -158,14 +229,15 @@ pub fn build_band(
             for kk0 in 0..p.k {
                 let kk = (kk0 + phase) % p.k;
                 for u in 0..BM {
-                    // Band-local row: the A/C arrays hold only this
-                    // band's rows.
+                    // Tile-local row: the A/C arrays hold only this
+                    // tile's rows.
                     let row = bi * BM + u;
                     t.ld(R_A + u as u8, ab + (row * p.k + kk) as u32);
                 }
                 for v in 0..BN {
+                    // Tile-local column: B is the k×cols panel.
                     let col = bj * BN + v;
-                    t.ld(R_B + v as u8, bb + (kk * p.n + col) as u32);
+                    t.ld(R_B + v as u8, bb + (kk * cols + col) as u32);
                 }
                 for u in 0..BM {
                     for v in 0..BN {
@@ -179,7 +251,7 @@ pub fn build_band(
                 for v in 0..BN {
                     let row = bi * BM + u;
                     let col = bj * BN + v;
-                    t.st(R_ACC + (u * BN + v) as u8, cb + (row * p.n + col) as u32);
+                    t.st(R_ACC + (u * BN + v) as u8, cb + (row * cols + col) as u32);
                 }
             }
         }
@@ -191,23 +263,29 @@ pub fn build_band(
     let a_band = input_a(p)[row0 * p.k..(row0 + rows) * p.k].to_vec();
     let mut inputs = vec![(ab, a_band)];
     if stage_b {
-        inputs.push((bb, input_b(p)));
+        let bfull = input_b(p);
+        let mut panel = Vec::with_capacity(p.k * cols);
+        for kk in 0..p.k {
+            panel.extend_from_slice(&bfull[kk * p.n + col0..kk * p.n + col0 + cols]);
+        }
+        inputs.push((bb, panel));
     }
-    let name = if parts == 1 {
-        format!("gemm-{}x{}x{}", p.m, p.n, p.k)
-    } else {
-        format!("gemm-{}x{}x{}[{part}/{parts}]", p.m, p.n, p.k)
+    let shape = format!("gemm-{}x{}x{}", p.m, p.n, p.k);
+    let name = match (parts, sr * sc) {
+        (1, 1) => shape,
+        (_, 1) => format!("{shape}[{part}/{parts}]"),
+        _ => format!("{shape}[{part}/{parts}]~{si}.{sj}/{sr}x{sc}"),
     };
     let staged = Staged {
         name,
         programs,
         inputs,
         output_base: cb,
-        output_len: rows * p.n,
-        flops: 2 * (rows * p.n * p.k) as u64,
+        output_len: rows * cols,
+        flops: 2 * (rows * cols * p.k) as u64,
         dma: None,
     };
-    (staged, GemmBand { row0, rows, a_base: ab, b_base: bb, c_base: cb })
+    (staged, GemmTile { row0, rows, col0, cols, a_base: ab, b_base: bb, c_base: cb })
 }
 
 /// Host-side reference.
@@ -241,6 +319,46 @@ mod tests {
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((g - w).abs() < 1e-3, "C[{i}] = {g}, want {w}");
         }
+    }
+
+    #[test]
+    fn gemm_tile_slices_match_the_host_reference_subblock() {
+        // Every tile of a 2×2 slice grid over band 1 of 2 must reproduce
+        // exactly its C sub-block of the host reference — the per-slice
+        // functional check the pipelined system engine relies on.
+        let cfg = ClusterConfig::tiny();
+        let p = GemmParams { m: 16, n: 16, k: 24 };
+        let want = reference(&p);
+        for si in 0..2 {
+            for sj in 0..2 {
+                let (staged, tile) = build_tile(&cfg, &p, 1, 2, si, 2, sj, 2, true);
+                let (mut cl, io) = staged.into_cluster(cfg.clone());
+                cl.run(10_000_000);
+                let got = io.read_output(&cl).unwrap();
+                assert_eq!(got.len(), tile.rows * tile.cols);
+                for r in 0..tile.rows {
+                    for c in 0..tile.cols {
+                        let g = got[r * tile.cols + c];
+                        let w = want[(tile.row0 + r) * p.n + tile.col0 + c];
+                        assert!(
+                            (g - w).abs() < 1e-3,
+                            "tile ({si},{sj}) C[{r},{c}] = {g}, want {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_grid_is_the_squarest_factorization() {
+        assert_eq!(slice_grid(1), (1, 1));
+        assert_eq!(slice_grid(2), (1, 2));
+        assert_eq!(slice_grid(3), (1, 3));
+        assert_eq!(slice_grid(4), (2, 2));
+        assert_eq!(slice_grid(6), (2, 3));
+        assert_eq!(slice_grid(8), (2, 4));
+        assert_eq!(slice_grid(9), (3, 3));
     }
 
     #[test]

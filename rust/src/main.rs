@@ -32,7 +32,7 @@ use terapool::{bail, ensure};
 const USAGE: &str = "usage: terapool <experiment> [--fast] [--threads N] [--json PATH]
        terapool sweep [--fast] [--estimate] [--json PATH]
        terapool sweep-space [--spec PATH] [--resume PATH] [--fast] [--json PATH]
-       terapool system [--topology PATH] [--fast] [--threads N]
+       terapool system [--topology PATH] [--slices N] [--fast] [--threads N]
        terapool --list
 experiments:
   table3 table4 fig8 fig9 fig11 fig12 fig13 fig14a fig14b
@@ -75,6 +75,11 @@ options:
                 and FFT data-parallel across the clusters, checks the
                 merged memory image against the host references, and
                 reports per-cluster / per-link / bus breakdowns
+  --slices N    band slices per cluster for `terapool system` (default 1
+                = the phase-serial timeline). N > 1 pipelines shared-bus
+                staging and merge behind cluster compute, double-buffering
+                slice k+1 while slice k runs; the merged memory image is
+                byte-identical at any N, only the timeline changes
   --list        enumerate registered workloads and experiments";
 
 fn main() -> Result<()> {
@@ -93,6 +98,13 @@ fn main() -> Result<()> {
     let estimate = args.iter().any(|a| a == "--estimate");
     let burst = args.iter().any(|a| a == "--burst");
     let topology = parse_value(&args, "--topology")?;
+    let slices = parse_value(&args, "--slices")?
+        .map(|v| match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(terapool::err!("--slices wants a positive integer, got {v}")),
+        })
+        .transpose()?
+        .unwrap_or(1);
     let spec = parse_value(&args, "--spec")?;
     let resume = parse_value(&args, "--resume")?;
 
@@ -141,6 +153,7 @@ fn main() -> Result<()> {
         burst,
         no_skip,
         topology.as_deref(),
+        slices,
         &session,
         &mut reports,
     );
@@ -160,6 +173,7 @@ fn dispatch(
     burst: bool,
     no_skip: bool,
     topology: Option<&str>,
+    slices: usize,
     session: &Session,
     reports: &mut Vec<RunReport>,
 ) -> Result<()> {
@@ -194,7 +208,7 @@ fn dispatch(
         }
         "fig-scaleout" => coordinator::fig_scaleout(session).print(),
         "fig-sweep" => coordinator::fig_sweep(session)?.print(),
-        "system" => system_cmd(scale, threads, no_skip, topology, reports)?,
+        "system" => system_cmd(scale, threads, no_skip, topology, slices, reports)?,
         "validate" => validate(scale, threads, reports)?,
         "sweep" => sweep(session, burst)?,
         "ablate-txtable" => ablate_txtable(session),
@@ -227,6 +241,7 @@ fn is_option_value(args: &[String], i: usize) -> bool {
         && (args[i - 1] == "--threads"
             || args[i - 1] == "--json"
             || args[i - 1] == "--topology"
+            || args[i - 1] == "--slices"
             || args[i - 1] == "--spec"
             || args[i - 1] == "--resume")
 }
@@ -253,6 +268,7 @@ fn system_cmd(
     threads: usize,
     no_skip: bool,
     topology: Option<&str>,
+    slices: usize,
     reports: &mut Vec<RunReport>,
 ) -> Result<()> {
     let path = std::path::PathBuf::from(topology.unwrap_or("examples/quad.topo"));
@@ -264,6 +280,7 @@ fn system_cmd(
         .scale(scale)
         .threads(threads)
         .fast_forward(!no_skip)
+        .slices(slices)
         .check(true);
     let mut failures = 0usize;
     for kind in ["gemm", "fft"] {
@@ -296,6 +313,15 @@ fn print_system_report(r: &RunReport) {
         r.stats.gflops(),
         info.bus_words,
         info.bus_busy_cycles
+    );
+    let hidden_pct = if info.bus_busy_cycles > 0 {
+        100.0 * info.hidden_bus_cycles as f64 / info.bus_busy_cycles as f64
+    } else {
+        0.0
+    };
+    println!(
+        "  overlap: {} slices/cluster, bus cycles {} exposed / {} hidden ({hidden_pct:.0}% hidden)",
+        info.slices, info.exposed_bus_cycles, info.hidden_bus_cycles
     );
     for c in &info.clusters {
         println!(

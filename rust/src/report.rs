@@ -457,10 +457,15 @@ impl EstimateInfo {
 pub struct SystemClusterInfo {
     pub name: String,
     pub num_pes: usize,
-    /// Compute cycles of this cluster's chunk (its own clock).
+    /// Compute cycles of this cluster's chunk (its own clock; the sum
+    /// over its slices when the run is pipelined).
     pub cycles: u64,
     pub instructions: u64,
     pub flops: u64,
+    /// Per-slice compute windows `[start, end)` on the *system*
+    /// timeline, in slice order. One window per slice (a single window
+    /// for a phase-serial run).
+    pub slice_windows: Vec<(u64, u64)>,
 }
 
 /// One inter-cluster link's traffic during a system run.
@@ -497,6 +502,25 @@ pub struct SystemInfo {
     pub merge_cycles: u64,
     /// Total words moved over inter-cluster links.
     pub link_words: u64,
+    /// Band slices per cluster (1 = phase-serial timeline).
+    pub slices: u64,
+    /// Bus grant cycles spent while **no** cluster slice was computing —
+    /// the data movement the timeline actually pays for.
+    pub exposed_bus_cycles: u64,
+    /// Bus grant cycles overlapped with at least one compute window.
+    /// `exposed + hidden == bus_busy_cycles` always.
+    pub hidden_bus_cycles: u64,
+}
+
+/// Optional integer field: `default` when the key is absent (older
+/// document revisions), a typed error when present but ill-typed.
+fn opt_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| err!("ill-typed integer field {key:?}")),
+    }
 }
 
 impl SystemInfo {
@@ -511,6 +535,17 @@ impl SystemInfo {
                     ("cycles".into(), Json::Num(c.cycles as f64)),
                     ("instructions".into(), Json::Num(c.instructions as f64)),
                     ("flops".into(), Json::Num(c.flops as f64)),
+                    (
+                        "slice_windows".into(),
+                        Json::Arr(
+                            c.slice_windows
+                                .iter()
+                                .map(|&(s, e)| {
+                                    Json::Arr(vec![Json::Num(s as f64), Json::Num(e as f64)])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -535,6 +570,9 @@ impl SystemInfo {
             ("compute_cycles".into(), Json::Num(self.compute_cycles as f64)),
             ("merge_cycles".into(), Json::Num(self.merge_cycles as f64)),
             ("link_words".into(), Json::Num(self.link_words as f64)),
+            ("slices".into(), Json::Num(self.slices as f64)),
+            ("exposed_bus_cycles".into(), Json::Num(self.exposed_bus_cycles as f64)),
+            ("hidden_bus_cycles".into(), Json::Num(self.hidden_bus_cycles as f64)),
         ])
     }
 
@@ -545,12 +583,34 @@ impl SystemInfo {
             .ok_or_else(|| err!("missing system.clusters array"))?
             .iter()
             .map(|c| {
+                // `slice_windows` is absent in pre-pipeline documents —
+                // default to no recorded windows.
+                let slice_windows = match c.get("slice_windows").and_then(Json::as_arr) {
+                    None => Vec::new(),
+                    Some(ws) => ws
+                        .iter()
+                        .map(|w| {
+                            let pair = w
+                                .as_arr()
+                                .filter(|p| p.len() == 2)
+                                .ok_or_else(|| err!("ill-formed slice_windows entry"))?;
+                            let s = pair[0]
+                                .as_u64()
+                                .ok_or_else(|| err!("ill-typed slice window start"))?;
+                            let e = pair[1]
+                                .as_u64()
+                                .ok_or_else(|| err!("ill-typed slice window end"))?;
+                            Ok((s, e))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                };
                 Ok(SystemClusterInfo {
                     name: c.field_str("name")?,
                     num_pes: c.field_u64("num_pes")? as usize,
                     cycles: c.field_u64("cycles")?,
                     instructions: c.field_u64("instructions")?,
                     flops: c.field_u64("flops")?,
+                    slice_windows,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -577,6 +637,11 @@ impl SystemInfo {
             compute_cycles: j.field_u64("compute_cycles")?,
             merge_cycles: j.field_u64("merge_cycles")?,
             link_words: j.field_u64("link_words")?,
+            // Overlap counters are absent in pre-pipeline documents:
+            // those runs were phase-serial single-slice timelines.
+            slices: opt_u64(j, "slices", 1)?,
+            exposed_bus_cycles: opt_u64(j, "exposed_bus_cycles", 0)?,
+            hidden_bus_cycles: opt_u64(j, "hidden_bus_cycles", 0)?,
         })
     }
 }
@@ -928,6 +993,7 @@ mod tests {
                 cycles: 1000,
                 instructions: 2000,
                 flops: 3000,
+                slice_windows: vec![(300, 800), (850, 1350)],
             }],
             links: vec![SystemLinkInfo { name: "c0<->c1".into(), words: 64, busy_cycles: 8 }],
             bus_words: 4096,
@@ -936,8 +1002,54 @@ mod tests {
             compute_cycles: 900,
             merge_cycles: 120,
             link_words: 64,
+            slices: 2,
+            exposed_bus_cycles: 100,
+            hidden_bus_cycles: 156,
         };
         assert_eq!(SystemInfo::from_json(&rep.to_json()).unwrap(), rep);
+    }
+
+    #[test]
+    fn system_info_overlap_fields_default_when_absent() {
+        // Pre-pipeline documents carry no slices/exposed/hidden counters
+        // and no per-slice windows: parse them as a single-slice
+        // phase-serial record instead of erroring.
+        let rep = SystemInfo {
+            topology: "dual".into(),
+            clusters: vec![SystemClusterInfo {
+                name: "c0".into(),
+                num_pes: 16,
+                cycles: 10,
+                instructions: 20,
+                flops: 30,
+                slice_windows: Vec::new(),
+            }],
+            links: vec![],
+            bus_words: 1,
+            bus_busy_cycles: 1,
+            stage_cycles: 1,
+            compute_cycles: 10,
+            merge_cycles: 1,
+            link_words: 0,
+            slices: 1,
+            exposed_bus_cycles: 0,
+            hidden_bus_cycles: 0,
+        };
+        let Json::Obj(mut pairs) = rep.to_json() else { panic!("system info is an object") };
+        pairs.retain(|(k, _)| {
+            k != "slices" && k != "exposed_bus_cycles" && k != "hidden_bus_cycles"
+        });
+        for (k, v) in pairs.iter_mut() {
+            if k == "clusters" {
+                let Json::Arr(cs) = v else { panic!("clusters is an array") };
+                for c in cs {
+                    let Json::Obj(cp) = c else { panic!("cluster is an object") };
+                    cp.retain(|(ck, _)| ck != "slice_windows");
+                }
+            }
+        }
+        let old = SystemInfo::from_json(&Json::Obj(pairs)).unwrap();
+        assert_eq!(old, rep);
     }
 
     #[test]

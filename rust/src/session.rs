@@ -101,6 +101,7 @@ pub struct Session {
     checking: bool,
     fast_forward: bool,
     estimating: bool,
+    slices: usize,
     reports: Mutex<Vec<RunReport>>,
 }
 
@@ -118,6 +119,7 @@ impl Session {
             checking: false,
             fast_forward: true,
             estimating: false,
+            slices: 1,
             reports: Mutex::new(Vec::new()),
         }
     }
@@ -169,6 +171,16 @@ impl Session {
     /// [`Scale::Fast`]. Reports carry [`EstimateInfo`] provenance.
     pub fn estimating(mut self, on: bool) -> Self {
         self.estimating = on;
+        self
+    }
+
+    /// Band slices per cluster for system runs (clamped to ≥ 1). `1`
+    /// keeps the phase-serial timeline; `> 1` pipelines shared-bus
+    /// staging and merge behind cluster compute
+    /// ([`crate::system::run_system_sliced`]). The merged memory image
+    /// is byte-identical at any value.
+    pub fn slices(mut self, s: usize) -> Self {
+        self.slices = s.max(1);
         self
     }
 
@@ -347,6 +359,13 @@ impl Session {
     /// [`ErrorKind::Unsupported`](crate::errors::ErrorKind) instead of
     /// silently estimating cluster 0.
     pub fn system(&self, topo: &Topology, kind: &str) -> Result<RunReport> {
+        self.system_sliced(topo, kind, self.slices)
+    }
+
+    /// [`Session::system`] with an explicit slice count, overriding the
+    /// session's [`Session::slices`] knob — what `fig-scaleout` uses to
+    /// run the overlap-on/off pair without rebuilding the session.
+    pub fn system_sliced(&self, topo: &Topology, kind: &str, slices: usize) -> Result<RunReport> {
         if self.estimating {
             return Err(crate::errors::Error::unsupported(format!(
                 "the analytic estimate census does not extend to multi-cluster system \
@@ -356,13 +375,14 @@ impl Session {
             )));
         }
         let kernel = crate::system::resolve_kernel(kind, self.scale)?;
-        let run = crate::system::run_system(
+        let run = crate::system::run_system_sliced(
             topo,
             &kernel,
             self.threads,
             self.max_cycles,
             self.fast_forward,
             self.checking,
+            slices.max(1),
         )
         .map_err(|e| e.prefixed(&topo.name))?;
         let report = RunReport {

@@ -88,6 +88,11 @@ pub struct SweepSpec {
     pub banking: Vec<Option<usize>>,
     /// TCDM burst access on/off.
     pub burst: Vec<bool>,
+    /// Clock frequency overrides (MHz); `None` keeps the preset value.
+    /// Frequency feeds the physical model (runtime µs, GFLOP/s per W),
+    /// not the cycle count — sweeping it explores operating points at
+    /// identical simulated work.
+    pub freq: Vec<Option<f64>>,
     /// Registered workload kinds.
     pub workloads: Vec<String>,
 }
@@ -130,6 +135,20 @@ fn parse_override(axis: &str, v: &str) -> Result<Option<usize>> {
     }
 }
 
+/// `default` keeps the preset frequency; anything else is a positive
+/// finite MHz value.
+fn parse_freq(v: &str) -> Result<Option<f64>> {
+    if v == "default" {
+        return Ok(None);
+    }
+    match v.parse::<f64>() {
+        Ok(f) if f.is_finite() && f > 0.0 => Ok(Some(f)),
+        _ => Err(bad(format!(
+            "axis freq_mhz wants `default` or a positive MHz value, got {v:?}"
+        ))),
+    }
+}
+
 fn no_dupes<T: PartialEq + std::fmt::Debug>(axis: &str, vals: &[T]) -> Result<()> {
     for (i, v) in vals.iter().enumerate() {
         if vals[..i].contains(v) {
@@ -151,6 +170,7 @@ impl SweepSpec {
             groups: Vec::new(),
             banking: Vec::new(),
             burst: Vec::new(),
+            freq: Vec::new(),
             workloads: Vec::new(),
         };
         let mut seen_axes: Vec<String> = Vec::new();
@@ -200,11 +220,15 @@ impl SweepSpec {
                         spec.burst =
                             vals.iter().map(|&v| parse_bool(v)).collect::<Result<_>>().map_err(at)?;
                     }
+                    "freq_mhz" => {
+                        spec.freq =
+                            vals.iter().map(|&v| parse_freq(v)).collect::<Result<_>>().map_err(at)?;
+                    }
                     "workload" => spec.workloads = vals.iter().map(|v| v.to_string()).collect(),
                     other => {
                         return Err(at(bad(format!(
                             "unknown axis {other:?} (known: preset, groups, banking, burst, \
-                             workload)"
+                             freq_mhz, workload)"
                         ))))
                     }
                 }
@@ -236,6 +260,9 @@ impl SweepSpec {
         }
         if spec.burst.is_empty() {
             spec.burst.push(false);
+        }
+        if spec.freq.is_empty() {
+            spec.freq.push(None);
         }
         spec.validate()?;
         Ok(spec)
@@ -274,15 +301,22 @@ impl SweepSpec {
             ("groups", self.groups.is_empty()),
             ("banking", self.banking.is_empty()),
             ("burst", self.burst.is_empty()),
+            ("freq_mhz", self.freq.is_empty()),
         ] {
             if empty {
                 return Err(bad(format!("axis {axis} needs at least one value")));
+            }
+        }
+        for f in self.freq.iter().flatten() {
+            if !(f.is_finite() && *f > 0.0) {
+                return Err(bad(format!("axis freq_mhz values must be positive MHz, got {f}")));
             }
         }
         no_dupes("preset", &self.presets)?;
         no_dupes("groups", &self.groups)?;
         no_dupes("banking", &self.banking)?;
         no_dupes("burst", &self.burst)?;
+        no_dupes("freq_mhz", &self.freq)?;
         no_dupes("workload", &self.workloads)?;
         Ok(())
     }
@@ -297,28 +331,38 @@ impl SweepSpec {
             for &groups in &self.groups {
                 for &banking in &self.banking {
                     for &burst in &self.burst {
-                        let mut cfg = base.clone();
-                        let mut label = preset.clone();
-                        if let Some(g) = groups {
-                            cfg.hierarchy.groups = g;
-                            label.push_str(&format!("+g{g}"));
-                        }
-                        if let Some(bf) = banking {
-                            cfg.banking_factor = bf;
-                            label.push_str(&format!("+bf{bf}"));
-                        }
-                        cfg.burst = burst;
-                        if burst {
-                            label.push_str("+burst");
-                        }
-                        cfg.name = label.clone();
-                        for w in &self.workloads {
-                            pts.push(SweepPoint {
-                                index: pts.len(),
-                                key: format!("{label}/{w}/{}", self.scale.tag()),
-                                cfg: cfg.clone(),
-                                workload: w.clone(),
-                            });
+                        for &freq in &self.freq {
+                            let mut cfg = base.clone();
+                            let mut label = preset.clone();
+                            if let Some(g) = groups {
+                                cfg.hierarchy.groups = g;
+                                label.push_str(&format!("+g{g}"));
+                            }
+                            if let Some(bf) = banking {
+                                cfg.banking_factor = bf;
+                                label.push_str(&format!("+bf{bf}"));
+                            }
+                            cfg.burst = burst;
+                            if burst {
+                                label.push_str("+burst");
+                            }
+                            if let Some(f) = freq {
+                                cfg.freq_mhz = f;
+                                if f.fract() == 0.0 {
+                                    label.push_str(&format!("+f{}", f as u64));
+                                } else {
+                                    label.push_str(&format!("+f{f}"));
+                                }
+                            }
+                            cfg.name = label.clone();
+                            for w in &self.workloads {
+                                pts.push(SweepPoint {
+                                    index: pts.len(),
+                                    key: format!("{label}/{w}/{}", self.scale.tag()),
+                                    cfg: cfg.clone(),
+                                    workload: w.clone(),
+                                });
+                            }
                         }
                     }
                 }
@@ -912,6 +956,7 @@ mod tests {
             groups: vec![None],
             banking: vec![None],
             burst: vec![false],
+            freq: vec![None],
             workloads: workloads.iter().map(|w| w.to_string()).collect(),
         }
     }
@@ -934,6 +979,21 @@ mod tests {
     }
 
     #[test]
+    fn freq_axis_expands_and_labels_points() {
+        let text = "axis preset = tiny\naxis freq_mhz = default, 600, 612.5\naxis workload = axpy\n";
+        let spec = SweepSpec::parse(text, "f").unwrap();
+        let pts = spec.points().unwrap();
+        assert_eq!(pts.len(), 3);
+        // `default` leaves the preset frequency and label untouched;
+        // integral overrides render without a trailing ".0".
+        assert!(pts[0].key.starts_with("tiny/"), "{}", pts[0].key);
+        assert!(pts[1].key.starts_with("tiny+f600/"), "{}", pts[1].key);
+        assert!(pts[2].key.starts_with("tiny+f612.5/"), "{}", pts[2].key);
+        assert_eq!(pts[0].cfg.freq_mhz, crate::topology::preset("tiny").unwrap().freq_mhz);
+        assert_eq!(pts[1].cfg.freq_mhz, 600.0);
+    }
+
+    #[test]
     fn malformed_specs_are_rejected_with_typed_errors() {
         let ok_tail = "axis preset = tiny\naxis workload = axpy\n";
         let cases: &[(&str, &str)] = &[
@@ -947,6 +1007,10 @@ mod tests {
             ("frobnicate = 1\naxis preset = tiny\naxis workload = axpy\n", "unknown directive"),
             ("axis preset = tiny\naxis preset = tiny\naxis workload = axpy\n", "declared twice"),
             ("axis preset = tiny, tiny\naxis workload = axpy\n", "repeats value"),
+            ("axis freq_mhz = 600, 600\naxis preset = tiny\naxis workload = axpy\n", "repeats value"),
+            ("axis freq_mhz = 0\naxis preset = tiny\naxis workload = axpy\n", "positive MHz"),
+            ("axis freq_mhz = fast\naxis preset = tiny\naxis workload = axpy\n", "positive MHz"),
+            ("axis freq_mhz = -1\naxis preset = tiny\naxis workload = axpy\n", "positive MHz"),
             ("axis preset =\naxis workload = axpy\n", "at least one value"),
             ("axis workload = axpy\n", "axis preset"),
             ("axis preset = tiny\n", "axis workload"),

@@ -1,7 +1,11 @@
 //! The system layer: a [`Topology`] of TeraPool clusters stepped as one
 //! scale-out machine (ROADMAP item 1). One kernel is chunked
 //! data-parallel across the clusters; the system scheduler pays for
-//! every word that crosses a chip boundary:
+//! every word that crosses a chip boundary. Two engines share the cost
+//! model:
+//!
+//! **Phase-serial reference** ([`run_system_phases`]) — the five-phase
+//! timeline the scale-out layer started with:
 //!
 //! 1. **Staging** — each cluster's private inputs stream in from the
 //!    off-chip memory node over the *shared* main-memory bus
@@ -15,30 +19,46 @@
 //!    ascending-destination order over [`Topology::route`]'s
 //!    deterministic BFS routes).
 //! 3. **Start barrier** — compute starts globally at `T0 = max` over
-//!    every cluster's readiness: the synchronization cost the
-//!    scale-out analysis quantifies.
+//!    every cluster's readiness.
 //! 4. **Compute** — every cluster runs its chunk to completion on the
-//!    serial reference engine. Chunks exchange *no* mid-kernel traffic
-//!    (all inter-cluster movement is confined to phases 1–2 and 5), so
-//!    run-to-completion and cycle-lockstep interleavings commute, and
+//!    serial reference engine. Chunks exchange *no* mid-kernel traffic,
+//!    so run-to-completion and cycle-lockstep interleavings commute, and
 //!    stepping the clusters **cluster-parallel on host threads**
 //!    ([`crate::parallel::scatter`]) is bit-identical to the serial
 //!    order — `rust/tests/system_equiv.rs` pins this at 1/2/4 threads.
 //! 5. **Merge** — each cluster's output band streams back to the memory
 //!    node over the shared bus (same arbiter), becoming eligible when
-//!    that cluster finishes. The merged image lives in the memory node
-//!    (a host-side buffer), *not* some designated cluster's L1: a split
-//!    cluster's L1 cannot hold the full-problem output, and the memory
-//!    node is what a host would read.
+//!    that cluster finishes.
 //!
-//! Everything here is deterministic by construction: fixed phase order,
-//! fixed arbitration order (ascending round-robin), fixed routes, and
-//! compute phases that share no state across clusters.
+//! **Pipelined engine** ([`run_system_sliced`], the default behind
+//! [`run_system`]) — the comm/compute-overlap optimization the paper's
+//! full-bandwidth main-memory link exists to enable. Each cluster's band
+//! is sub-sliced into `S` slices (GEMM: a 2-D `sr×sc` tile grid per
+//! [`gemm::slice_grid`]; FFT: frame sub-bands); slice `t+1`'s bus
+//! staging and halo delivery are double-buffered behind slice `t`'s
+//! compute, and a slice's merge streams back the moment its compute
+//! retires — no global barrier at `S > 1`. The five phase-episodes
+//! collapse into **one** availability-ordered streaming bus arbiter over
+//! all `2·parts·S` transfers (stage transfers first, then merge
+//! transfers, unit-major) with a single persistent round-robin pointer
+//! and the same ascending tie-breaks. At `S = 1` the schedule provably
+//! degenerates to the phase-serial timeline (same grants, same `T0`,
+//! same cycle counts — the module tests and `system_equiv.rs` pin this
+//! bit-for-bit), so `--slices 1` *is* the reference.
+//!
+//! Determinism at any `S` and any `host_threads`: functional state is
+//! fully staged per (cluster, slice) unit before compute (the links and
+//! bus carry timing and traffic accounting, never unique bytes), every
+//! unit's program depends only on its tile coordinates, and the GEMM
+//! K-loop phase is keyed on the *global* block index — so the merged
+//! memory-node image is byte-identical across engines, slicings, and
+//! host-thread counts.
 
 use std::sync::Mutex;
 
 use crate::cluster::{Cluster, RunStats};
 use crate::config::Scale;
+use crate::err;
 use crate::errors::{Error, Result};
 use crate::kernels::{allclose_verdict, chunk_range, fft, gemm, Staged};
 use crate::parallel::scatter;
@@ -48,7 +68,8 @@ use crate::topology::Topology;
 /// A kernel the system layer knows how to chunk across clusters. The
 /// single-cluster [`crate::kernels::Workload`] registry stays the source
 /// of truth for the *math*; this enum only names the kernels whose
-/// builders expose band staging (`build_band`).
+/// builders expose band staging (`build_band`) and slice staging
+/// (`build_tile` / `build_band_slice`).
 #[derive(Debug, Clone, Copy)]
 pub enum SystemKernel {
     Gemm(gemm::GemmParams),
@@ -76,7 +97,8 @@ pub fn resolve_kernel(kind: &str, scale: Scale) -> Result<SystemKernel> {
 /// reports, plus the merged memory-node image for differential tests.
 #[derive(Debug, Clone)]
 pub struct SystemRun {
-    /// `<kernel>@<topology>`, e.g. `gemm-256x256x256@quad`.
+    /// `<kernel>@<topology>`, e.g. `gemm-256x256x256@quad`; pipelined
+    /// runs append `~s<S>`.
     pub name: String,
     /// Aggregate stats: `cycles` is the full system timeline
     /// (staging + compute + merge), counters are sums over clusters,
@@ -88,7 +110,7 @@ pub struct SystemRun {
     pub output: Vec<f32>,
 }
 
-/// One shared-operand broadcast from cluster 0 to `dst`.
+/// One shared-operand broadcast from cluster 0 to `dst` (phase engine).
 struct Bcast {
     dst: usize,
     /// Words the links carry: the *unique* operand words (each cluster
@@ -108,8 +130,9 @@ enum Deliver {
     Replicate { src_base: u32, src_copies: usize, dst_base: u32, dst_copies: usize, n: usize },
 }
 
-/// The staged chunking plan: per-cluster builds, broadcast and merge
-/// descriptors, and the memory-node image size.
+/// The staged chunking plan of the phase-serial engine: per-cluster
+/// builds, broadcast and merge descriptors, and the memory-node image
+/// size.
 struct Plan {
     /// Kernel instance name (without the topology suffix).
     name: String,
@@ -129,6 +152,20 @@ fn ensure_chunks(total: usize, parts: usize, what: &str) -> Result<()> {
             return Err(Error::unsupported(format!(
                 "{what}: {total} bands cannot cover {parts} clusters (cluster {c}'s \
                  band would be empty); use fewer clusters or a bigger problem"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// [`ensure_chunks`]' sibling for the pipelined engine's sub-slicing:
+/// refuse slice counts that would leave a (cluster, slice) unit empty.
+fn ensure_slices(total: usize, slices: usize, what: &str) -> Result<()> {
+    for t in 0..slices {
+        if chunk_range(total, t, slices).is_empty() {
+            return Err(Error::unsupported(format!(
+                "{what}: {total} units cannot cover {slices} slices (slice {t} would \
+                 be empty); lower --slices or use a bigger problem"
             )));
         }
     }
@@ -222,6 +259,9 @@ struct BusOutcome {
     busy: u64,
     /// Words moved in this episode.
     words: u64,
+    /// The cycle of every grant, in grant order — what the overlap
+    /// accounting classifies as exposed or hidden.
+    grants: Vec<u64>,
 }
 
 /// The shared main-memory bus: source `c` becomes eligible at
@@ -234,6 +274,7 @@ fn bus_sim(avail: &[u64], words: &[u64], width: usize, latency: u64) -> BusOutco
     let mut rem = words.to_vec();
     let mut finish = avail.to_vec();
     let width = width.max(1) as u64;
+    let mut grants = Vec::new();
     let (mut busy, mut t, mut rr) = (0u64, 0u64, 0usize);
     while rem.iter().any(|&r| r > 0) {
         if !(0..n).any(|c| rem[c] > 0 && avail[c] <= t) {
@@ -247,22 +288,138 @@ fn bus_sim(avail: &[u64], words: &[u64], width: usize, latency: u64) -> BusOutco
             .unwrap();
         rem[pick] = rem[pick].saturating_sub(width);
         busy += 1;
+        grants.push(t);
         if rem[pick] == 0 {
             finish[pick] = t + 1 + latency;
         }
         rr = (pick + 1) % n;
         t += 1;
     }
-    BusOutcome { finish, busy, words: words.iter().sum() }
+    BusOutcome { finish, busy, words: words.iter().sum(), grants }
 }
 
-/// Run `kernel` chunked across the clusters of `topo`. See the module
-/// docs for the five phases; `host_threads > 1` steps the compute phase
-/// cluster-parallel (bit-identical). `max_cycles` bounds each cluster's
-/// compute chunk (typed `MaxCyclesExceeded`, prefixed with the cluster
-/// name). `checking` compares the merged memory image against the
-/// kernel's host reference.
+/// Classify bus grant cycles against the union of compute windows:
+/// a grant inside any `[start, end)` window is **hidden** behind
+/// compute, everything else is **exposed** wall-clock the timeline pays
+/// for. `exposed + hidden == grants.len()` by construction.
+fn split_hidden(grants: &[u64], windows: &[(u64, u64)]) -> (u64, u64) {
+    let mut iv: Vec<(u64, u64)> = windows.iter().copied().filter(|w| w.1 > w.0).collect();
+    iv.sort_unstable();
+    let mut merged: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for w in iv {
+        match merged.last_mut() {
+            Some(m) if w.0 <= m.1 => m.1 = m.1.max(w.1),
+            _ => merged.push(w),
+        }
+    }
+    let (mut exposed, mut hidden) = (0u64, 0u64);
+    for &g in grants {
+        let idx = merged.partition_point(|&(s, _)| s <= g);
+        if idx > 0 && g < merged[idx - 1].1 {
+            hidden += 1;
+        } else {
+            exposed += 1;
+        }
+    }
+    (exposed, hidden)
+}
+
+/// Aggregate per-unit compute stats over the system timeline: counters
+/// sum, `cycles` is the full timeline, AMAT is the request-weighted
+/// average over every unit.
+fn aggregate_stats(per: &[RunStats], t_end: u64, num_pes: usize) -> RunStats {
+    let mut agg = per[0].clone();
+    agg.cycles = t_end;
+    agg.num_pes = num_pes;
+    let (mut w_total, mut w_class) = (0.0f64, [0.0f64; 4]);
+    let mut reqs_total = 0u64;
+    for (i, s) in per.iter().enumerate() {
+        if i > 0 {
+            agg.instructions += s.instructions;
+            agg.flops += s.flops;
+            agg.stall_raw += s.stall_raw;
+            agg.stall_lsu += s.stall_lsu;
+            agg.stall_ctrl += s.stall_ctrl;
+            agg.stall_synch += s.stall_synch;
+            agg.loads += s.loads;
+            agg.stores += s.stores;
+            agg.atomics += s.atomics;
+            for k in 0..4 {
+                agg.reqs_per_class[k] += s.reqs_per_class[k];
+                agg.burst_reqs_per_class[k] += s.burst_reqs_per_class[k];
+                agg.burst_words_per_class[k] += s.burst_words_per_class[k];
+            }
+        }
+        for k in 0..4 {
+            w_class[k] += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
+            w_total += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
+            reqs_total += s.reqs_per_class[k];
+        }
+    }
+    agg.amat = if reqs_total > 0 { w_total / reqs_total as f64 } else { 0.0 };
+    for k in 0..4 {
+        agg.amat_per_class[k] = if agg.reqs_per_class[k] > 0 {
+            w_class[k] / agg.reqs_per_class[k] as f64
+        } else {
+            0.0
+        };
+    }
+    agg
+}
+
+/// Check the merged memory image against the kernel's host reference.
+fn system_verdict(kernel: &SystemKernel, output: &[f32], checking: bool) -> Verdict {
+    if !checking {
+        return Verdict::NotChecked;
+    }
+    match kernel {
+        SystemKernel::Gemm(p) => {
+            allclose_verdict(output, &gemm::reference(p), 2e-2, "system gemm vs host reference")
+        }
+        SystemKernel::Fft(p) => {
+            if p.batch * p.n * p.n > (1 << 29) {
+                // The O(n²) host DFT is intractable at this size.
+                Verdict::NotChecked
+            } else {
+                let (re, im) = fft::reference(p);
+                let bn = p.batch * p.n;
+                match allclose_verdict(&output[..bn], &re, 5e-2, "system fft re-plane vs host DFT") {
+                    Verdict::Passed { .. } => allclose_verdict(
+                        &output[bn..],
+                        &im,
+                        5e-2,
+                        "system fft re+im planes vs host DFT",
+                    ),
+                    failed => failed,
+                }
+            }
+        }
+    }
+}
+
+/// Run `kernel` chunked across the clusters of `topo` on the pipelined
+/// engine at `S = 1` — the phase-serial timeline, reproduced bit-for-bit
+/// (`run_system_phases` stays available as the independent differential
+/// reference). `host_threads > 1` steps compute cluster-parallel
+/// (bit-identical). `max_cycles` bounds each unit's compute chunk (typed
+/// `MaxCyclesExceeded`, prefixed with the cluster name). `checking`
+/// compares the merged memory image against the kernel's host reference.
 pub fn run_system(
+    topo: &Topology,
+    kernel: &SystemKernel,
+    host_threads: usize,
+    max_cycles: u64,
+    fast_forward: bool,
+    checking: bool,
+) -> Result<SystemRun> {
+    run_system_sliced(topo, kernel, host_threads, max_cycles, fast_forward, checking, 1)
+}
+
+/// The phase-serial reference engine — the five-phase timeline of the
+/// module docs, kept verbatim as the differential oracle the pipelined
+/// engine is pinned against (`rust/tests/system_equiv.rs` and the module
+/// tests compare images, cycles, and full `SystemInfo`).
+pub fn run_system_phases(
     topo: &Topology,
     kernel: &SystemKernel,
     host_threads: usize,
@@ -385,43 +542,15 @@ pub fn run_system(
         }
     }
 
-    // Aggregate stats over the system timeline.
-    let mut agg = per[0].clone();
-    agg.cycles = t_end;
-    agg.num_pes = topo.total_pes();
-    let (mut w_total, mut w_class) = (0.0f64, [0.0f64; 4]);
-    let mut reqs_total = 0u64;
-    for (i, s) in per.iter().enumerate() {
-        if i > 0 {
-            agg.instructions += s.instructions;
-            agg.flops += s.flops;
-            agg.stall_raw += s.stall_raw;
-            agg.stall_lsu += s.stall_lsu;
-            agg.stall_ctrl += s.stall_ctrl;
-            agg.stall_synch += s.stall_synch;
-            agg.loads += s.loads;
-            agg.stores += s.stores;
-            agg.atomics += s.atomics;
-            for k in 0..4 {
-                agg.reqs_per_class[k] += s.reqs_per_class[k];
-                agg.burst_reqs_per_class[k] += s.burst_reqs_per_class[k];
-                agg.burst_words_per_class[k] += s.burst_words_per_class[k];
-            }
-        }
-        for k in 0..4 {
-            w_class[k] += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
-            w_total += s.amat_per_class[k] * s.reqs_per_class[k] as f64;
-            reqs_total += s.reqs_per_class[k];
-        }
-    }
-    agg.amat = if reqs_total > 0 { w_total / reqs_total as f64 } else { 0.0 };
-    for k in 0..4 {
-        agg.amat_per_class[k] = if agg.reqs_per_class[k] > 0 {
-            w_class[k] / agg.reqs_per_class[k] as f64
-        } else {
-            0.0
-        };
-    }
+    let agg = aggregate_stats(&per, t_end, topo.total_pes());
+
+    // Overlap accounting for the phase timeline: compute windows are
+    // one per cluster, `[t0, compute_done)`; stage grants all precede
+    // `t0`, merge grants can hide behind still-running clusters.
+    let windows: Vec<(u64, u64)> = (0..parts).map(|c| (t0, compute_done[c])).collect();
+    let mut grants = stage_bus.grants.clone();
+    grants.extend_from_slice(&merge_bus.grants);
+    let (exposed, hidden) = split_hidden(&grants, &windows);
 
     let info = SystemInfo {
         topology: topo.name.clone(),
@@ -432,6 +561,7 @@ pub fn run_system(
                 cycles: per[c].cycles,
                 instructions: per[c].instructions,
                 flops: per[c].flops,
+                slice_windows: vec![(t0, compute_done[c])],
             })
             .collect(),
         links: (0..topo.links.len())
@@ -447,35 +577,12 @@ pub fn run_system(
         compute_cycles,
         merge_cycles: t_end.saturating_sub(t0 + compute_cycles),
         link_words: link_words.iter().sum(),
+        slices: 1,
+        exposed_bus_cycles: exposed,
+        hidden_bus_cycles: hidden,
     };
 
-    let verdict = if !checking {
-        Verdict::NotChecked
-    } else {
-        match kernel {
-            SystemKernel::Gemm(p) => {
-                allclose_verdict(&output, &gemm::reference(p), 2e-2, "system gemm vs host reference")
-            }
-            SystemKernel::Fft(p) => {
-                if p.batch * p.n * p.n > (1 << 29) {
-                    // The O(n²) host DFT is intractable at this size.
-                    Verdict::NotChecked
-                } else {
-                    let (re, im) = fft::reference(p);
-                    let bn = p.batch * p.n;
-                    match allclose_verdict(&output[..bn], &re, 5e-2, "system fft re-plane vs host DFT") {
-                        Verdict::Passed { .. } => allclose_verdict(
-                            &output[bn..],
-                            &im,
-                            5e-2,
-                            "system fft re+im planes vs host DFT",
-                        ),
-                        failed => failed,
-                    }
-                }
-            }
-        }
-    };
+    let verdict = system_verdict(kernel, &output, checking);
 
     Ok(SystemRun {
         name: format!("{}@{}", plan.name, topo.name),
@@ -484,6 +591,593 @@ pub fn run_system(
         verdict,
         output,
     })
+}
+
+// ---------------------------------------------------------------------
+// The pipelined engine.
+// ---------------------------------------------------------------------
+
+/// One strided copy from a unit's L1 into the memory-node image:
+/// `rows` runs of `row_words`, L1 rows `l1_pitch` apart, image rows
+/// `image_pitch` apart (GEMM C tiles are strided at the full-problem
+/// pitch `n`; FFT planes are one contiguous run).
+struct MergeSeg {
+    l1_base: u32,
+    image_off: usize,
+    rows: usize,
+    row_words: usize,
+    l1_pitch: usize,
+    image_pitch: usize,
+}
+
+/// Scheduling metadata of one (cluster, slice) unit. `stage_words` is
+/// the unit's shared-bus charge (operands charged elsewhere — a reused A
+/// row-slice, a broadcast B panel — charge 0 here); `extra_deps` are
+/// unit indices whose *stage finish* gates this unit's compute (the unit
+/// that streamed its A rows, the cluster-0 unit that streamed its B
+/// panel); `halo` is the broadcast slot whose arrival gates compute on
+/// non-root clusters.
+struct SliceMeta {
+    stage_words: u64,
+    extra_deps: Vec<usize>,
+    halo: Option<usize>,
+    segs: Vec<MergeSeg>,
+}
+
+/// One link broadcast of the pipelined plan: fires (in fixed global
+/// order) once unit `ready_dep`'s staging finishes, lands in arrival
+/// slot `slot`.
+struct SlicedBcast {
+    dst: usize,
+    words: u64,
+    ready_dep: usize,
+    slot: usize,
+}
+
+/// The sliced chunking plan: one `Staged` build per (cluster, slice)
+/// unit, unit-major (`unit = cluster * slices + slice`), with every
+/// operand staged functionally (links/bus carry only timing).
+struct SlicedPlan {
+    name: String,
+    slices: usize,
+    staged: Vec<Staged>,
+    units: Vec<SliceMeta>,
+    bcasts: Vec<SlicedBcast>,
+    n_slots: usize,
+    out_len: usize,
+}
+
+fn stage_sliced(topo: &Topology, kernel: &SystemKernel, slices: usize) -> Result<SlicedPlan> {
+    let parts = topo.clusters.len();
+    let s = slices;
+    Ok(match kernel {
+        SystemKernel::Gemm(p) => {
+            // 2-D tile grid: row-slices of the cluster's band × column
+            // panels of the whole problem. Column slicing is what lets
+            // the *shared* B staging pipeline too — panel j streams
+            // while panel j-1's tiles compute.
+            let (sr, sc) = gemm::slice_grid(s);
+            let name = format!("gemm-{}x{}x{}", p.m, p.n, p.k);
+            ensure_chunks(p.m / 4, parts, &name)?;
+            ensure_slices(p.n / 4, sc, &format!("{name} column panels"))?;
+            let mut staged = Vec::with_capacity(parts * s);
+            let mut units = Vec::with_capacity(parts * s);
+            let mut panel_cols = vec![0usize; sc];
+            for c in 0..parts {
+                let band = chunk_range(p.m / 4, c, parts);
+                ensure_slices(band.end - band.start, sr, &format!("{name} cluster {c} row band"))?;
+                for i in 0..sr {
+                    for j in 0..sc {
+                        let (st, tile) =
+                            gemm::build_tile(&topo.clusters[c].cfg, p, c, parts, i, sr, j, sc, true);
+                        panel_cols[j] = tile.cols;
+                        // Bus charges: the A row-slice streams once, at
+                        // the row's first tile; the B panel streams
+                        // once, at cluster 0's first row (other
+                        // clusters receive it over the links).
+                        let a_words = if j == 0 { (tile.rows * p.k) as u64 } else { 0 };
+                        let b_words = if c == 0 && i == 0 { (p.k * tile.cols) as u64 } else { 0 };
+                        let stage_words = a_words + b_words;
+                        let mut extra_deps = vec![c * s + i * sc];
+                        if c == 0 {
+                            extra_deps.push(j);
+                        }
+                        let halo = if c > 0 { Some((c - 1) * sc + j) } else { None };
+                        let segs = vec![MergeSeg {
+                            l1_base: tile.c_base,
+                            image_off: tile.row0 * p.n + tile.col0,
+                            rows: tile.rows,
+                            row_words: tile.cols,
+                            l1_pitch: tile.cols,
+                            image_pitch: p.n,
+                        }];
+                        staged.push(st);
+                        units.push(SliceMeta { stage_words, extra_deps, halo, segs });
+                    }
+                }
+            }
+            let mut bcasts = Vec::new();
+            for j in 0..sc {
+                for d in 1..parts {
+                    bcasts.push(SlicedBcast {
+                        dst: d,
+                        words: (p.k * panel_cols[j]) as u64,
+                        ready_dep: j,
+                        slot: (d - 1) * sc + j,
+                    });
+                }
+            }
+            SlicedPlan {
+                name,
+                slices: s,
+                staged,
+                units,
+                bcasts,
+                n_slots: parts.saturating_sub(1) * sc,
+                out_len: p.m * p.n,
+            }
+        }
+        SystemKernel::Fft(p) => {
+            // 1-D frame slicing: frames are independent transforms, so
+            // any frame partition computes bit-identical planes.
+            let name = format!("fft-{}x{}", p.batch, p.n);
+            ensure_chunks(p.batch, parts, &name)?;
+            let mut staged = Vec::with_capacity(parts * s);
+            let mut units = Vec::with_capacity(parts * s);
+            for c in 0..parts {
+                let band = chunk_range(p.batch, c, parts);
+                ensure_slices(band.end - band.start, s, &format!("{name} cluster {c} frame band"))?;
+                for t in 0..s {
+                    let (st, b) = fft::build_band_slice(&topo.clusters[c].cfg, p, c, parts, t, s, true);
+                    // The twiddle table streams once, with cluster 0's
+                    // first slice; everyone else gets it over the links
+                    // (the arrival gates all of that cluster's slices).
+                    let tw_charge = if c == 0 && t == 0 { (2 * b.tw_words) as u64 } else { 0 };
+                    let stage_words = (2 * b.frames * p.n) as u64 + tw_charge;
+                    let halo = if c > 0 { Some(c - 1) } else { None };
+                    let segs = vec![
+                        MergeSeg {
+                            l1_base: b.re_base,
+                            image_off: b.f0 * p.n,
+                            rows: 1,
+                            row_words: b.frames * p.n,
+                            l1_pitch: 0,
+                            image_pitch: 0,
+                        },
+                        MergeSeg {
+                            l1_base: b.im_base,
+                            image_off: (p.batch + b.f0) * p.n,
+                            rows: 1,
+                            row_words: b.frames * p.n,
+                            l1_pitch: 0,
+                            image_pitch: 0,
+                        },
+                    ];
+                    staged.push(st);
+                    units.push(SliceMeta { stage_words, extra_deps: Vec::new(), halo, segs });
+                }
+            }
+            let mut bcasts = Vec::new();
+            for d in 1..parts {
+                for _plane in 0..2 {
+                    bcasts.push(SlicedBcast { dst: d, words: p.n as u64, ready_dep: 0, slot: d - 1 });
+                }
+            }
+            SlicedPlan {
+                name,
+                slices: s,
+                staged,
+                units,
+                bcasts,
+                n_slots: parts.saturating_sub(1),
+                out_len: 2 * p.batch * p.n,
+            }
+        }
+    })
+}
+
+/// The streaming co-simulation of the pipelined timeline. Transfer ids
+/// `0..n` are the units' stage transfers, `n..2n` their merge transfers
+/// (both unit-major); one persistent round-robin pointer arbitrates the
+/// shared bus over all of them, and every grant completion triggers a
+/// fixpoint [`Pipeline::resolve`] pass that advances broadcasts, compute
+/// schedules, and newly-known availability times. At `S = 1` the
+/// schedule degenerates to the phase-serial episodes exactly: merge
+/// transfers only become available after the global barrier, past every
+/// stage grant, so the single pointer scans them in the same ascending
+/// order a fresh episode would.
+struct Pipeline {
+    /// Unit count (`parts * slices`).
+    n: usize,
+    s: usize,
+    width: u64,
+    latency: u64,
+    /// Remaining words per transfer id (stage ids then merge ids).
+    rem: Vec<u64>,
+    /// Availability per transfer id; `None` = not yet known.
+    avail: Vec<Option<u64>>,
+    /// Cycle the transfer's last word lands (grant + access latency);
+    /// zero-word transfers finish at their availability.
+    finish: Vec<Option<u64>>,
+    /// Per-unit compute cycle counts (from the functional runs).
+    cycles: Vec<u64>,
+    compute_start: Vec<Option<u64>>,
+    compute_end: Vec<Option<u64>>,
+    /// Next unscheduled slice per cluster (`S > 1` scheduling).
+    next_slice: Vec<usize>,
+    /// Per-slot broadcast arrival (set once every bcast of the slot
+    /// fired).
+    arrivals: Vec<Option<u64>>,
+    slot_hi: Vec<u64>,
+    slot_pending: Vec<usize>,
+    /// Next broadcast to fire — broadcasts fire in fixed global order.
+    next_bcast: usize,
+    /// BFS route per broadcast, resolved up front.
+    routes: Vec<Vec<usize>>,
+    link_words: Vec<u64>,
+    link_busy: Vec<u64>,
+    link_free: Vec<u64>,
+    /// The global start barrier (`S = 1` only).
+    t0: Option<u64>,
+    grants: Vec<u64>,
+    busy: u64,
+}
+
+impl Pipeline {
+    fn new(plan: &SlicedPlan, topo: &Topology, cycles: Vec<u64>) -> Result<Pipeline> {
+        let n = plan.units.len();
+        let s = plan.slices;
+        let mut rem = Vec::with_capacity(2 * n);
+        for m in &plan.units {
+            rem.push(m.stage_words);
+        }
+        for m in &plan.units {
+            rem.push(m.segs.iter().map(|g| (g.rows * g.row_words) as u64).sum());
+        }
+        let mut routes = Vec::with_capacity(plan.bcasts.len());
+        for b in &plan.bcasts {
+            routes.push(topo.route(0, b.dst)?);
+        }
+        let mut slot_pending = vec![0usize; plan.n_slots];
+        for b in &plan.bcasts {
+            slot_pending[b.slot] += 1;
+        }
+        let mut p = Pipeline {
+            n,
+            s,
+            width: topo.memory.width.max(1) as u64,
+            latency: topo.memory.latency,
+            rem,
+            avail: vec![None; 2 * n],
+            finish: vec![None; 2 * n],
+            cycles,
+            compute_start: vec![None; n],
+            compute_end: vec![None; n],
+            next_slice: vec![0; n / s],
+            arrivals: vec![None; plan.n_slots],
+            slot_hi: vec![0; plan.n_slots],
+            slot_pending,
+            next_bcast: 0,
+            routes,
+            link_words: vec![0; topo.links.len()],
+            link_busy: vec![0; topo.links.len()],
+            link_free: vec![0; topo.links.len()],
+            t0: None,
+            grants: Vec::new(),
+            busy: 0,
+        };
+        // Every cluster's first slice can start staging at cycle 0; the
+        // rest become available as the double-buffer frees up.
+        for c in 0..(n / s) {
+            p.set_avail(c * s, 0);
+        }
+        Ok(p)
+    }
+
+    /// Record a transfer's availability (first writer wins); zero-word
+    /// transfers finish the moment they become available, like the
+    /// episode arbiter's no-words sources.
+    fn set_avail(&mut self, x: usize, at: u64) {
+        if self.avail[x].is_some() {
+            return;
+        }
+        self.avail[x] = Some(at);
+        if self.rem[x] == 0 {
+            self.finish[x] = Some(at);
+        }
+    }
+
+    fn eligible(&self, x: usize, t: u64) -> bool {
+        self.rem[x] > 0 && matches!(self.avail[x], Some(a) if a <= t)
+    }
+
+    /// Earliest cycle unit `u`'s compute inputs are all resident:
+    /// its own stage finish, its dependency units' stage finishes, and
+    /// (non-root clusters) its halo broadcast arrival. `None` while any
+    /// of them is still unknown.
+    fn unit_ready(&self, plan: &SlicedPlan, u: usize) -> Option<u64> {
+        let mut r = self.finish[u]?;
+        for &d in &plan.units[u].extra_deps {
+            r = r.max(self.finish[d]?);
+        }
+        if let Some(slot) = plan.units[u].halo {
+            r = r.max(self.arrivals[slot]?);
+        }
+        Some(r)
+    }
+
+    /// Fixpoint propagation: fire broadcasts whose source staging
+    /// finished (fixed global order, FIFO links), schedule computes
+    /// whose inputs are resident, and release the availability of merge
+    /// transfers (at compute end) and next-slice stage transfers (at
+    /// compute start — the double-buffer handoff). Loops until nothing
+    /// new becomes known.
+    fn resolve(&mut self, plan: &SlicedPlan, topo: &Topology) {
+        loop {
+            let mut progressed = false;
+
+            // Broadcasts, in fixed global order.
+            while self.next_bcast < plan.bcasts.len() {
+                let b = &plan.bcasts[self.next_bcast];
+                let Some(dep) = self.finish[b.ready_dep] else { break };
+                let (slot, words) = (b.slot, b.words);
+                let mut ready = dep;
+                // Each broadcast fires exactly once; taking its route
+                // frees the borrow on `self` for the link bookkeeping.
+                let route = std::mem::take(&mut self.routes[self.next_bcast]);
+                for &li in &route {
+                    let l = &topo.links[li];
+                    let occ = words.div_ceil(l.width as u64).max(1);
+                    let start = ready.max(self.link_free[li]);
+                    self.link_free[li] = start + occ;
+                    ready = start + occ + l.latency;
+                    self.link_words[li] += words;
+                    self.link_busy[li] += occ;
+                }
+                self.slot_hi[slot] = self.slot_hi[slot].max(ready);
+                self.slot_pending[slot] -= 1;
+                if self.slot_pending[slot] == 0 {
+                    self.arrivals[slot] = Some(self.slot_hi[slot]);
+                }
+                self.next_bcast += 1;
+                progressed = true;
+            }
+
+            if self.s == 1 {
+                // Exact phase-serial degeneracy: a global start barrier
+                // at the max over every unit's readiness.
+                if self.t0.is_none() {
+                    let mut all = Some(0u64);
+                    for u in 0..self.n {
+                        match self.unit_ready(plan, u) {
+                            Some(r) => all = all.map(|m| m.max(r)),
+                            None => {
+                                all = None;
+                                break;
+                            }
+                        }
+                    }
+                    if let Some(t0) = all {
+                        self.t0 = Some(t0);
+                        for u in 0..self.n {
+                            let end = t0 + self.cycles[u];
+                            self.compute_start[u] = Some(t0);
+                            self.compute_end[u] = Some(end);
+                            self.set_avail(self.n + u, end);
+                        }
+                        progressed = true;
+                    }
+                }
+            } else {
+                // Pipelined: each cluster runs its slices back-to-back;
+                // a slice starts at max(inputs resident, previous slice
+                // done) — no cross-cluster barrier.
+                for c in 0..(self.n / self.s) {
+                    while self.next_slice[c] < self.s {
+                        let t = self.next_slice[c];
+                        let u = c * self.s + t;
+                        let Some(mut start) = self.unit_ready(plan, u) else { break };
+                        if t > 0 {
+                            start = start.max(self.compute_end[u - 1].unwrap());
+                        }
+                        let end = start + self.cycles[u];
+                        self.compute_start[u] = Some(start);
+                        self.compute_end[u] = Some(end);
+                        self.set_avail(self.n + u, end);
+                        if t + 1 < self.s {
+                            self.set_avail(u + 1, start);
+                        }
+                        self.next_slice[c] = t + 1;
+                        progressed = true;
+                    }
+                }
+            }
+
+            if !progressed {
+                return;
+            }
+        }
+    }
+
+    /// Drive the shared bus over the whole timeline: one grant of
+    /// `width` words per cycle to the first eligible transfer scanning
+    /// round-robin from the persistent pointer; idle-jump to the
+    /// earliest known availability when nothing is eligible. Every
+    /// completed transfer re-resolves the schedule, which can make more
+    /// transfers available.
+    fn solve(&mut self, plan: &SlicedPlan, topo: &Topology) -> Result<()> {
+        let n2 = 2 * self.n;
+        self.resolve(plan, topo);
+        let (mut t, mut rr) = (0u64, 0usize);
+        while (0..n2).any(|x| self.rem[x] > 0) {
+            if !(0..n2).any(|x| self.eligible(x, t)) {
+                let next = (0..n2)
+                    .filter(|&x| self.rem[x] > 0)
+                    .filter_map(|x| self.avail[x])
+                    .min();
+                let Some(next) = next else {
+                    // Provably unreachable: every cluster's slice-0
+                    // stage is available at cycle 0 and the dependency
+                    // DAG is grounded there — kept as a typed guard so
+                    // a scheduling bug cannot become a hang.
+                    return Err(err!(
+                        "system pipeline solver stalled: no pending transfer has a \
+                         known availability (internal scheduling bug)"
+                    ));
+                };
+                debug_assert!(next > t);
+                t = next;
+                continue;
+            }
+            let pick = (0..n2)
+                .map(|i| (rr + i) % n2)
+                .find(|&x| self.eligible(x, t))
+                .unwrap();
+            self.rem[pick] = self.rem[pick].saturating_sub(self.width);
+            self.busy += 1;
+            self.grants.push(t);
+            rr = (pick + 1) % n2;
+            if self.rem[pick] == 0 {
+                self.finish[pick] = Some(t + 1 + self.latency);
+                self.resolve(plan, topo);
+            }
+            t += 1;
+        }
+        self.resolve(plan, topo);
+        Ok(())
+    }
+}
+
+/// Run `kernel` chunked across the clusters of `topo` on the pipelined
+/// engine with `slices` sub-slices per cluster band. `slices = 1`
+/// reproduces the phase-serial timeline bit-for-bit; `slices > 1`
+/// double-buffers staging and streams merges behind compute. The merged
+/// memory image is byte-identical at any `slices` and any
+/// `host_threads`.
+pub fn run_system_sliced(
+    topo: &Topology,
+    kernel: &SystemKernel,
+    host_threads: usize,
+    max_cycles: u64,
+    fast_forward: bool,
+    checking: bool,
+    slices: usize,
+) -> Result<SystemRun> {
+    let s = slices.max(1);
+    let parts = topo.clusters.len();
+    let mut plan = stage_sliced(topo, kernel, s)?;
+    let n = parts * s;
+
+    // Functional compute first: every unit is fully staged (the plan's
+    // timing metadata is solved afterwards), so the units are
+    // independent and scatter across host threads bit-identically.
+    let staged_list = std::mem::take(&mut plan.staged);
+    let mut cells: Vec<Mutex<Cluster>> = Vec::with_capacity(n);
+    for (u, staged) in staged_list.into_iter().enumerate() {
+        assert!(staged.dma.is_none(), "system runs are L1-resident (no HBML plan)");
+        let (mut cl, _io) = staged.into_cluster(topo.clusters[u / s].cfg.clone());
+        cl.fast_forward = fast_forward;
+        cells.push(Mutex::new(cl));
+    }
+    let results: Vec<Result<RunStats>> = scatter(n, host_threads, |u| {
+        let mut cl = cells[u].lock().unwrap();
+        cl.try_run_threads(max_cycles, 1)
+            .map_err(|e| e.prefixed(&topo.clusters[u / s].name))
+    });
+    let mut per: Vec<RunStats> = Vec::with_capacity(n);
+    for r in results {
+        per.push(r?);
+    }
+    let clusters: Vec<Cluster> = cells
+        .into_iter()
+        .map(|m| m.into_inner().unwrap())
+        .collect();
+
+    // Timeline co-simulation.
+    let cycles: Vec<u64> = per.iter().map(|st| st.cycles).collect();
+    let mut pipe = Pipeline::new(&plan, topo, cycles)?;
+    pipe.solve(&plan, topo)?;
+    for u in 0..n {
+        if pipe.compute_end[u].is_none() || pipe.finish[n + u].is_none() {
+            return Err(err!(
+                "system pipeline left unit {u} unscheduled (internal scheduling bug)"
+            ));
+        }
+    }
+    let t_end = (0..n)
+        .map(|u| pipe.finish[n + u].unwrap().max(pipe.compute_end[u].unwrap()))
+        .max()
+        .unwrap_or(0);
+    let windows: Vec<(u64, u64)> = (0..n)
+        .map(|u| (pipe.compute_start[u].unwrap(), pipe.compute_end[u].unwrap()))
+        .collect();
+    let (exposed, hidden) = split_hidden(&pipe.grants, &windows);
+    let first_start = windows.iter().map(|w| w.0).min().unwrap_or(0);
+    let last_end = windows.iter().map(|w| w.1).max().unwrap_or(0);
+
+    // Merge the units' outputs into the memory-node image.
+    let mut output = vec![0.0f32; plan.out_len];
+    for (u, meta) in plan.units.iter().enumerate() {
+        for seg in &meta.segs {
+            for r in 0..seg.rows {
+                let data = clusters[u]
+                    .l1
+                    .read_slice(seg.l1_base + (r * seg.l1_pitch) as u32, seg.row_words);
+                let off = seg.image_off + r * seg.image_pitch;
+                output[off..off + seg.row_words].copy_from_slice(&data);
+            }
+        }
+    }
+
+    let bus_words: u64 = plan
+        .units
+        .iter()
+        .map(|m| {
+            m.stage_words
+                + m.segs.iter().map(|g| (g.rows * g.row_words) as u64).sum::<u64>()
+        })
+        .sum();
+
+    let agg = aggregate_stats(&per, t_end, topo.total_pes());
+
+    let info = SystemInfo {
+        topology: topo.name.clone(),
+        clusters: (0..parts)
+            .map(|c| SystemClusterInfo {
+                name: topo.clusters[c].name.clone(),
+                num_pes: per[c * s].num_pes,
+                cycles: (c * s..(c + 1) * s).map(|u| per[u].cycles).sum(),
+                instructions: (c * s..(c + 1) * s).map(|u| per[u].instructions).sum(),
+                flops: (c * s..(c + 1) * s).map(|u| per[u].flops).sum(),
+                slice_windows: windows[c * s..(c + 1) * s].to_vec(),
+            })
+            .collect(),
+        links: (0..topo.links.len())
+            .map(|i| SystemLinkInfo {
+                name: topo.link_name(i),
+                words: pipe.link_words[i],
+                busy_cycles: pipe.link_busy[i],
+            })
+            .collect(),
+        bus_words,
+        bus_busy_cycles: pipe.busy,
+        stage_cycles: first_start,
+        compute_cycles: last_end.saturating_sub(first_start),
+        merge_cycles: t_end.saturating_sub(last_end),
+        link_words: pipe.link_words.iter().sum(),
+        slices: s as u64,
+        exposed_bus_cycles: exposed,
+        hidden_bus_cycles: hidden,
+    };
+
+    let verdict = system_verdict(kernel, &output, checking);
+
+    let name = if s == 1 {
+        format!("{}@{}", plan.name, topo.name)
+    } else {
+        format!("{}@{}~s{}", plan.name, topo.name, s)
+    };
+    Ok(SystemRun { name, stats: agg, info, verdict, output })
 }
 
 #[cfg(test)]
@@ -515,6 +1209,11 @@ mod tests {
         // Bus traffic = staged inputs + merged outputs: two A bands
         // (128 words each) + B (256) + two C bands (128 each).
         assert_eq!(run.info.bus_words, 128 + 256 + 128 + 128 + 128);
+        // Every bus grant is classified.
+        assert_eq!(
+            run.info.exposed_bus_cycles + run.info.hidden_bus_cycles,
+            run.info.bus_busy_cycles
+        );
     }
 
     #[test]
@@ -544,6 +1243,69 @@ mod tests {
         assert_eq!(run.info.clusters[0].cycles, stats.cycles);
         assert_eq!(run.info.clusters[0].instructions, stats.instructions);
         assert_eq!(run.info.link_words, 0);
+    }
+
+    #[test]
+    fn sliced_s1_matches_the_phase_serial_engine_exactly() {
+        // The tentpole invariant: at S = 1 the pipelined engine IS the
+        // phase-serial timeline — same name, cycles, full SystemInfo,
+        // and memory image. (system_equiv.rs extends this across
+        // kernels, cluster counts, and host threads.)
+        let topo = Topology::split(&ClusterConfig::tiny(), 2).unwrap();
+        let k = SystemKernel::Gemm(gemm::GemmParams { m: 16, n: 16, k: 16 });
+        let phases = run_system_phases(&topo, &k, 1, BUDGET, true, true).unwrap();
+        let piped = run_system_sliced(&topo, &k, 1, BUDGET, true, true, 1).unwrap();
+        assert_eq!(phases.name, piped.name);
+        assert_eq!(phases.stats.cycles, piped.stats.cycles);
+        assert_eq!(phases.info, piped.info);
+        assert_eq!(phases.output, piped.output);
+    }
+
+    #[test]
+    fn sliced_gemm_pipelines_and_matches_the_serial_image() {
+        let topo = Topology::split(&ClusterConfig::tiny(), 2).unwrap();
+        let k = SystemKernel::Gemm(gemm::GemmParams { m: 16, n: 16, k: 16 });
+        let serial = run_system_phases(&topo, &k, 1, BUDGET, true, false).unwrap();
+        let piped = run_system_sliced(&topo, &k, 1, BUDGET, true, false, 2).unwrap();
+        assert_eq!(piped.info.slices, 2);
+        assert!(piped.name.ends_with("~s2"), "{}", piped.name);
+        // The memory image is byte-identical at any slicing.
+        assert_eq!(serial.output, piped.output);
+        // Total staged+merged traffic is slicing-invariant.
+        assert_eq!(serial.info.bus_words, piped.info.bus_words);
+        // Every bus grant is classified, and with slicing some of the
+        // traffic hides behind compute.
+        assert_eq!(
+            piped.info.exposed_bus_cycles + piped.info.hidden_bus_cycles,
+            piped.info.bus_busy_cycles
+        );
+        assert!(piped.info.clusters.iter().all(|c| c.slice_windows.len() == 2));
+    }
+
+    #[test]
+    fn sliced_fft_matches_the_serial_image() {
+        let topo = Topology::split(&ClusterConfig::tiny(), 2).unwrap();
+        let k = SystemKernel::Fft(fft::FftParams { batch: 4, n: 64 });
+        let serial = run_system_phases(&topo, &k, 1, BUDGET, true, false).unwrap();
+        let piped = run_system_sliced(&topo, &k, 1, BUDGET, true, false, 2).unwrap();
+        assert_eq!(serial.output, piped.output);
+        assert_eq!(serial.info.bus_words, piped.info.bus_words);
+    }
+
+    #[test]
+    fn empty_slices_are_refused_typed() {
+        let topo = Topology::split(&ClusterConfig::tiny(), 2).unwrap();
+        // gemm 16³ at 9 slices wants a 3×3 grid — neither 4 column
+        // panels over div_ceil chunks nor a 2-block-row band can cover
+        // 3 slices.
+        let k = SystemKernel::Gemm(gemm::GemmParams { m: 16, n: 16, k: 16 });
+        let e = run_system_sliced(&topo, &k, 1, BUDGET, true, false, 9).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Unsupported);
+        // fft batch 4 on 2 clusters: a 2-frame band cannot cover 3
+        // slices.
+        let k = SystemKernel::Fft(fft::FftParams { batch: 4, n: 64 });
+        let e = run_system_sliced(&topo, &k, 1, BUDGET, true, false, 3).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Unsupported);
     }
 
     #[test]

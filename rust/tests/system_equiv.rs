@@ -11,7 +11,7 @@
 use terapool::config::ClusterConfig;
 use terapool::kernels::{fft::FftParams, gemm::GemmParams};
 use terapool::report::Verdict;
-use terapool::system::{run_system, SystemKernel, SystemRun};
+use terapool::system::{run_system, run_system_phases, run_system_sliced, SystemKernel, SystemRun};
 use terapool::topology::Topology;
 
 const BUDGET: u64 = 10_000_000;
@@ -71,6 +71,97 @@ fn system_fast_forward_is_bit_identical() {
     assert_eq!(skipped.stats, stepped.stats);
     assert_eq!(skipped.info, stepped.info);
     assert_eq!(skipped.output, stepped.output);
+}
+
+/// The pipelined engine reorders *timing* (staging and merge stream on
+/// the shared bus while earlier slices compute) but must never reorder
+/// *data*: the merged memory-node image has to stay byte-identical to
+/// the phase-serial reference at every slice count and host-thread
+/// count. Functional state is staged per slice straight from the host
+/// arrays, so any divergence here is a slicing bug (wrong tile bounds,
+/// wrong K-phase, wrong merge stride), not a scheduling artifact.
+#[test]
+fn pipelined_image_matches_the_phase_serial_reference() {
+    let cases: &[(SystemKernel, usize, &[usize])] = &[
+        (SystemKernel::Gemm(GemmParams { m: 32, n: 16, k: 16 }), 4, &[2, 4]),
+        (SystemKernel::Gemm(GemmParams { m: 16, n: 16, k: 16 }), 2, &[2, 4]),
+        (SystemKernel::Fft(FftParams { batch: 8, n: 64 }), 4, &[2]),
+        (SystemKernel::Fft(FftParams { batch: 8, n: 64 }), 2, &[2, 4]),
+    ];
+    for (kernel, parts, slice_counts) in cases {
+        let topo = Topology::split(&ClusterConfig::tiny(), *parts).expect("tiny splits");
+        let reference =
+            run_system_phases(&topo, kernel, 1, BUDGET, true, true).expect("reference runs");
+        for &slices in *slice_counts {
+            for threads in [1usize, 2, 4] {
+                let sliced = run_system_sliced(&topo, kernel, threads, BUDGET, true, true, slices)
+                    .expect("sliced run finishes");
+                assert_eq!(
+                    reference.output, sliced.output,
+                    "{}: merged image diverges at S={slices}, {threads} host threads",
+                    reference.name
+                );
+                assert_eq!(reference.verdict, sliced.verdict);
+                assert_eq!(sliced.info.slices, slices as u64, "{}", sliced.name);
+                assert_eq!(
+                    sliced.info.exposed_bus_cycles + sliced.info.hidden_bus_cycles,
+                    sliced.info.bus_busy_cycles,
+                    "{}: bus-cycle split must partition busy cycles",
+                    sliced.name
+                );
+            }
+        }
+    }
+}
+
+/// `--slices 1` is not "approximately" the old engine — it must
+/// reproduce the phase-serial timeline exactly: same cycle count, same
+/// `SystemInfo` breakdown, same image, at every host-thread count.
+#[test]
+fn single_slice_run_is_exactly_the_phase_serial_engine() {
+    let cases: &[(SystemKernel, usize)] = &[
+        (SystemKernel::Gemm(GemmParams { m: 32, n: 16, k: 16 }), 4),
+        (SystemKernel::Fft(FftParams { batch: 8, n: 64 }), 4),
+        (SystemKernel::Gemm(GemmParams { m: 16, n: 16, k: 16 }), 2),
+    ];
+    for (kernel, parts) in cases {
+        let topo = Topology::split(&ClusterConfig::tiny(), *parts).expect("tiny splits");
+        let phases = run_system_phases(&topo, kernel, 1, BUDGET, true, true).unwrap();
+        for threads in [1usize, 2, 4] {
+            let sliced = run_system_sliced(&topo, kernel, threads, BUDGET, true, true, 1).unwrap();
+            assert_eq!(phases.name, sliced.name);
+            assert_eq!(phases.stats, sliced.stats, "{}", phases.name);
+            assert_eq!(phases.info, sliced.info, "{}", phases.name);
+            assert_eq!(phases.output, sliced.output, "{}", phases.name);
+        }
+    }
+}
+
+/// The point of the pipeline: on the shipped quad mesh the 4-way sliced
+/// GEMM must finish in fewer cycles than the serial reference while
+/// producing the same bytes — overlap buys time, never correctness.
+#[test]
+fn quad_mesh_gemm_pipelining_saves_cycles_and_keeps_the_image() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples");
+    let topo = Topology::load(&dir.join("quad.topo")).expect("quad.topo parses");
+    let kernel = SystemKernel::Gemm(GemmParams { m: 32, n: 32, k: 32 });
+    let serial = run_system_sliced(&topo, &kernel, 4, BUDGET, true, true, 1).unwrap();
+    let sliced = run_system_sliced(&topo, &kernel, 4, BUDGET, true, true, 4).unwrap();
+    assert_eq!(serial.output, sliced.output, "image must survive 4-way slicing");
+    assert!(
+        sliced.stats.cycles < serial.stats.cycles,
+        "S=4 must beat S=1: {} vs {}",
+        sliced.stats.cycles,
+        serial.stats.cycles
+    );
+    assert_eq!(
+        sliced.info.exposed_bus_cycles + sliced.info.hidden_bus_cycles,
+        sliced.info.bus_busy_cycles
+    );
+    assert!(
+        sliced.info.hidden_bus_cycles > 0,
+        "4-way slicing on the quad mesh must hide some bus traffic"
+    );
 }
 
 /// The example topology files shipped for the CLI must parse and carry

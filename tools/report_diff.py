@@ -52,6 +52,19 @@ EXACT_FIELDS = [
     "stats.burst_words_per_class[3]",
 ]
 
+# Optional exact fields: present only on reports that carry the
+# matching sub-document (e.g. ``system.*`` overlap counters from
+# `terapool system`). Compared bit-exactly when BOTH sides have them,
+# silently skipped when either side predates the field — old baselines
+# must keep diffing cleanly against new reports.
+OPTIONAL_EXACT_FIELDS = [
+    "system.slices",
+    "system.exposed_bus_cycles",
+    "system.hidden_bus_cycles",
+    "system.bus_words",
+    "system.bus_busy_cycles",
+]
+
 # Timing-derived fields: tolerate --rtol relative drift (config changes,
 # model recalibrations, paper-vs-measured comparisons).
 TOLERANT_FIELDS = [
@@ -170,6 +183,13 @@ def main() -> int:
         rows = []
         for field in EXACT_FIELDS:
             rel, ok = drift(lookup(old_r, field), lookup(new_r, field), 0.0, 0.0)
+            if not ok:
+                rows.append((field, rel, "EXACT-DRIFT"))
+        for field in OPTIONAL_EXACT_FIELDS:
+            a, b = lookup(old_r, field), lookup(new_r, field)
+            if a is None or b is None:
+                continue  # field absent on one side: older schema, not drift
+            rel, ok = drift(a, b, 0.0, 0.0)
             if not ok:
                 rows.append((field, rel, "EXACT-DRIFT"))
         for field in TOLERANT_FIELDS:
